@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Benches import from src/repro without installation.
+_src = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+if _src not in sys.path:
+    sys.path.insert(0, _src)

@@ -1,0 +1,33 @@
+"""Appendix A (clipping mechanism) + Appendix C (first-moment efficacy)
+ablations, using the same scaled training harness as bench_training.
+
+Claims under test:
+  * App A: Adapprox WITH clipping reaches lower loss than without;
+  * App C: first moment on beats off for AdamW / Adafactor / Adapprox;
+    AdamW without the first moment is the least stable.
+"""
+from __future__ import annotations
+
+from benchmarks.bench_training import train_curve
+
+
+def run() -> list[str]:
+    rows = ["ablation,optimizer,variant,step,val_loss"]
+    # Appendix A: clipping on/off
+    for variant, label in [("", "clip_on"), ("no_clip", "clip_off")]:
+        for t, vl in train_curve("adapprox", variant, steps=200):
+            rows.append(f"appendixA,adapprox,{label},{t},{vl:.4f}")
+    # Appendix C: first moment on/off
+    for opt in ("adamw", "adafactor", "adapprox"):
+        for variant, label in [("", "m1_on"), ("no_m1", "m1_off")]:
+            for t, vl in train_curve(opt, variant, steps=200):
+                rows.append(f"appendixC,{opt},{label},{t},{vl:.4f}")
+    # cosine-similarity guidance (Sec 3.5, optional feature)
+    for variant, label in [("", "guidance_off"), ("guidance", "guidance_on")]:
+        for t, vl in train_curve("adapprox", variant, steps=200):
+            rows.append(f"guidance,adapprox,{label},{t},{vl:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

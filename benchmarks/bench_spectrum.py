@@ -1,0 +1,65 @@
+"""Figure 1 reproduction: singular-value distribution of real second-moment
+matrices harvested from an actual AdamW training run (scaled: tiny GPT on
+CPU instead of GPT-2 345M at iteration 45k).
+
+Claim under test: V's spectrum is dominated by a few singular values —
+the premise that makes low-rank approximation of the second moment viable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import apply_updates, make_optimizer
+from repro.data import DataConfig, make_source
+from repro.models import build_model
+
+STEPS = 120
+TOP = 16
+
+
+def run() -> list[str]:
+    cfg = get_smoke_config("gpt2-117m", vocab=256, d_model=128, n_layers=2,
+                           n_heads=4, n_kv_heads=4, d_ff=256,
+                           max_seq_len=64)
+    model = build_model(cfg)
+    opt = make_optimizer("adamw", lr=3e-3)
+    params = model.init(jax.random.PRNGKey(0))
+    state = opt.init(params)
+    src = make_source(DataConfig(vocab=256, seq_len=64, global_batch=8,
+                                 seed=0))
+
+    @jax.jit
+    def step(p, s, b):
+        (loss, _), g = jax.value_and_grad(model.loss, has_aux=True)(p, b)
+        upd, s = opt.update(g, s, p)
+        return apply_updates(p, upd), s
+
+    for t in range(STEPS):
+        batch = {"tokens": jnp.asarray(src.batch_at(t)["tokens"])}
+        params, state = step(params, state, batch)
+
+    rows = [f"fig1_matrix,rank_index,singular_value,energy_captured_pct"]
+    flat_v, _ = jax.tree.flatten(state.v)
+    flat_p, _ = jax.tree.flatten(params)
+    picked = 0
+    for v, p in zip(flat_v, flat_p):
+        if v.ndim < 2 or min(v.shape[-2:]) < 64:
+            continue
+        mat = v.reshape((-1,) + v.shape[-2:])[0]
+        sv = np.asarray(jnp.linalg.svd(mat, compute_uv=False))
+        total = (sv ** 2).sum()
+        cum = np.cumsum(sv ** 2) / total * 100
+        name = f"m{picked}_{mat.shape[0]}x{mat.shape[1]}"
+        for i in range(min(TOP, len(sv))):
+            rows.append(f"{name},{i + 1},{sv[i]:.3e},{cum[i]:.1f}")
+        picked += 1
+        if picked >= 6:          # six panels, like the paper's figure
+            break
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

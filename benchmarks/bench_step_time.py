@@ -1,0 +1,65 @@
+"""Optimizer step wall-time comparison (CPU, jitted): per-step cost of the
+update itself — AdamW vs Adafactor vs CAME vs Adapprox (static / adaptive /
+implicit / kernel-interpret).  Complements Fig. 2's factorisation timing
+with end-to-end optimizer-step numbers on GPT-2-like param stacks."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import apply_updates, make_optimizer
+
+SHAPES = [(768, 768), (768, 3072), (3072, 768), (12, 768, 768)]
+
+
+def make_params():
+    key = jax.random.PRNGKey(0)
+    return {f"w{i}": jax.random.normal(jax.random.fold_in(key, i), s) * 0.02
+            for i, s in enumerate(SHAPES)}
+
+
+def time_opt(name: str, reps: int = 5, **kw) -> float:
+    params = make_params()
+    opt = make_optimizer(name, **kw)
+    state = opt.init(params)
+    grads = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(1), p.shape), params)
+
+    @jax.jit
+    def step(g, s, p):
+        upd, s = opt.update(g, s, p)
+        return apply_updates(p, upd), s
+
+    params2, state = step(grads, state, params)   # compile
+    jax.block_until_ready(params2)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        params2, state = step(grads, state, params2)
+    jax.block_until_ready(params2)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list[str]:
+    rows = ["steptime_optimizer,us_per_step"]
+    cases = [
+        ("adamw", {}),
+        ("adafactor", {"b1": 0.9}),
+        ("came", {}),
+        ("adapprox_k8", dict(k_init=8, mode="static")),
+        ("adapprox_k32", dict(k_init=32, mode="static")),
+        ("adapprox_adaptive", dict(k_init=1, k_max=64, mode="paper",
+                                   delta_s=10)),
+        ("adapprox_implicit", dict(k_init=32, mode="static",
+                                   implicit=True)),
+    ]
+    for name, kw in cases:
+        base = name.split("_")[0]
+        us = time_opt(base, **kw)
+        rows.append(f"{name},{us:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

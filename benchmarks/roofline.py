@@ -1,0 +1,88 @@
+"""Roofline analysis (deliverable g): three-term model per (arch x cell),
+derived from the dry-run's compiled artifacts.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_link_bytes_per_device / ICI_bw
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.  cost_analysis() reports per-device numbers; collective bytes come
+from the post-SPMD HLO parse in launch/dryrun.py.
+
+Also reported: MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) and the
+usefulness ratio MODEL_FLOPS / HLO_FLOPs (catches remat/redundant work),
+the dominant term, and the roofline fraction (dominant-term efficiency if
+perfectly overlapped: useful_time / dominant_time).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def model_flops(rec: dict) -> float:
+    """6*N*D forward+backward for train; 2*N*D forward for serving cells
+    (D = tokens processed in the step).  Decode processes B tokens."""
+    n_active = rec["active_params"]
+    if rec["kind"] == "train":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 6.0 * n_active * tokens
+    if rec["kind"] == "prefill":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 2.0 * n_active * tokens
+    tokens = rec["global_batch"]          # one token per sequence
+    return 2.0 * n_active * tokens
+
+
+def analyze(rec: dict) -> dict:
+    devices = rec["devices"]
+    t_compute = rec["flops"] / PEAK_FLOPS
+    t_memory = rec["bytes_accessed"] / HBM_BW
+    t_coll = rec["collective_bytes"] / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    useful_per_dev = mf / devices
+    t_useful = useful_per_dev / PEAK_FLOPS
+    t_total = max(terms.values())
+    return {
+        "arch": rec["arch"], "cell": rec["cell"], "mesh": rec["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf, "hlo_flops_per_dev": rec["flops"],
+        "useful_ratio": mf / (rec["flops"] * devices + 1e-30),
+        "roofline_fraction": t_useful / (t_total + 1e-30),
+        "peak_gib": (rec["memory"]["peak_bytes"] or 0) / 2**30,
+    }
+
+
+def load_records(mesh: str = "pod") -> list[dict]:
+    recs = []
+    for p in sorted(DRYRUN_DIR.glob(f"*__{mesh}.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def run(mesh: str = "pod") -> list[str]:
+    rows = ["roofline_arch,cell,compute_s,memory_s,collective_s,dominant,"
+            "useful_ratio,roofline_frac,peak_gib"]
+    for rec in load_records(mesh):
+        a = analyze(rec)
+        rows.append(
+            f"{a['arch']},{a['cell']},{a['t_compute_s']:.4f},"
+            f"{a['t_memory_s']:.4f},{a['t_collective_s']:.4f},"
+            f"{a['dominant']},{a['useful_ratio']:.3f},"
+            f"{a['roofline_fraction']:.3f},{a['peak_gib']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    print("\n".join(run(sys.argv[1] if len(sys.argv) > 1 else "pod")))

@@ -1,0 +1,9 @@
+"""Batched serving example: wave-scheduled prefill + decode on a reduced
+Qwen2 (GQA + QKV-bias) backbone.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.launch.serve import main as serve_main
+
+serve_main(["--arch", "qwen2-7b", "--smoke", "--requests", "5",
+            "--slots", "2", "--max-new", "12"])

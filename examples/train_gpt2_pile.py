@@ -1,0 +1,32 @@
+"""End-to-end training driver (paper setup, scaled): GPT-2-family model on
+a Pile-like token stream, Adapprox optimizer, fault-tolerant loop with
+atomic async checkpointing and restart-resume.
+
+CPU-scaled by default (~100M-param training runs on a real cluster with the
+same code; see src/repro/launch/train.py for the full-config path):
+
+    PYTHONPATH=src python examples/train_gpt2_pile.py [--full]
+"""
+import argparse
+import logging
+import tempfile
+
+from repro.launch.train import main as train_main
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--full", action="store_true",
+                help="full GPT-2 117M config (needs accelerators)")
+ap.add_argument("--steps", type=int, default=300)
+args = ap.parse_args()
+
+logging.basicConfig(level=logging.INFO)
+ckpt_dir = tempfile.mkdtemp(prefix="gpt2_adapprox_")
+argv = ["--arch", "gpt2-117m", "--steps", str(args.steps),
+        "--optimizer", "adapprox", "--ckpt-dir", ckpt_dir,
+        "--ckpt-every", "100", "--batch", "16", "--seq", "256"]
+if not args.full:
+    argv.append("--smoke")
+print(f"checkpoints -> {ckpt_dir}")
+train_main(argv)
+print("re-running to demonstrate restart-resume from the checkpoint:")
+train_main(argv)   # restores at the last checkpoint and finishes instantly

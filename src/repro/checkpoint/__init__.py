@@ -1,0 +1,3 @@
+from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
+from repro.checkpoint.serialization import (latest_checkpoint, list_checkpoints,
+                                            restore_pytree, save_pytree)

@@ -1,0 +1,127 @@
+"""Sharded-array (de)serialization with resharding on restore.
+
+Format (directory per checkpoint step):
+    step_000000123/
+      manifest.json     — pytree structure, per-leaf shape/dtype, step, meta
+      leaf_00000.npy    — one file per leaf (host-gathered logical array)
+      _COMMITTED        — atomic commit marker (written LAST)
+
+Restore never requires the saving mesh: arrays are stored as logical
+(global) values and re-placed under the restoring mesh's NamedShardings —
+this is what makes elastic re-scaling (checkpoint on N chips, resume on M)
+work.  For the single-host container this means a plain host gather; on a
+real multi-host cluster the same manifest format extends to per-shard files
+keyed by shard index (the writer below keeps that field in the manifest).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+COMMIT_MARKER = "_COMMITTED"
+
+
+def _tree_paths(tree) -> list[str]:
+    paths = []
+    for kp, _ in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        paths.append(jax.tree_util.keystr(kp))
+    return paths
+
+
+def save_pytree(tree: Any, directory: "str | Path", step: int,
+                extra_meta: Optional[dict] = None) -> Path:
+    """Write atomically: tmp dir -> files -> rename -> commit marker."""
+    directory = Path(directory)
+    final = directory / f"step_{step:09d}"
+    tmp = directory / f".tmp_step_{step:09d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    leaves, treedef = jax.tree.flatten(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "paths": _tree_paths(tree),
+        "leaves": [],
+        "meta": extra_meta or {},
+        "format": "single-host-v1",
+    }
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        np.save(tmp / fname, arr)
+        manifest["leaves"].append({
+            "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype),
+        })
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    (final / COMMIT_MARKER).touch()          # commit point
+    return final
+
+
+def is_committed(ckpt_dir: "str | Path") -> bool:
+    return (Path(ckpt_dir) / COMMIT_MARKER).exists()
+
+
+def list_checkpoints(directory: "str | Path") -> list[Path]:
+    directory = Path(directory)
+    if not directory.exists():
+        return []
+    out = [p for p in sorted(directory.glob("step_*"))
+           if is_committed(p)]
+    return out
+
+
+def latest_checkpoint(directory: "str | Path") -> Optional[Path]:
+    cks = list_checkpoints(directory)
+    return cks[-1] if cks else None
+
+
+def restore_pytree(ckpt_dir: "str | Path", like: Any,
+                   shardings: Any = None) -> Any:
+    """Restore into the structure of ``like``; re-place under ``shardings``
+    (pytree of NamedSharding or None for host arrays).  Shapes must match —
+    resharding is free, reshaping is an error surfaced loudly."""
+    ckpt_dir = Path(ckpt_dir)
+    assert is_committed(ckpt_dir), f"uncommitted checkpoint: {ckpt_dir}"
+    manifest = json.loads((ckpt_dir / "manifest.json").read_text())
+
+    like_leaves, treedef = jax.tree.flatten(like)
+    if len(like_leaves) != len(manifest["leaves"]):
+        raise ValueError(
+            f"checkpoint has {len(manifest['leaves'])} leaves, target "
+            f"structure has {len(like_leaves)} — structures diverged")
+
+    shard_leaves = (treedef.flatten_up_to(shardings)
+                    if shardings is not None else [None] * len(like_leaves))
+
+    out = []
+    for i, (entry, ref, shd) in enumerate(
+            zip(manifest["leaves"], like_leaves, shard_leaves)):
+        arr = np.load(ckpt_dir / entry["file"])
+        ref_shape = tuple(getattr(ref, "shape", arr.shape))
+        if tuple(arr.shape) != ref_shape:
+            raise ValueError(
+                f"leaf {i} shape mismatch: ckpt {arr.shape} vs {ref_shape}")
+        if shd is not None:
+            out.append(jax.device_put(arr, shd))
+        else:
+            out.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, out)
+
+
+def checkpoint_step(ckpt_dir: "str | Path") -> int:
+    manifest = json.loads((Path(ckpt_dir) / "manifest.json").read_text())
+    return int(manifest["step"])

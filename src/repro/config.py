@@ -1,0 +1,196 @@
+"""Config system: model / optimizer / parallelism / run configs.
+
+Everything is a frozen dataclass so configs hash (jit static args) and print
+reproducibly.  Arch configs live in ``repro.configs.<id>`` and produce a
+``ModelConfig``; launchers combine it with ``ParallelConfig`` +
+``OptimizerConfig`` into a ``RunConfig``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    impl: str = "sort"            # "sort" (prod, EP-aware) | "einsum" (tiny)
+    router_jitter: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMSpec:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64            # P
+    n_groups: int = 1
+    chunk: int = 256              # SSD chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch: str
+    family: str                    # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None          # default d_model // n_heads
+    act: str = "swiglu"                     # swiglu | gelu | relu2
+    norm: str = "rmsnorm"                   # rmsnorm | layernorm
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    mlp_bias: bool = False
+    rope_theta: float = 10_000.0
+    pos_embedding: str = "rope"             # rope | learned | none
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    moe: Optional[MoESpec] = None
+    ssm: Optional[SSMSpec] = None
+    # hybrid (zamba2): a shared attention+MLP block applied every N ssm layers
+    hybrid_attn_every: int = 0
+    n_shared_blocks: int = 2
+    # encoder-decoder (whisper)
+    enc_layers: int = 0
+    enc_seq: int = 1500
+    # modality frontends are STUBS: input_specs() provides embeddings
+    frontend: str = "none"                  # none | audio | vision
+    frontend_tokens: int = 0                # vision patch tokens prepended
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"   # master params; 1T-scale uses bfloat16
+    attn_impl: str = "auto"        # auto | chunked | naive (perf knob)
+    parallel_strategy: str = "tp"  # tp (megatron TP x FSDP) | fsdp (ZeRO-3)
+    scan_layers: bool = True
+    remat: str = "full"                     # none | full | dots
+    # which shape cells apply (see CELLS); long ctx only for sub-quadratic
+    sub_quadratic: bool = False
+    max_seq_len: int = 32_768
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks), used for
+        MODEL_FLOPS = 6*N*D in the roofline tables."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        hd = self.resolved_head_dim
+        n_attn = d * (self.n_heads * hd) + 2 * d * (self.n_kv_heads * hd) \
+            + (self.n_heads * hd) * d
+        if self.act == "swiglu":
+            n_mlp = 3 * d * f
+        else:
+            n_mlp = 2 * d * f
+        if self.moe is not None:
+            fe = self.moe.d_ff_expert
+            n_mlp = self.moe.n_experts * 3 * d * fe + d * self.moe.n_experts
+        n_ssm = 0
+        if self.ssm is not None:
+            di = self.ssm.expand * d
+            conv_dim = di + 2 * self.ssm.n_groups * self.ssm.d_state
+            nh = di // self.ssm.head_dim
+            in_proj = d * (2 * di + 2 * self.ssm.n_groups * self.ssm.d_state
+                           + nh)
+            n_ssm = in_proj + conv_dim * self.ssm.d_conv + di * d + di + 3 * nh
+        if self.family == "ssm":
+            per_layer = n_ssm + d
+        elif self.family == "hybrid":
+            per_layer = n_ssm + 2 * d
+        else:
+            per_layer = n_attn + n_mlp + 2 * d
+        total = self.n_layers * per_layer + v * d
+        if self.family == "hybrid":
+            shared = n_attn + 3 * d * f + 2 * d
+            total += self.n_shared_blocks * shared
+        if self.enc_layers:
+            enc_mlp = 2 * d * f
+            total += self.enc_layers * (n_attn + enc_mlp + 2 * d)
+            total += self.n_layers * n_attn          # decoder cross-attn
+        if not self.tie_embeddings:
+            total += v * d
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top_k experts count)."""
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        fe = self.moe.d_ff_expert
+        dense_moe = self.moe.n_experts * 3 * d * fe
+        active_moe = self.moe.top_k * 3 * d * fe
+        return self.param_count() - self.n_layers * (dense_moe - active_moe)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+
+CELLS = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable_cells(model: ModelConfig) -> list[str]:
+    """long_500k needs sub-quadratic attention: run for SSM/hybrid archs,
+    skip (and record the skip) for pure full-attention archs."""
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if model.sub_quadratic:
+        cells.append("long_500k")
+    return cells
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adapprox"
+    lr: float = 3e-4
+    warmup_steps: int = 1000
+    total_steps: int = 100_000
+    min_lr: float = 5e-5
+    b1: float = 0.9
+    b2: float = 0.999
+    weight_decay: float = 0.1
+    # adapprox specifics
+    rank_mode: str = "static"       # static | paper | exact
+    k: int = 64                     # static rank / k_init (adaptive)
+    k_max: int = 256
+    xi_thresh: float = 0.01
+    delta_s: int = 10
+    oversample: int = 5
+    n_iter: int = 5
+    guidance: str = "off"
+    implicit: bool = True
+    use_kernels: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    # mesh axis sizes; pod=1 => single-pod (16, 16) production mesh
+    pods: int = 1
+    data: int = 16
+    model: int = 16
+    fsdp: bool = True               # shard params/opt-state over data axis
+    microbatches: int = 1           # gradient accumulation
+    remat: str = "full"
+    moe_gather_axis: Optional[str] = "data"   # FSDP-gather expert weights
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    opt: OptimizerConfig = dataclasses.field(default_factory=OptimizerConfig)
+    parallel: ParallelConfig = dataclasses.field(
+        default_factory=ParallelConfig)
+    seed: int = 0

@@ -1,0 +1,4 @@
+"""Architecture configs (assigned pool + paper's GPT-2) and input specs."""
+from repro.configs.archs import (ARCHS, ASSIGNED, get_config,
+                                 get_smoke_config)
+from repro.configs.base import input_specs, make_batch

@@ -1,0 +1,60 @@
+"""Shared helpers for architecture configs: input specs per shape cell.
+
+``input_specs(cfg, cell)`` returns ShapeDtypeStruct stand-ins for every
+model input of that cell — weak-type-correct, shardable, and allocation
+free — exactly what ``jax.jit(...).lower(...)`` needs for the dry-run.
+``make_batch`` materialises small real arrays for smoke tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import CELLS, ModelConfig, ShapeCell
+
+
+def _token_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Text tokens = cell seq_len minus stub-frontend tokens (VLM)."""
+    if cfg.family == "vlm":
+        return seq_len - cfg.frontend_tokens
+    return seq_len
+
+
+def input_specs(cfg: ModelConfig, cell: "ShapeCell | str") -> dict:
+    """Batch inputs for train/prefill lowering (decode adds the cache,
+    built separately via ``jax.eval_shape`` of ``model.init_cache``)."""
+    if isinstance(cell, str):
+        cell = CELLS[cell]
+    b = cell.global_batch
+    dt = jnp.dtype(cfg.dtype)
+
+    if cell.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+    s_txt = _token_len(cfg, cell.seq_len)
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s_txt), jnp.int32)}
+    if cfg.family == "vlm":
+        specs["embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_tokens, cfg.d_model), dt)
+    elif cfg.family == "encdec":
+        specs["embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_seq, cfg.d_model), dt)
+    return specs
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq_len: int,
+               key=None) -> dict:
+    """Small concrete batch for smoke tests (same structure as specs)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    dt = jnp.dtype(cfg.dtype)
+    s_txt = _token_len(cfg, seq_len)
+    out = {"tokens": jax.random.randint(key, (batch, s_txt), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        out["embeds"] = jax.random.normal(
+            jax.random.fold_in(key, 1),
+            (batch, cfg.frontend_tokens, cfg.d_model)).astype(dt)
+    elif cfg.family == "encdec":
+        out["embeds"] = jax.random.normal(
+            jax.random.fold_in(key, 1),
+            (batch, cfg.enc_seq, cfg.d_model)).astype(dt)
+    return out

@@ -1,0 +1,11 @@
+"""Config module for deepseek-67b (see archs.py for the exact assignment spec)."""
+from repro.configs.archs import DEEPSEEK_67B as CONFIG
+from repro.configs.archs import get_smoke_config
+
+
+def model_config():
+    return CONFIG
+
+
+def smoke_config(**over):
+    return get_smoke_config("deepseek-67b", **over)

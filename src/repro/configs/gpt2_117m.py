@@ -1,0 +1,11 @@
+"""Config module for gpt2-117m (see archs.py for the exact assignment spec)."""
+from repro.configs.archs import GPT2_117M as CONFIG
+from repro.configs.archs import get_smoke_config
+
+
+def model_config():
+    return CONFIG
+
+
+def smoke_config(**over):
+    return get_smoke_config("gpt2-117m", **over)

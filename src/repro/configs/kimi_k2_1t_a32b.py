@@ -1,0 +1,11 @@
+"""Config module for kimi-k2-1t-a32b (see archs.py for the exact assignment spec)."""
+from repro.configs.archs import KIMI_K2 as CONFIG
+from repro.configs.archs import get_smoke_config
+
+
+def model_config():
+    return CONFIG
+
+
+def smoke_config(**over):
+    return get_smoke_config("kimi-k2-1t-a32b", **over)

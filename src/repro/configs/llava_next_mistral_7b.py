@@ -1,0 +1,11 @@
+"""Config module for llava-next-mistral-7b (see archs.py for the exact assignment spec)."""
+from repro.configs.archs import LLAVA_NEXT_MISTRAL_7B as CONFIG
+from repro.configs.archs import get_smoke_config
+
+
+def model_config():
+    return CONFIG
+
+
+def smoke_config(**over):
+    return get_smoke_config("llava-next-mistral-7b", **over)

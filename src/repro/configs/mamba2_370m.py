@@ -1,0 +1,11 @@
+"""Config module for mamba2-370m (see archs.py for the exact assignment spec)."""
+from repro.configs.archs import MAMBA2_370M as CONFIG
+from repro.configs.archs import get_smoke_config
+
+
+def model_config():
+    return CONFIG
+
+
+def smoke_config(**over):
+    return get_smoke_config("mamba2-370m", **over)

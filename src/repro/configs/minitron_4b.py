@@ -1,0 +1,11 @@
+"""Config module for minitron-4b (see archs.py for the exact assignment spec)."""
+from repro.configs.archs import MINITRON_4B as CONFIG
+from repro.configs.archs import get_smoke_config
+
+
+def model_config():
+    return CONFIG
+
+
+def smoke_config(**over):
+    return get_smoke_config("minitron-4b", **over)

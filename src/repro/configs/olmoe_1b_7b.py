@@ -1,0 +1,11 @@
+"""Config module for olmoe-1b-7b (see archs.py for the exact assignment spec)."""
+from repro.configs.archs import OLMOE_1B_7B as CONFIG
+from repro.configs.archs import get_smoke_config
+
+
+def model_config():
+    return CONFIG
+
+
+def smoke_config(**over):
+    return get_smoke_config("olmoe-1b-7b", **over)

@@ -1,0 +1,11 @@
+"""Config module for qwen2-7b (see archs.py for the exact assignment spec)."""
+from repro.configs.archs import QWEN2_7B as CONFIG
+from repro.configs.archs import get_smoke_config
+
+
+def model_config():
+    return CONFIG
+
+
+def smoke_config(**over):
+    return get_smoke_config("qwen2-7b", **over)

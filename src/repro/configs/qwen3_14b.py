@@ -1,0 +1,11 @@
+"""Config module for qwen3-14b (see archs.py for the exact assignment spec)."""
+from repro.configs.archs import QWEN3_14B as CONFIG
+from repro.configs.archs import get_smoke_config
+
+
+def model_config():
+    return CONFIG
+
+
+def smoke_config(**over):
+    return get_smoke_config("qwen3-14b", **over)

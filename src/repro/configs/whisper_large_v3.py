@@ -1,0 +1,11 @@
+"""Config module for whisper-large-v3 (see archs.py for the exact assignment spec)."""
+from repro.configs.archs import WHISPER_LARGE_V3 as CONFIG
+from repro.configs.archs import get_smoke_config
+
+
+def model_config():
+    return CONFIG
+
+
+def smoke_config(**over):
+    return get_smoke_config("whisper-large-v3", **over)

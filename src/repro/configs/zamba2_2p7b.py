@@ -1,0 +1,11 @@
+"""Config module for zamba2-2.7b (see archs.py for the exact assignment spec)."""
+from repro.configs.archs import ZAMBA2_2P7B as CONFIG
+from repro.configs.archs import get_smoke_config
+
+
+def model_config():
+    return CONFIG
+
+
+def smoke_config(**over):
+    return get_smoke_config("zamba2-2.7b", **over)

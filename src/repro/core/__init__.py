@@ -1,0 +1,53 @@
+"""repro.core — the paper's contribution: Adapprox and its substrate.
+
+Public API:
+    adapprox(AdapproxConfig)   — the paper's optimizer (Algorithm 3)
+    adamw / adafactor / came   — baselines the paper compares against
+    srsi_dense / srsi_implicit — Streamlined Randomized Subspace Iteration
+    RankConfig                 — adaptive rank selection (Algorithm 2)
+    make_optimizer(name, **kw) — registry used by configs / launcher
+"""
+import dataclasses as _dc
+
+from repro.core.types import (GradientTransformation, Schedule, apply_updates,
+                              chain, clip_by_global_norm, constant_schedule,
+                              global_norm, tree_nbytes)
+from repro.core.srsi import (ImplicitV, SRSIResult, cholesky_qr2,
+                             make_implicit_v, reconstruct, srsi_dense,
+                             srsi_implicit)
+from repro.core.rank import RankConfig, f_increment, resolve_k_max
+from repro.core.factored import DenseLeaf, FactoredLeaf
+from repro.core.adapprox import (AdapproxConfig, AdapproxState, adapprox,
+                                 rank_metrics)
+from repro.core.adamw import AdamWConfig, adamw
+from repro.core.adafactor import AdafactorConfig, adafactor
+from repro.core.came import CAMEConfig, came
+
+_REGISTRY = {}
+
+
+def register(name):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def make_optimizer(name: str, **kwargs) -> GradientTransformation:
+    """Build an optimizer by name. kwargs override the config defaults."""
+    if name == "adapprox":
+        rank_keys = {f.name for f in _dc.fields(RankConfig)}
+        rank_kw = {k: kwargs.pop(k) for k in list(kwargs) if k in rank_keys}
+        rank = RankConfig(**rank_kw)
+        return adapprox(AdapproxConfig(rank=rank, **kwargs))
+    if name == "adamw":
+        return adamw(AdamWConfig(**kwargs))
+    if name == "adafactor":
+        return adafactor(AdafactorConfig(**kwargs))
+    if name == "came":
+        return came(CAMEConfig(**kwargs))
+    if name in _REGISTRY:
+        return _REGISTRY[name](**kwargs)
+    raise ValueError(f"unknown optimizer {name!r}; "
+                     f"available: adapprox, adamw, adafactor, came, "
+                     f"{sorted(_REGISTRY)}")

@@ -1,0 +1,125 @@
+"""Adafactor baseline (Shazeer & Stern, 2018).
+
+Faithful features: rank-1 row/column factored second moment for matrices
+(I-divergence-optimal nonnegative factorisation: ``V ~ R C / sum(R)``),
+optional first moment, RMS update clipping, optional beta2 schedule
+``b2_t = 1 - t^{-0.8}``, decoupled weight decay, optional relative step
+sizes.  The paper's GPT-2 comparison drives all optimizers with the same
+external LR schedule, so ``relative_step`` defaults to False here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import GradientTransformation, resolve_schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: "float | Callable" = 1e-3
+    b1: float = 0.0                  # Adafactor default: first moment off
+    b2: float = 0.999
+    b2_schedule: bool = True         # b2_t = 1 - t^decay_exponent
+    decay_exponent: float = -0.8
+    eps1: float = 1e-30              # regulariser inside the factored stats
+    eps2: float = 1e-3               # relative-step floor (only if relative)
+    clip_d: float = 1.0
+    weight_decay: float = 0.0
+    relative_step: bool = False
+    min_dim_factor: int = 128
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdafactorLeaf:
+    r: Optional[jnp.ndarray]     # (*batch, m) row stats   | None if dense
+    c: Optional[jnp.ndarray]     # (*batch, n) col stats   | None if dense
+    v: Optional[jnp.ndarray]     # dense fallback          | None if factored
+    m1: Optional[jnp.ndarray]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdafactorState:
+    step: jnp.ndarray
+    leaves: tuple
+
+
+def _should_factor(shape, min_dim):
+    return len(shape) >= 2 and min(shape[-2], shape[-1]) >= min_dim
+
+
+def _rms(x):
+    return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)
+
+
+def adafactor(cfg: AdafactorConfig) -> GradientTransformation:
+    schedule = resolve_schedule(cfg.lr)
+
+    def init(params):
+        def mk(p):
+            m1 = jnp.zeros(p.shape, jnp.float32) if cfg.b1 > 0 else None
+            if _should_factor(p.shape, cfg.min_dim_factor):
+                bd = p.shape[:-2]
+                return AdafactorLeaf(
+                    r=jnp.zeros(bd + (p.shape[-2],), jnp.float32),
+                    c=jnp.zeros(bd + (p.shape[-1],), jnp.float32),
+                    v=None, m1=m1)
+            return AdafactorLeaf(r=None, c=None,
+                                 v=jnp.zeros(p.shape, jnp.float32), m1=m1)
+        flat, _ = jax.tree.flatten(params)
+        return AdafactorState(step=jnp.zeros((), jnp.int32),
+                              leaves=tuple(mk(p) for p in flat))
+
+    def update(grads, state: AdafactorState, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        b2t = (1.0 - t ** cfg.decay_exponent) if cfg.b2_schedule else cfg.b2
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+
+        deltas, new_leaves = [], []
+        for g, leaf, w in zip(flat_g, state.leaves, flat_p):
+            g32 = g.astype(jnp.float32)
+            gsq = jnp.square(g32) + cfg.eps1
+            if leaf.r is not None:
+                r = b2t * leaf.r + (1.0 - b2t) * jnp.mean(gsq, axis=-1)
+                c = b2t * leaf.c + (1.0 - b2t) * jnp.mean(gsq, axis=-2)
+                # V-hat = outer(r, c) / mean(r); u = g / sqrt(vhat)
+                denom = jnp.mean(r, axis=-1, keepdims=True)[..., None]
+                vhat = (r[..., :, None] * c[..., None, :]) / (denom + 1e-30)
+                u = g32 / (jnp.sqrt(vhat) + 1e-30)
+                new = AdafactorLeaf(r=r, c=c, v=None, m1=leaf.m1)
+            else:
+                v = b2t * leaf.v + (1.0 - b2t) * gsq
+                u = g32 / (jnp.sqrt(v) + 1e-30)
+                new = AdafactorLeaf(r=None, c=None, v=v, m1=leaf.m1)
+
+            u = u / jnp.maximum(1.0, _rms(u) / cfg.clip_d)
+
+            if cfg.relative_step:
+                rho = jnp.minimum(1e-2, 1.0 / jnp.sqrt(t))
+                alpha = jnp.maximum(cfg.eps2, _rms(w.astype(jnp.float32))) * rho
+            else:
+                alpha = schedule(step)
+
+            if leaf.m1 is not None:
+                m1 = cfg.b1 * leaf.m1 + (1.0 - cfg.b1) * u
+                out = m1
+                new = AdafactorLeaf(r=new.r, c=new.c, v=new.v, m1=m1)
+            else:
+                out = u
+
+            deltas.append(-(alpha * (out + cfg.weight_decay
+                                     * w.astype(jnp.float32))))
+            new_leaves.append(new)
+
+        return (jax.tree.unflatten(treedef, deltas),
+                AdafactorState(step=step, leaves=tuple(new_leaves)))
+
+    return GradientTransformation(init, update)

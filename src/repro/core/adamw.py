@@ -1,0 +1,70 @@
+"""AdamW baseline (Loshchilov & Hutter) — the paper's reference optimizer.
+
+Note: following the paper's memory accounting (Table 2), the first moment is
+allocated even when ``b1 = 0`` ("AdamW still allocates memory for the first
+moment"), matching the PyTorch implementation the paper measured.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import GradientTransformation, resolve_schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: "float | Callable" = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    step: jnp.ndarray
+    m: object          # pytree like params, float32
+    v: object          # pytree like params, float32
+
+
+def adamw(cfg: AdamWConfig) -> GradientTransformation:
+    schedule = resolve_schedule(cfg.lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(z, params),
+                          v=jax.tree.map(z, params))
+
+    def update(grads, state: AdamWState, params):
+        step = state.step + 1
+        lr = schedule(step)
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - cfg.b1 ** t
+        bc2 = 1.0 - cfg.b2 ** t
+
+        def upd(g, m, v, w):
+            g32 = g.astype(jnp.float32)
+            m = cfg.b1 * m + (1.0 - cfg.b1) * g32
+            v = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g32)
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = -(lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                            + cfg.weight_decay * w.astype(jnp.float32)))
+            return delta, m, v
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        # tree-of-tuples -> tuple-of-trees
+        treedef = jax.tree.structure(grads)
+        flat = treedef.flatten_up_to(out)
+        deltas = jax.tree.unflatten(treedef, [o[0] for o in flat])
+        ms = jax.tree.unflatten(treedef, [o[1] for o in flat])
+        vs = jax.tree.unflatten(treedef, [o[2] for o in flat])
+        return deltas, AdamWState(step=step, m=ms, v=vs)
+
+    return GradientTransformation(init, update)

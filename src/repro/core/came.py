@@ -1,0 +1,125 @@
+"""CAME baseline (Luo et al., ACL 2023): Confidence-guided Adaptive Memory
+Efficient optimization.
+
+Adafactor's factored second moment, plus a factored *instability* statistic
+``S_t = (u_hat_t - m_t)^2`` whose inverse square root scales the first-moment
+update (confidence guidance).  CAME requires ``b1 > 0`` (the paper notes it
+is non-viable at ``b1 = 0`` — our constructor enforces that, matching
+Table 2's "--" entry).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import GradientTransformation, resolve_schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class CAMEConfig:
+    lr: "float | Callable" = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999      # second-moment decay
+    b3: float = 0.9999     # instability-statistic decay
+    eps1: float = 1e-30
+    eps2: float = 1e-16
+    clip_d: float = 1.0
+    weight_decay: float = 0.0
+    min_dim_factor: int = 128
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CAMELeaf:
+    r: Optional[jnp.ndarray]      # second-moment row stats
+    c: Optional[jnp.ndarray]
+    v: Optional[jnp.ndarray]      # dense fallback
+    rs: Optional[jnp.ndarray]     # instability row stats
+    cs: Optional[jnp.ndarray]
+    m1: jnp.ndarray               # first moment (required)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CAMEState:
+    step: jnp.ndarray
+    leaves: tuple
+
+
+def _should_factor(shape, min_dim):
+    return len(shape) >= 2 and min(shape[-2], shape[-1]) >= min_dim
+
+
+def _rms(x):
+    return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)
+
+
+def _factored_vhat(r, c):
+    denom = jnp.mean(r, axis=-1, keepdims=True)[..., None]
+    return (r[..., :, None] * c[..., None, :]) / (denom + 1e-30)
+
+
+def came(cfg: CAMEConfig) -> GradientTransformation:
+    if cfg.b1 <= 0:
+        raise ValueError("CAME requires b1 > 0 (confidence guidance depends "
+                         "on the first moment; see Adapprox Table 2).")
+    schedule = resolve_schedule(cfg.lr)
+
+    def init(params):
+        def mk(p):
+            m1 = jnp.zeros(p.shape, jnp.float32)
+            if _should_factor(p.shape, cfg.min_dim_factor):
+                bd = p.shape[:-2]
+                zr = jnp.zeros(bd + (p.shape[-2],), jnp.float32)
+                zc = jnp.zeros(bd + (p.shape[-1],), jnp.float32)
+                return CAMELeaf(r=zr, c=zc, v=None, rs=zr, cs=zc, m1=m1)
+            return CAMELeaf(r=None, c=None,
+                            v=jnp.zeros(p.shape, jnp.float32),
+                            rs=None, cs=None, m1=m1)
+        flat, _ = jax.tree.flatten(params)
+        return CAMEState(step=jnp.zeros((), jnp.int32),
+                         leaves=tuple(mk(p) for p in flat))
+
+    def update(grads, state: CAMEState, params):
+        step = state.step + 1
+        lr = schedule(step)
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+
+        deltas, new_leaves = [], []
+        for g, leaf, w in zip(flat_g, state.leaves, flat_p):
+            g32 = g.astype(jnp.float32)
+            gsq = jnp.square(g32) + cfg.eps1
+            if leaf.r is not None:
+                r = cfg.b2 * leaf.r + (1.0 - cfg.b2) * jnp.mean(gsq, axis=-1)
+                c = cfg.b2 * leaf.c + (1.0 - cfg.b2) * jnp.mean(gsq, axis=-2)
+                u = g32 / (jnp.sqrt(_factored_vhat(r, c)) + 1e-30)
+            else:
+                r = c = None
+                v = cfg.b2 * leaf.v + (1.0 - cfg.b2) * gsq
+                u = g32 / (jnp.sqrt(v) + 1e-30)
+
+            u = u / jnp.maximum(1.0, _rms(u) / cfg.clip_d)
+            m1 = cfg.b1 * leaf.m1 + (1.0 - cfg.b1) * u
+
+            if leaf.r is not None:
+                s = jnp.square(u - m1) + cfg.eps2
+                rs = cfg.b3 * leaf.rs + (1.0 - cfg.b3) * jnp.mean(s, axis=-1)
+                cs = cfg.b3 * leaf.cs + (1.0 - cfg.b3) * jnp.mean(s, axis=-2)
+                out = m1 / (jnp.sqrt(_factored_vhat(rs, cs)) + 1e-30)
+                new = CAMELeaf(r=r, c=c, v=None, rs=rs, cs=cs, m1=m1)
+            else:
+                out = m1
+                new = CAMELeaf(r=None, c=None, v=v, rs=None, cs=None, m1=m1)
+
+            deltas.append(-(lr * (out + cfg.weight_decay
+                                  * w.astype(jnp.float32))))
+            new_leaves.append(new)
+
+        return (jax.tree.unflatten(treedef, deltas),
+                CAMEState(step=step, leaves=tuple(new_leaves)))
+
+    return GradientTransformation(init, update)

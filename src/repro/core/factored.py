@@ -1,0 +1,73 @@
+"""Per-leaf state layout and factorisation policy for Adapprox.
+
+A parameter leaf with >= 2 trailing dims whose smaller trailing dim is at
+least ``min_dim`` gets a *factored* second moment (Q, U, k); everything else
+(biases, norms, scalars) keeps a dense second moment — the same policy
+Adafactor uses.  Leading dims (scan-stacked layers ``(L, m, n)``, MoE expert
+stacks ``(L, E, m, n)``) are treated as batch dims and vmapped over.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FactoredLeaf:
+    """Optimizer state for one factored parameter.
+
+    q:  (*batch, m, r_store) float32 — left feature matrix (cols > k zeroed)
+    u:  (*batch, n, r_store) float32 — right feature matrix
+    k:  (*batch,) int32 — current effective rank (adaptive mode)
+    xi: (*batch,) float32 — last approximation error rate (metrics only)
+    m1: (*batch, m, n) float32 | None — running average of *updates*
+        (Adapprox replaces Adam's gradient EMA with an update EMA).
+    """
+
+    q: jnp.ndarray
+    u: jnp.ndarray
+    k: jnp.ndarray
+    xi: jnp.ndarray
+    m1: Optional[jnp.ndarray]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DenseLeaf:
+    """Dense (non-factored) fallback state: full second moment."""
+
+    v: jnp.ndarray                 # same shape as param, float32
+    m1: Optional[jnp.ndarray]      # same shape as param, float32 | None
+
+
+def should_factor(shape: tuple[int, ...], min_dim: int) -> bool:
+    if len(shape) < 2:
+        return False
+    return min(shape[-2], shape[-1]) >= min_dim
+
+
+def batch_dims(shape: tuple[int, ...]) -> tuple[int, ...]:
+    return tuple(shape[:-2])
+
+
+def vmap_over_batch(fn, n_batch_dims: int, key_arg: bool = False):
+    """vmap ``fn`` over ``n_batch_dims`` leading axes of all its array args."""
+    for _ in range(n_batch_dims):
+        fn = jax.vmap(fn)
+    return fn
+
+
+def batched_keys(key: jax.Array, bdims: tuple[int, ...]) -> jax.Array:
+    """A key array with shape ``bdims`` so each matrix in a stack gets an
+    independent sketch."""
+    if not bdims:
+        return key
+    total = 1
+    for d in bdims:
+        total *= d
+    keys = jax.random.split(key, total)
+    return keys.reshape(bdims + key.shape)

@@ -1,0 +1,42 @@
+"""Int8-quantized factor storage for Adapprox (beyond-paper).
+
+The paper's Discussion: "our approach is compatible with other memory
+optimization techniques such as quantization" — this module implements it.
+The stored factors Q (m, r) / U (n, r) are kept as int8 with per-column
+fp32 scales (symmetric absmax); they are dequantised transiently at the
+start of the update.  Factor memory drops 4x vs fp32 (Table-2 extension:
+Adapprox(k_max, int8) ~ 16.9% -> ~4.4% of AdamW at beta1=0).
+
+Error analysis: per-column absmax int8 adds relative error <= 1/127 ~ 0.8%
+per entry of the *approximation* (whose own error is xi ~ 1%); and because
+V_t = b2 * deq(Q)deq(U)^T + (1-b2) G^2 re-factorises every step, the
+quantisation error does not compound — it behaves like a slightly larger
+xi (validated in tests/test_quantized.py against the fp32 trajectory).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QuantizedMatrix(NamedTuple):
+    q8: jnp.ndarray        # (..., m, r) int8
+    scale: jnp.ndarray     # (..., 1, r) float32 per-column absmax / 127
+
+
+def quantize(x: jnp.ndarray) -> QuantizedMatrix:
+    """Symmetric per-column absmax int8."""
+    absmax = jnp.max(jnp.abs(x), axis=-2, keepdims=True)
+    scale = (absmax / 127.0 + 1e-30).astype(jnp.float32)
+    q8 = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return QuantizedMatrix(q8=q8, scale=scale)
+
+
+def dequantize(qm: QuantizedMatrix) -> jnp.ndarray:
+    return qm.q8.astype(jnp.float32) * qm.scale
+
+
+def quantize_tree_factors(leaf_q: jnp.ndarray, leaf_u: jnp.ndarray):
+    return quantize(leaf_q), quantize(leaf_u)

@@ -1,0 +1,278 @@
+"""Streamlined Randomized Subspace Iteration (S-RSI) — Algorithm 1 of Adapprox.
+
+Computes feature matrices ``Q (m, k)``, ``U (n, k)`` such that ``A ~= Q @ U.T``
+for a PSD-entry (elementwise non-negative) target ``A`` — in our use the Adam
+second-moment matrix ``V_t``.
+
+TPU adaptation notes (see DESIGN.md §Hardware-adaptation):
+
+* The QR factorisation in the subspace iteration is replaced by CholeskyQR2,
+  which is pure matmul + small Cholesky — MXU friendly and, crucially,
+  *distribution friendly*: when the row dimension ``m`` is sharded across a
+  mesh axis, ``Y.T @ Y`` reduces to a local matmul plus one small ``(r, r)``
+  all-reduce that GSPMD inserts automatically.  Householder QR would gather
+  the full tall matrix to one device.
+
+* The second moment never has to be materialised: ``V_t = b2 * Q U^T +
+  (1 - b2) * G**2`` is available as an *implicit operator* (matvec /
+  rmatvec), so the subspace iteration runs in
+  ``O((m + n) * (k + p))`` memory instead of ``O(m n)``.  The explicit-``A``
+  path is kept both as the paper-faithful baseline and as the oracle for
+  kernel tests.
+
+All functions are shape-polymorphic over leading batch dims via ``vmap``
+(used for scan-stacked layer parameters ``(L, m, n)`` and MoE expert stacks
+``(L, E, m, n)``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Orthonormalisation: CholeskyQR2
+# ---------------------------------------------------------------------------
+
+def _cholesky_qr(y: jnp.ndarray, shift_rel: float = 1e-5) -> jnp.ndarray:
+    """One shifted CholeskyQR pass: returns Q with (approximately)
+    orthonormal columns.
+
+    ``y``: (m, r).  Gram matrix is (r, r); under a sharded ``m`` this is a
+    local matmul + one small all-reduce.  Two robustness devices (needed
+    because power iteration drives the sketch columns towards the dominant
+    singular directions, so the Gram matrix can be numerically singular in
+    fp32):
+
+      * column scaling — removes the huge dynamic range between columns;
+      * a trace-relative diagonal shift (shifted-CholeskyQR, Fukaya et al.)
+        — guarantees the Cholesky succeeds and the triangular solve has a
+        bounded diagonal.  The shift perturbs orthonormality by O(shift),
+        which the following passes remove.
+    """
+    y32 = y.astype(jnp.float32)
+    col = jnp.sqrt(jnp.sum(jnp.square(y32), axis=0) + 1e-30)
+    # Relative clamp: once power iteration collapses the sketch onto a
+    # low-dim subspace, orthogonal-complement columns have norms ~eps *
+    # max-col.  Normalising those to unit length amplifies garbage (and
+    # XLA's fused loop bodies turn the 0/0 into NaN — observed on CPU with
+    # fori_loop but not unrolled!).  Clamped columns stay ~zero; the
+    # diagonal shift keeps the Gram factorisable.
+    col = jnp.maximum(col, 1e-6 * jnp.max(col) + 1e-30)
+    ys = y32 / col[None, :]
+    gram = ys.T @ ys  # (r, r), diag ~= 1
+    r = gram.shape[0]
+    gram = gram + (shift_rel + 1e-30) * jnp.eye(r, dtype=jnp.float32)
+    chol = jnp.linalg.cholesky(gram)
+    # Q = Y_s R^{-1}  (R = chol.T upper triangular).
+    q = jax.scipy.linalg.solve_triangular(chol, ys.T, lower=True).T
+    # Degenerate sketch directions (collapsed by power iteration) can turn
+    # into NaN under XLA's fused loop bodies even though the unrolled math
+    # is finite.  Zeroing them is semantically "drop that sketch column":
+    # it carries ~no energy, and the Gram shift keeps later passes PD.
+    return jnp.where(jnp.isfinite(q), q, 0.0)
+
+
+def cholesky_qr2(y: jnp.ndarray) -> jnp.ndarray:
+    """Shifted CholeskyQR3 — three matmul+small-Cholesky passes give
+    near-Householder orthonormality even for the ill-conditioned sketches
+    produced by l = 5 power iterations.  The first-pass shift tames the
+    condition number; later passes stay at ~1e-6, the fp32 Gram rounding
+    floor: an orthonormal Q's computed Gram can have eigmin ~ -eps*r
+    (observed -1.1e-8 at r = 10), so any smaller shift risks a non-PD
+    Cholesky.  Final orthonormality error ~1e-6 — ample for subspace
+    iteration."""
+    return _cholesky_qr(_cholesky_qr(_cholesky_qr(y, 1e-5), 1e-6), 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Implicit second-moment operator
+# ---------------------------------------------------------------------------
+
+class ImplicitV(NamedTuple):
+    """``V = b2 * (Q @ U.T) + (1 - b2) * G * G`` without materialisation.
+
+    ``col_mask``: (r,) float mask selecting the active columns of the stored
+    factors (adaptive-rank support; inactive columns are zeros anyway in
+    steady state but the mask makes truncation explicit).
+    """
+
+    q: jnp.ndarray        # (m, r) float32
+    u: jnp.ndarray        # (n, r) float32
+    g: jnp.ndarray        # (m, n) grad (any float dtype)
+    b2: jnp.ndarray       # scalar
+    col_mask: jnp.ndarray  # (r,) float32
+
+    @property
+    def shape(self):
+        return self.g.shape
+
+    def mv(self, x: jnp.ndarray) -> jnp.ndarray:
+        """V @ x for x: (n, s)."""
+        g32 = self.g.astype(jnp.float32)
+        qm = self.q * self.col_mask[None, :]
+        low = qm @ (self.u.T @ x)
+        dense = (g32 * g32) @ x
+        return self.b2 * low + (1.0 - self.b2) * dense
+
+    def rmv(self, y: jnp.ndarray) -> jnp.ndarray:
+        """V.T @ y for y: (m, s).  V is not symmetric in general."""
+        g32 = self.g.astype(jnp.float32)
+        um = self.u * self.col_mask[None, :]
+        low = um @ (self.q.T @ y)
+        dense = (g32 * g32).T @ y
+        return self.b2 * low + (1.0 - self.b2) * dense
+
+    def materialize(self) -> jnp.ndarray:
+        """Clamp the *low-rank term* at zero before adding the fresh G^2.
+
+        V's entries are non-negative but Q U^T can dip negative where the
+        approximation is poor.  Clamping the low-rank term (rather than the
+        sum) preserves the stability floor V >= (1 - b2) * G^2, which bounds
+        per-entry update amplification by 1/sqrt(1 - b2) — without it a
+        negative Q U^T could zero the denominator entirely.
+        """
+        g32 = self.g.astype(jnp.float32)
+        qm = self.q * self.col_mask[None, :]
+        return (self.b2 * jnp.maximum(qm @ self.u.T, 0.0)
+                + (1.0 - self.b2) * g32 * g32)
+
+    def frob_sq(self) -> jnp.ndarray:
+        """||V||_F^2 — streaming, O(mn) flops, O(1) extra memory.
+
+        XLA fuses the reconstruct + square + reduce; the Pallas kernel path
+        (kernels/lowrank_update.py) does the same tiling explicitly.
+        """
+        return jnp.sum(jnp.square(self.materialize()))
+
+
+def make_implicit_v(q, u, g, b2, col_mask=None) -> ImplicitV:
+    if col_mask is None:
+        col_mask = jnp.ones((q.shape[-1],), jnp.float32)
+    return ImplicitV(q.astype(jnp.float32), u.astype(jnp.float32), g,
+                     jnp.asarray(b2, jnp.float32), col_mask.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# S-RSI proper
+# ---------------------------------------------------------------------------
+
+class SRSIResult(NamedTuple):
+    q: jnp.ndarray          # (m, r_store)
+    u: jnp.ndarray          # (n, r_store)
+    # Cumulative captured energy: cum_energy[j] = ||U[:, :j+1]||_F^2 summed
+    # over columns; with U = A^T Q and Q orthonormal this equals
+    # ||Q[:, :j+1]^T A||_F^2, the energy captured by a rank-(j+1) truncation.
+    cum_energy: jnp.ndarray  # (r_store,) float32
+    frob_sq: jnp.ndarray     # scalar ||A||_F^2
+
+
+def _srsi_core(matmul_a: Callable[[jnp.ndarray], jnp.ndarray],
+               matmul_at: Callable[[jnp.ndarray], jnp.ndarray],
+               frob_sq: jnp.ndarray,
+               n: int,
+               r_store: int,
+               oversample: int,
+               n_iter: int,
+               key: jax.Array) -> SRSIResult:
+    """Shared implementation.  ``matmul_a(x: (n, r)) -> (m, r)``,
+    ``matmul_at(y: (m, r)) -> (n, r)``.
+
+    Faithful to Algorithm 1: l rounds of  Q <- orth(A U); U <- A^T Q,
+    sampling ``r_store + oversample`` columns and truncating to ``r_store``
+    at the end (the paper truncates to ``k``; we store ``k_max`` columns in
+    adaptive mode and mask down to ``k_t`` — see rank.py).
+
+    Scale normalisation: second-moment matrices late in training have
+    entries ~(1-b2)*g^2 ~ 1e-8; the implicit power (A A^T)^l A then
+    underflows fp32.  The iteration runs on A/s with s = ||A||_F (all
+    outputs are scale-equivariant: Q invariant, U and cum_energy rescale).
+    """
+    scale = jnp.sqrt(frob_sq) + 1e-30
+    inv = (1.0 / scale).astype(jnp.float32)
+    r_total = r_store + oversample
+    u = jax.random.normal(key, (n, r_total), dtype=jnp.float32)
+
+    def half_step(u):
+        q = matmul_a(u) * inv
+        q = cholesky_qr2(q)
+        return q, matmul_at(q) * inv
+
+    # The loop count l is a static hyperparameter (paper: l = 5).  The final
+    # iterate has U = A^T Q with Q orthonormal, which is exactly the pair the
+    # reconstruction Q U^T = Q Q^T A needs.  First iteration runs eagerly so
+    # the fori_loop carry has concrete shapes for both factors.
+    q, u = half_step(u)
+    if n_iter > 1:
+        q, u = jax.lax.fori_loop(
+            0, n_iter - 1, lambda _, c: half_step(c[1]), (q, u))
+
+    q = q[:, :r_store]
+    u = u[:, :r_store] * scale            # back to unscaled units
+    col_energy = jnp.sum(jnp.square(u * inv), axis=0)  # scaled (stable)
+    cum_energy = jnp.cumsum(col_energy) * frob_sq      # = unscaled energy
+    return SRSIResult(q=q, u=u, cum_energy=cum_energy, frob_sq=frob_sq)
+
+
+def srsi_dense(a: jnp.ndarray, r_store: int, oversample: int, n_iter: int,
+               key: jax.Array) -> SRSIResult:
+    """Paper-faithful S-RSI on an explicit target matrix ``a: (m, n)``."""
+    a32 = a.astype(jnp.float32)
+    return _srsi_core(lambda x: a32 @ x,
+                      lambda y: a32.T @ y,
+                      jnp.sum(jnp.square(a32)),
+                      a.shape[1], r_store, oversample, n_iter, key)
+
+
+def srsi_implicit(v: ImplicitV, r_store: int, oversample: int, n_iter: int,
+                  key: jax.Array,
+                  frob_sq: Optional[jnp.ndarray] = None) -> SRSIResult:
+    """S-RSI on the implicit operator — never materialises ``V`` (beyond-paper
+    memory optimisation; bitwise-different but statistically identical)."""
+    if frob_sq is None:
+        frob_sq = v.frob_sq()
+    return _srsi_core(v.mv, v.rmv, frob_sq, v.shape[1], r_store, oversample,
+                      n_iter, key)
+
+
+def reconstruct(q: jnp.ndarray, u: jnp.ndarray,
+                col_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """``A_k = Q diag(mask) U^T`` clamped at zero (V entries are >= 0; the
+    low-rank approximation can dip slightly negative)."""
+    q32 = q.astype(jnp.float32)
+    if col_mask is not None:
+        q32 = q32 * col_mask[None, :]
+    return jnp.maximum(q32 @ u.astype(jnp.float32).T, 0.0)
+
+
+def approx_error_rate(res: SRSIResult, k: jnp.ndarray) -> jnp.ndarray:
+    """xi(k) = ||A - Q_k U_k^T||_F / ||A||_F  via the projection identity
+
+        ||A - Q_k Q_k^T A||_F^2 = ||A||_F^2 - ||Q_k^T A||_F^2,
+
+    so no residual materialisation is needed.  ``k`` may be traced (int32).
+    """
+    r = res.cum_energy.shape[0]
+    idx = jnp.clip(k - 1, 0, r - 1)
+    captured = jnp.where(k > 0, res.cum_energy[idx], 0.0)
+    resid = jnp.maximum(res.frob_sq - captured, 0.0)
+    return jnp.sqrt(resid / (res.frob_sq + 1e-30))
+
+
+def col_mask(r_store: int, k: jnp.ndarray) -> jnp.ndarray:
+    """(r_store,) float32 mask with the first ``k`` entries = 1."""
+    return (jnp.arange(r_store) < k).astype(jnp.float32)
+
+
+# Batched variants (leading dims mapped).  ``keys`` must carry the same
+# leading dims so every matrix in a stack gets an independent sketch.
+
+def srsi_dense_batched(a, r_store, oversample, n_iter, keys):
+    fn = functools.partial(srsi_dense, r_store=r_store, oversample=oversample,
+                           n_iter=n_iter)
+    for _ in range(a.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(a, key=keys)

@@ -1,0 +1,123 @@
+"""Core optimizer API: a minimal, optax-style gradient-transformation protocol.
+
+The framework deliberately avoids external optimizer libraries so the full
+state layout (and therefore the memory accounting that the Adapprox paper is
+about) is under our control.  A ``GradientTransformation`` is a pair of pure
+functions so it composes with ``jax.jit`` / ``pjit`` and with the sharding
+rules in :mod:`repro.distributed.sharding`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # pytree of jnp.ndarray
+Grads = Any
+Updates = Any
+OptState = Any
+
+
+class GradientTransformation(NamedTuple):
+    """``init(params) -> state`` and ``update(grads, state, params) -> (updates, state)``.
+
+    ``updates`` are *additive*: the caller applies ``params + updates``.
+    Learning rate / weight decay are folded into the transformation itself
+    (Adapprox, Adafactor and CAME all own their step-size logic).
+    """
+
+    init: Callable[[Params], OptState]
+    update: Callable[[Grads, OptState, Params], tuple[Updates, OptState]]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EmptyState:
+    """State for stateless transformations."""
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    """Compose transformations left-to-right (like ``optax.chain``)."""
+
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params):
+        new_states = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_states.append(s)
+        return grads, tuple(new_states)
+
+    return GradientTransformation(init, update)
+
+
+def apply_updates(params: Params, updates: Updates) -> Params:
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)) if u is not None else p,
+                        params, updates,
+                        is_leaf=lambda x: x is None)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves))) if leaves else jnp.zeros(())
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init(params):
+        del params
+        return EmptyState()
+
+    def update(grads, state, params):
+        del params
+        norm = global_norm(grads)
+        scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+        return jax.tree.map(lambda g: g * scale, grads), state
+
+    return GradientTransformation(init, update)
+
+
+def tree_nbytes(tree) -> int:
+    """Total bytes of every array leaf (used by the Table-2 memory bench)."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        if hasattr(leaf, "dtype") and hasattr(leaf, "shape"):
+            size = 1
+            for d in leaf.shape:
+                size *= int(d)
+            total += size * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Linear warmup followed by cosine decay to ``min_lr`` (Megatron-style)."""
+
+    peak_lr: float
+    warmup_steps: int = 1000
+    total_steps: int = 100_000
+    min_lr: float = 0.0
+
+    def __call__(self, step: jnp.ndarray) -> jnp.ndarray:
+        step = jnp.asarray(step, jnp.float32)
+        warm = self.peak_lr * step / jnp.maximum(1.0, self.warmup_steps)
+        denom = jnp.maximum(1.0, self.total_steps - self.warmup_steps)
+        frac = jnp.clip((step - self.warmup_steps) / denom, 0.0, 1.0)
+        cos = self.min_lr + 0.5 * (self.peak_lr - self.min_lr) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < self.warmup_steps, warm, cos)
+
+
+def constant_schedule(lr: float) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def resolve_schedule(lr: "float | Callable") -> Callable[[jnp.ndarray], jnp.ndarray]:
+    if callable(lr):
+        return lr
+    return constant_schedule(float(lr))

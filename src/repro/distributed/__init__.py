@@ -1,0 +1,7 @@
+from repro.distributed import sharding
+from repro.distributed.compression import (CompressionConfig,
+                                           compress_gradients)
+from repro.distributed.elastic import MeshPlan, build_mesh, plan_remesh
+from repro.distributed.straggler import StragglerConfig, StragglerMonitor
+from repro.distributed.pipeline import (pipeline_apply, split_stages,
+                                        stage_fn_from_layers)

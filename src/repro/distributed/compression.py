@@ -1,0 +1,94 @@
+"""Low-rank gradient compression for data-parallel all-reduce (beyond-paper).
+
+The same randomized-subspace machinery Adapprox uses for optimizer *state*
+also compresses optimizer *communication*: PowerSGD-style (Vogels et al.)
+rank-r compression with error feedback, built on repro.core.srsi.
+
+    g_hat = Q (Q^T g)         Q from one subspace iteration on (g + error)
+    error <- g + error - g_hat            (error feedback keeps it unbiased
+                                           in the long run)
+
+Per-matrix DP all-reduce volume drops from O(mn) to O(r (m + n)) — on the
+production mesh that is the pod-axis (DCN) traffic, the slowest link in the
+system.  Convergence contract is validated in tests/test_compression.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import srsi as S
+from repro.core.types import GradientTransformation
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    rank: int = 8
+    min_dim: int = 128          # compress only matrices with min dim >= this
+    n_iter: int = 1             # subspace iterations (PowerSGD uses 1)
+    seed: int = 0
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CompressionState:
+    step: jnp.ndarray
+    error: Any                  # pytree: error-feedback residuals (or None)
+
+
+def _compressible(shape, min_dim):
+    return len(shape) >= 2 and min(shape[-2], shape[-1]) >= min_dim
+
+
+def compress_gradients(cfg: CompressionConfig) -> GradientTransformation:
+    """A GradientTransformation that replaces each large-matrix gradient by
+    its rank-r approximation (+ error feedback).  Chain it BEFORE the
+    optimizer; in the sharded step the all-reduce then happens on the
+    factors, not the dense gradient."""
+
+    def init(params):
+        err = jax.tree.map(
+            lambda p: (jnp.zeros(p.shape, jnp.float32)
+                       if _compressible(p.shape, cfg.min_dim) else None),
+            params)
+        return CompressionState(step=jnp.zeros((), jnp.int32), error=err)
+
+    def update(grads, state: CompressionState, params):
+        step = state.step + 1
+        base = jax.random.PRNGKey(cfg.seed)
+        key = jax.random.fold_in(base, step)
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_e = treedef.flatten_up_to(state.error)
+
+        out_g, out_e = [], []
+        for i, (g, e) in enumerate(zip(flat_g, flat_e)):
+            if e is None:
+                out_g.append(g)
+                out_e.append(None)
+                continue
+            g32 = g.astype(jnp.float32) + e
+
+            def comp2d(mat, k):
+                res = S.srsi_dense(mat, cfg.rank, 0, cfg.n_iter, k)
+                return res.q @ res.u.T
+
+            from repro.core import factored as F
+            fn = comp2d
+            bd = g32.ndim - 2
+            for _ in range(bd):
+                fn = jax.vmap(fn)
+            keys = F.batched_keys(jax.random.fold_in(key, i),
+                                  g32.shape[:-2])
+            g_hat = fn(g32, keys)
+            out_g.append(g_hat.astype(g.dtype))
+            out_e.append(g32 - g_hat)
+
+        return (jax.tree.unflatten(treedef, out_g),
+                CompressionState(step=step,
+                                 error=jax.tree.unflatten(treedef, out_e)))
+
+    return GradientTransformation(init, update)

@@ -1,0 +1,298 @@
+"""Logical-axis -> mesh-axis sharding rules, per shape-cell kind.
+
+Parallelism map (production mesh (pod, data, model) = (2, 16, 16)):
+
+  * pod   — pure data parallelism between pods (DCN domain: only gradient
+            all-reduce crosses it).
+  * data  — data parallelism + FSDP (params & optimizer states sharded over
+            it; GSPMD all-gathers weights per layer under the scan).
+  * model — tensor parallelism (heads / mlp / vocab / ssm-inner), expert
+            parallelism (MoE), and the sequence axis of KV caches at decode
+            (flash-decoding-style partial softmax).
+
+Rule tables below map each *logical* axis name used by the model zoo to a
+mesh axis per cell kind.  Optimizer-state shardings are derived from the
+param specs (factored Q inherits the row spec, U the column spec — the
+factors of a sharded matrix shard along the same axes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.core import adamw as AW
+from repro.core import factored as F
+from repro.core.adapprox import AdapproxState
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+# --------------------------------------------------------------------------
+# Logical -> mesh rules
+# --------------------------------------------------------------------------
+
+def rules_for(cfg: ModelConfig, kind: str, mesh: Mesh,
+              fsdp: bool = True) -> dict:
+    """kind: train | prefill | decode."""
+    has_data = "data" in mesh.shape
+    fsdp_axis = "data" if (fsdp and has_data and kind == "train") else None
+    # MoE expert stacks always keep FSDP storage (1T-param models don't fit
+    # otherwise); dense weights drop it at decode (latency path).
+    moe_fsdp = "data" if has_data else None
+
+    rules = {
+        # tensor-parallel dims
+        "q_heads": "model", "kv_heads": "model", "mlp": "model",
+        "vocab": "model", "experts_router": "model",
+        "ssm_proj": "model", "ssm_inner": "model", "ssm_conv": "model",
+        # FSDP dim of dense weights
+        "embed": fsdp_axis,
+        # MoE expert stacks: experts -> EP axis, d_model dim -> FSDP
+        "experts": "model",
+        "expert_mlp": None,
+        # stacking dims never shard
+        "layers": None, "shared": None,
+    }
+    return rules
+
+
+def spec_from_axes(axes: tuple, rules: dict) -> P:
+    parts = []
+    for ax in axes:
+        r = rules.get(ax) if ax is not None else None
+        parts.append(r)
+    return P(*parts)
+
+
+def sanitize_spec(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Adjust mesh axes whose size does not divide the dim (jit argument
+    shardings require exact divisibility).  Single axes fall back to
+    replicated; tuple axes reduce to the largest-product contiguous
+    subtuple that divides (e.g. batch 256 over (pod, data, model) = 512
+    devices -> (data, model) = 256, replicated over the pod axis)."""
+
+    def axsize(axes):
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return n
+
+    parts = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            parts.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        if dim % axsize(axes) == 0:
+            parts.append(ax)
+            continue
+        best, best_n = None, 1
+        for i in range(len(axes)):
+            for j in range(i + 1, len(axes) + 1):
+                sub = axes[i:j]
+                n = axsize(sub)
+                if dim % n == 0 and n > best_n:
+                    best, best_n = sub, n
+        parts.append(best if best else None)
+    return P(*parts)
+
+
+def param_shardings(model, mesh: Mesh, kind: str, fsdp: bool = True):
+    """Tree of NamedSharding mirroring params (divisibility-sanitized)."""
+    cfg = model.cfg
+    if getattr(cfg, "parallel_strategy", "tp") == "fsdp":
+        return _fsdp_param_shardings(model, mesh)
+    rules = rules_for(cfg, kind, mesh, fsdp)
+    # expert-stack d_model dim keeps FSDP storage even outside train
+    moe_rules = dict(rules)
+    if "data" in mesh.shape:
+        if kind == "decode":
+            # weights-stationary EP-TP layout (moe_apply_ep_tp): experts
+            # over model, FFN dim over data — zero weight movement/step
+            moe_rules["embed"] = None
+            moe_rules["expert_mlp"] = "data"
+        else:
+            moe_rules["embed"] = "data"
+
+    params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    spec_tree = model.param_specs()
+
+    def one(axes, leaf):
+        table = moe_rules if "experts" in axes or "expert_mlp" in axes \
+            else rules
+        spec = sanitize_spec(spec_from_axes(axes, table), leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    flat_axes = jax.tree.leaves(spec_tree,
+                                is_leaf=lambda x: isinstance(x, tuple))
+    flat_leaves, treedef = jax.tree.flatten(params_struct)
+    return jax.tree.unflatten(
+        treedef, [one(a, l) for a, l in zip(flat_axes, flat_leaves)])
+
+
+def _fsdp_param_shardings(model, mesh: Mesh):
+    """Pure ZeRO-3: every >=2D leaf shards its -2 dim over ALL mesh axes
+    (flattened); 1D leaves shard over the same when divisible.  No tensor
+    parallelism — activations stay fully local, the per-layer weight
+    all-gather is the only collective in the forward."""
+    all_axes = tuple(mesh.shape.keys())
+    params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+    def one(leaf):
+        nd = len(leaf.shape)
+        if nd >= 2:
+            parts = [None] * nd
+            parts[-2] = all_axes
+            spec = P(*parts)
+        elif nd == 1:
+            spec = P(all_axes)
+        else:
+            spec = P()
+        return NamedSharding(mesh, sanitize_spec(spec, leaf.shape, mesh))
+
+    return jax.tree.map(one, params_struct)
+
+
+def param_pspecs(model, mesh: Mesh, kind: str, fsdp: bool = True):
+    shardings = param_shardings(model, mesh, kind, fsdp)
+    return jax.tree.map(lambda s: s.spec, shardings,
+                        is_leaf=lambda s: isinstance(s, NamedSharding))
+
+
+# --------------------------------------------------------------------------
+# Optimizer state shardings
+# --------------------------------------------------------------------------
+
+def _factored_leaf_sharding(pspec: P, mesh: Mesh, has_m1: bool):
+    """Param (…, m, n) with spec (…, a, b):
+    q (…, m, r) -> (…, a, None); u (…, n, r) -> (…, b, None);
+    k/xi (…,) -> batch part; m1 -> param spec."""
+    parts = list(pspec)
+    bd, a, b = parts[:-2], parts[-2], parts[-1]
+    mk = lambda s: NamedSharding(mesh, P(*s))
+    return F.FactoredLeaf(
+        q=mk(bd + [a, None]), u=mk(bd + [b, None]),
+        k=mk(bd), xi=mk(bd),
+        m1=mk(parts) if has_m1 else None)
+
+
+def _dense_leaf_sharding(pspec: P, mesh: Mesh, has_m1: bool):
+    mk = NamedSharding(mesh, pspec)
+    return F.DenseLeaf(v=mk, m1=mk if has_m1 else None)
+
+
+def opt_state_shardings(opt_name: str, state_struct, params_struct,
+                        pspecs_tree, mesh: Mesh):
+    """Build the sharding pytree matching ``opt.init``'s state, from the
+    param PartitionSpecs.  Supports adapprox and adamw (the optimizers used
+    in dry-runs); extend per optimizer as needed."""
+    flat_specs = jax.tree.leaves(pspecs_tree,
+                                 is_leaf=lambda x: isinstance(x, P))
+    rep = NamedSharding(mesh, P())
+    if opt_name == "adapprox":
+        leaves = []
+        for spec, leaf in zip(flat_specs, state_struct.leaves):
+            has_m1 = leaf.m1 is not None
+            if isinstance(leaf, F.FactoredLeaf):
+                leaves.append(_factored_leaf_sharding(spec, mesh, has_m1))
+            else:
+                leaves.append(_dense_leaf_sharding(spec, mesh, has_m1))
+        return AdapproxState(step=rep, key=rep, leaves=tuple(leaves))
+    if opt_name == "adamw":
+        tree = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+        return AW.AdamWState(step=rep, m=tree, v=tree)
+    raise ValueError(f"no state-sharding rule for optimizer {opt_name!r}")
+
+
+# --------------------------------------------------------------------------
+# Activations / batch / cache shardings
+# --------------------------------------------------------------------------
+
+def batch_shardings(cfg: ModelConfig, kind: str, mesh: Mesh,
+                    batch_specs: dict):
+    """tokens (B, S) -> B over dp; under the fsdp strategy the batch
+    spreads over every mesh axis (no TP -> model axis is extra DP)."""
+    if getattr(cfg, "parallel_strategy", "tp") == "fsdp":
+        dp = tuple(mesh.shape.keys())
+    else:
+        dp = dp_axes(mesh)
+    dpp = dp if dp else None
+    seq = None   # chunked attention scans the seq dim; SP would force gathers
+
+    out = {}
+    for name, sds in batch_specs.items():
+        if name == "tokens":
+            spec = P(dpp, seq)
+        else:  # embeds (B, F, D)
+            spec = P(dpp, seq, None)
+        out[name] = NamedSharding(mesh, sanitize_spec(spec, sds.shape, mesh))
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_struct,
+                    long_context: bool):
+    """KV caches: batch over dp, sequence over model (flash-decoding).
+    long_500k (B = 1): sequence over (data, model) — all 256 chips split
+    the cache.  Mamba states: heads over model."""
+    dp = dp_axes(mesh)
+    dpp = dp if dp else None
+    seq_ax = (tuple(dp) + ("model",)) if long_context else "model"
+    b_ax = None if long_context else dpp
+
+    def one(path, leaf):
+        nd = len(leaf.shape)
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        if name.endswith("pos"):
+            return NamedSharding(mesh, P())
+        if "mamba" in name and nd == 5:    # ssm state (L, B, H, P, N)
+            spec = P(None, b_ax, "model", None, None)
+        elif "mamba" in name and nd == 4:  # conv state (L, B, K, C)
+            spec = P(None, b_ax, None, "model")
+        elif "cross" in name and nd == 6:  # whisper (L, 2, B, S_enc, KV, dh)
+            spec = P(None, None, b_ax, "model", None, None)
+        elif nd == 5:                      # kv cache (L, B, S, KV, dh)
+            spec = P(None, b_ax, seq_ax, None, None)
+        else:
+            spec = P()
+        return NamedSharding(mesh, sanitize_spec(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, cache_struct)
+
+
+def make_act_constrainer(mesh: Optional[Mesh], kind: str,
+                         long_context: bool = False,
+                         all_axes_batch: bool = False):
+    """Activation sharding constraints (batch over dp, sequence over model
+    for prefill).  Without these, mixed gather/scatter shardings (embedding
+    lookups) make GSPMD drop the batch sharding and replicate every scan
+    carry — observed +25 GiB/device on qwen2-7b train before this hook."""
+    if mesh is None:
+        return lambda x, *_, **__: x
+    dp = tuple(mesh.shape.keys()) if all_axes_batch else dp_axes(mesh)
+    dpp = (dp if (dp and not long_context) else None)
+    seq = None
+
+    def constrain(x):
+        if not hasattr(x, "ndim") or x.ndim not in (2, 3):
+            return x
+        spec = P(dpp, seq, None) if x.ndim == 3 else P(dpp, seq)
+        spec = sanitize_spec(spec, x.shape, mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+def logits_sharding(mesh: Mesh, long_context: bool = False):
+    dp = dp_axes(mesh)
+    return NamedSharding(mesh, P(dp if (dp and not long_context) else None,
+                                 None, "model"))

@@ -1,0 +1,75 @@
+"""Straggler detection & mitigation hooks.
+
+On a real multi-pod job, stragglers show up as step-time outliers on
+specific hosts.  The policy layer here is runnable anywhere (and unit
+tested with synthetic timings); the actuation hooks are where a cluster
+integration plugs in.
+
+Detection: robust z-score (median / MAD) over a sliding window of per-step
+(or per-host) durations.  Mitigation ladder:
+  1. log + export metric (always),
+  2. re-shuffle data assignment away from the slow host (cheap),
+  3. request replacement + checkpoint-restart (the elastic path,
+     distributed/elastic.py) when slowness persists.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import statistics
+import time
+from typing import Callable, Deque, Optional
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    window: int = 50              # sliding window of step times
+    z_thresh: float = 4.0         # robust z-score to flag
+    persist: int = 10             # consecutive flags before escalation
+    min_steps: int = 20           # warmup before judging
+
+
+class StragglerMonitor:
+    def __init__(self, cfg: StragglerConfig = StragglerConfig(),
+                 escalate: Optional[Callable[[str], None]] = None):
+        self.cfg = cfg
+        self.times: Deque[float] = collections.deque(maxlen=cfg.window)
+        self.flags = 0
+        self.escalations: list[str] = []
+        self._escalate = escalate or self.escalations.append
+        self._t0: Optional[float] = None
+
+    # -- timing helpers -----------------------------------------------------
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> float:
+        dt = time.perf_counter() - self._t0
+        self.observe(dt)
+        return dt
+
+    # -- policy ---------------------------------------------------------------
+    def observe(self, step_time: float) -> bool:
+        """Feed one step duration; returns True if this step is flagged."""
+        flagged = False
+        if len(self.times) >= self.cfg.min_steps:
+            med = statistics.median(self.times)
+            mad = statistics.median(abs(t - med) for t in self.times) + 1e-9
+            z = 0.6745 * (step_time - med) / mad
+            flagged = z > self.cfg.z_thresh
+        self.times.append(step_time)
+        if flagged:
+            self.flags += 1
+            if self.flags >= self.cfg.persist:
+                self._escalate(
+                    f"straggler persisted {self.flags} steps "
+                    f"(last={step_time:.3f}s median="
+                    f"{statistics.median(self.times):.3f}s)")
+                self.flags = 0
+        else:
+            self.flags = 0
+        return flagged
+
+    @property
+    def median(self) -> float:
+        return statistics.median(self.times) if self.times else 0.0

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  lowrank_update — fused Adapprox V-reconstruct + elementwise update
+  srsi_matmul    — fused (G*G) @ X sketch matmul
+  flash_attention— causal/GQA online-softmax attention
+  ssd_chunk      — Mamba2 SSD intra-chunk fusion
+
+Use via repro.kernels.ops (wrappers with padding/batching/platform
+dispatch); every kernel has a pure-jnp oracle in ref.py or the model zoo.
+"""
+from repro.kernels import ops

@@ -1,0 +1,164 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Responsibilities: padding to block multiples, dtype handling, platform
+dispatch (TPU -> compiled Pallas; CPU -> interpret mode for tests, or the
+pure-jnp reference for speed), and batching via vmap.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.lowrank_update import lowrank_update_pallas
+from repro.kernels.srsi_matmul import sq_matmul_pallas
+
+# Mode: "auto" (pallas on TPU, ref elsewhere), "pallas" (force, interpret on
+# CPU — used by kernel tests), "ref" (force reference).
+_MODE = "auto"
+
+
+def set_mode(mode: str) -> None:
+    global _MODE
+    assert mode in ("auto", "pallas", "ref")
+    _MODE = mode
+
+
+def _use_pallas() -> tuple[bool, bool]:
+    """-> (use_pallas, interpret)"""
+    platform = jax.default_backend()
+    if _MODE == "ref":
+        return False, False
+    if _MODE == "pallas":
+        return True, platform != "tpu"
+    return platform == "tpu", False
+
+
+def _pad_to(x: jnp.ndarray, mult: int, axis: int) -> jnp.ndarray:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _pick_block(dim: int, target: int = 256, align: int = 8) -> int:
+    """Largest block <= target that keeps padding waste < ~2x for tiny dims."""
+    if dim >= target:
+        return target
+    # round tiny dims up to the alignment quantum
+    return max(align, ((dim + align - 1) // align) * align)
+
+
+def lowrank_update(q: jnp.ndarray, u: jnp.ndarray, g: jnp.ndarray,
+                   b2: float, eps: float,
+                   with_frob: bool = False):
+    """Fused V-reconstruct + elementwise update (see ref.lowrank_update).
+
+    Accepts arbitrary leading batch dims on (q, u, g) jointly.
+    """
+    use, interp = _use_pallas()
+
+    def one(q2, u2, g2):
+        if not use:
+            out, fro = ref.lowrank_update(q2, u2, g2, b2, eps)
+            return out, fro
+        m, n = g2.shape
+        bm, bn = _pick_block(m), _pick_block(n)
+        # r padded to a lane multiple so the MXU tile is aligned.
+        qp = _pad_to(_pad_to(q2.astype(jnp.float32), bm, 0), 128, 1)
+        up = _pad_to(_pad_to(u2.astype(jnp.float32), bn, 0), 128, 1)
+        gp = _pad_to(_pad_to(g2, bm, 0), bn, 1)
+        out, fro = lowrank_update_pallas(qp, up, gp,
+                                         jnp.asarray(b2), jnp.asarray(eps),
+                                         bm=bm, bn=bn, interpret=interp)
+        return out[:m, :n], fro
+
+    fn = one
+    for _ in range(g.ndim - 2):
+        fn = jax.vmap(fn)
+    out, fro = fn(q, u, g)
+    return (out, fro) if with_frob else out
+
+
+def sq_matmul(g: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """(G*G) @ X with G^2 fused (see ref.sq_matmul)."""
+    use, interp = _use_pallas()
+
+    def one(g2, x2):
+        if not use:
+            return ref.sq_matmul(g2, x2)
+        m, n = g2.shape
+        s = x2.shape[1]
+        bm, bn = _pick_block(m), _pick_block(n)
+        gp = _pad_to(_pad_to(g2, bm, 0), bn, 1)
+        xp = _pad_to(_pad_to(x2.astype(jnp.float32), bn, 0), 128, 1)
+        y = sq_matmul_pallas(gp, xp, bm=bm, bn=bn, interpret=interp)
+        return y[:m, :s]
+
+    fn = one
+    for _ in range(g.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(g, x)
+
+
+def sq_matmul_t(g: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """(G*G)^T @ Y — implemented as sq_matmul on the transpose (the Pallas
+    grid then streams G^T tiles; layout cost is folded into the same
+    kernel)."""
+    def one(g2, y2):
+        return sq_matmul(g2.T, y2)
+
+    fn = one
+    for _ in range(g.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(g, y)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, bq: int = 512,
+                    bk: int = 512) -> jnp.ndarray:
+    """Flash attention for model-layout tensors.
+
+    q: (B, Sq, H, dh), k/v: (B, Sk, KV, dh) with H % KV == 0 (GQA groups
+    broadcast).  Pads dh to 128 lanes and folds (B, H) into the kernel
+    grid.  On non-TPU backends runs the kernel in interpret mode ("pallas"
+    test mode) or falls back to the reference (auto).
+    """
+    use, interp = _use_pallas()
+    b, sq, h, dh = q.shape
+    kv = k.shape[2]
+    groups = h // kv
+    kx = jnp.repeat(k, groups, axis=2)
+    vx = jnp.repeat(v, groups, axis=2)
+
+    if not use:
+        # reference path via plain softmax attention
+        s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                       kx.astype(jnp.float32)) / jnp.sqrt(float(dh))
+        if causal:
+            sk = kx.shape[1]
+            mask = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
+            s = jnp.where(mask[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), vx)
+
+    dh_pad = (-dh) % 128
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, dh_pad)))
+    kp = jnp.pad(kx, ((0, 0), (0, 0), (0, 0), (0, dh_pad)))
+    vp = jnp.pad(vx, ((0, 0), (0, 0), (0, 0), (0, dh_pad)))
+    # (B, S, H, dh) -> (B*H, S, dh)
+    fold = lambda t: jnp.moveaxis(t, 2, 1).reshape(b * h, t.shape[1],
+                                                   dh + dh_pad)
+    bq_eff = min(bq, sq)
+    bk_eff = min(bk, kx.shape[1])
+    out = flash_attention_pallas(fold(qp), fold(kp), fold(vp),
+                                 causal=causal, bq=bq_eff, bk=bk_eff,
+                                 interpret=interp,
+                                 scale=1.0 / (dh ** 0.5))
+    out = out.reshape(b, h, sq, dh + dh_pad)[:, :, :, :dh]
+    return jnp.moveaxis(out, 1, 2)

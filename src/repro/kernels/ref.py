@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: kernel tests sweep shapes/dtypes and
+assert_allclose against these, and ``ops.py`` falls back to them on
+platforms without Pallas TPU lowering.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lowrank_update(q: jnp.ndarray, u: jnp.ndarray, g: jnp.ndarray,
+                   b2: float, eps: float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused Adapprox elementwise update.
+
+        V    = b2 * max(Q @ U^T, 0) + (1 - b2) * G^2
+        out  = G / (sqrt(V) + eps)
+        vfro = ||V||_F^2                      (needed by adaptive rank)
+
+    q: (m, r) f32, u: (n, r) f32, g: (m, n) any float.
+    Returns (out: (m, n) f32, vfro: () f32).
+    """
+    g32 = g.astype(jnp.float32)
+    v = (b2 * jnp.maximum(q.astype(jnp.float32) @ u.astype(jnp.float32).T, 0.0)
+         + (1.0 - b2) * g32 * g32)
+    out = g32 / (jnp.sqrt(v) + eps)
+    return out, jnp.sum(v * v)
+
+
+def sq_matmul(g: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Y = (G * G) @ X without materialising G^2.
+
+    g: (m, n), x: (n, s) -> (m, s) f32.  The hot matvec of the implicit
+    second-moment operator in S-RSI.
+    """
+    g32 = g.astype(jnp.float32)
+    return (g32 * g32) @ x.astype(jnp.float32)
+
+
+def sq_matmul_t(g: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Z = (G * G)^T @ Y.   g: (m, n), y: (m, s) -> (n, s) f32."""
+    g32 = g.astype(jnp.float32)
+    return (g32 * g32).T @ y.astype(jnp.float32)

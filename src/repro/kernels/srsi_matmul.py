@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: fused square-and-matmul for the implicit S-RSI operator.
+
+    Y = (G * G) @ X          (m, n) x (n, s) -> (m, s)
+
+``G**2`` is formed tile-by-tile in VMEM and fed straight to the MXU —
+it never exists in HBM.  In the implicit second-moment operator
+
+    V @ X = b2 * Q (U^T X) + (1 - b2) * (G*G) @ X
+
+the low-rank half is a skinny matmul XLA handles well; this kernel covers
+the dense half, which dominates (O(m n s) flops, O(m n) bytes).
+
+Grid: (m/bm, n/bn) with accumulation over the contraction axis j (TPU grids
+iterate sequentially, so the output block indexed by i alone is revisited
+across j — initialised at j == 0, accumulated afterwards).  ``s`` (the
+sketch width k + p) stays whole: it is <= a few hundred, so an (bm, s) f32
+accumulator tile fits VMEM alongside the (bm, bn) G tile and (bn, s) X tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(g_ref, x_ref, y_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    g = g_ref[...].astype(jnp.float32)          # (bm, bn)
+    x = x_ref[...].astype(jnp.float32)          # (bn, s)
+    y_ref[...] += jax.lax.dot_general(
+        g * g, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def sq_matmul_pallas(g: jnp.ndarray, x: jnp.ndarray, bm: int = 256,
+                     bn: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """g: (m, n), x: (n, s); m % bm == 0, n % bn == 0 (ops.py pads)."""
+    m, n = g.shape
+    s = x.shape[1]
+    return pl.pallas_call(
+        _kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, s), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, s), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, s), jnp.float32),
+        interpret=interpret,
+    )(g, x)

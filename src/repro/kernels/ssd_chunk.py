@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: fused Mamba2/SSD intra-chunk block.
+
+Per (batch, chunk) program, computes in one VMEM residency:
+
+    S      = C X ... specifically  CB = C @ (dt*B)^T          (q, q)
+    L      = tril(exp(cums_i - cums_j))                        (q, q)
+    Y_intra= (CB * L) @ X                                      (q, p)
+    Y_inter= exp(cums) * (C @ h_in)                            (q, p)
+    Y      = Y_intra + Y_inter + d_skip * X
+
+which is the matmul-heavy heart of the SSD algorithm (models/mamba2.py).
+The jnp path materialises the (nc, q, q, H) decay and CB tensors in HBM —
+at 32k context that is ~4 GB per layer; here they live only as (q, q)
+VMEM tiles per head.
+
+The inter-chunk state recurrence (tiny: nc sequential steps over
+(H, N, P) states) stays in jnp `lax.scan` — it is latency-, not
+throughput-bound, and supplies `h_in` per chunk as a kernel input.
+
+Grid: (batch * n_chunks, heads).  Blocks per program:
+x (q, p), b/c (q, n), cums/dt (q,), h_in (n, p) — with q = 256, p = 64,
+n = 128: VMEM ~ (256*64*3 + 256*128*2 + 256*256) * 4 B ~ 0.7 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, b_ref, c_ref, dt_ref, cums_ref, hin_ref, dskip_ref,
+            y_ref):
+    x = x_ref[0, 0, :, :].astype(jnp.float32)        # (q, p)
+    b = b_ref[0, 0, :, :].astype(jnp.float32)        # (q, n)
+    c = c_ref[0, 0, :, :].astype(jnp.float32)        # (q, n)
+    dt = dt_ref[0, 0, :].astype(jnp.float32)         # (q,)
+    cums = cums_ref[0, 0, :].astype(jnp.float32)     # (q,)
+    h_in = hin_ref[0, 0, :, :].astype(jnp.float32)   # (n, p)
+    dskip = dskip_ref[:]                             # (1,)
+
+    q = x.shape[0]
+    bx = b * dt[:, None]
+    cb = jax.lax.dot_general(c, bx, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (q, q)
+    diff = cums[:, None] - cums[None, :]
+    iot_i = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    iot_j = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    ldec = jnp.where(iot_j <= iot_i, jnp.exp(diff), 0.0)
+    y_intra = jax.lax.dot_general(cb * ldec, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_inter = jnp.exp(cums)[:, None] * jax.lax.dot_general(
+        c, h_in, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y_ref[0, 0, :, :] = (y_intra + y_inter
+                         + dskip[0] * x).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_pallas(x, b, c, dt, cums, h_in, d_skip,
+                     interpret: bool = False):
+    """x: (BC, H, q, p); b, c: (BC, H, q, n); dt, cums: (BC, H, q);
+    h_in: (BC, H, n, p); d_skip: (H,) — BC = batch * n_chunks flattened.
+    Returns y: (BC, H, q, p)."""
+    bc, h, q, p = x.shape
+    n = b.shape[-1]
+    return pl.pallas_call(
+        _kernel,
+        grid=(bc, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, q), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, q), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q, p), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bc, h, q, p), jnp.float32),
+        interpret=interpret,
+    )(x, b, c, dt, cums, h_in, d_skip)

@@ -1,0 +1,77 @@
+"""Training driver CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gpt2-117m --smoke \
+        --steps 200 --optimizer adapprox --ckpt-dir /tmp/ckpt
+
+``--smoke`` trains the reduced config on CPU; without it the full config is
+built (requires real accelerators + the production mesh).  All the
+fault-tolerance machinery (atomic async checkpoints, preemption flush,
+restart-resume, straggler monitor) is active either way.
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+
+from repro.checkpoint import CheckpointConfig
+from repro.configs import get_config, get_smoke_config
+from repro.core import Schedule, make_optimizer
+from repro.data import DataConfig
+from repro.models import build_model
+from repro.train import LoopConfig, train
+
+
+def build_optimizer(name: str, steps: int, lr: float):
+    sched = Schedule(lr, warmup_steps=max(steps // 20, 5), total_steps=steps,
+                     min_lr=lr / 6)
+    if name == "adapprox":
+        return make_optimizer("adapprox", lr=sched, b1=0.9, weight_decay=0.1,
+                              k_init=1, k_max=128, mode="paper",
+                              xi_thresh=0.01, delta_s=10, min_dim_factor=64)
+    if name in ("adamw", "adafactor", "came"):
+        return make_optimizer(name, lr=sched, weight_decay=0.1,
+                              **({"b1": 0.9} if name == "adafactor" else {}))
+    raise ValueError(name)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt2-117m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--optimizer", default="adapprox")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=20)
+    args = ap.parse_args(argv)
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(levelname)s %(message)s")
+    cfg = (get_smoke_config(args.arch, max_seq_len=args.seq)
+           if args.smoke else get_config(args.arch))
+    model = build_model(cfg)
+    opt = build_optimizer(args.optimizer, args.steps, args.lr)
+    data_cfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                          global_batch=args.batch)
+    ckpt = (CheckpointConfig(directory=args.ckpt_dir,
+                             save_every=args.ckpt_every)
+            if args.ckpt_dir else None)
+    state, history = train(
+        model, opt, data_cfg,
+        LoopConfig(total_steps=args.steps, log_every=args.log_every,
+                   ckpt=ckpt),
+        install_signal_handler=ckpt is not None)
+    if history:
+        print(f"final loss: {history[-1]['loss']:.4f} "
+              f"({history[-1]['step_time_s'] * 1e3:.0f} ms/step)")
+    return state
+
+
+if __name__ == "__main__":
+    main()

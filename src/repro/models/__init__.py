@@ -1,0 +1,4 @@
+"""Model zoo: dense/GQA transformer, MoE, Mamba2/SSD, Zamba2 hybrid,
+Whisper enc-dec, and VLM backbone — all functional JAX with scan-stacked
+layers and logical-axis param specs."""
+from repro.models.model_zoo import build_model

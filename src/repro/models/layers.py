@@ -1,0 +1,206 @@
+"""Shared neural-net building blocks (functional, no framework).
+
+Parameters are nested dicts of arrays.  Alongside every ``init`` there is a
+``*_specs`` tree with the same structure whose leaves are tuples of *logical
+axis names* (strings or None); repro.distributed.sharding maps logical axes
+to mesh axes per shape-cell.  Keeping weights 2D ``(in, out)`` (heads
+flattened) matches how the Adapprox paper (and PyTorch) sees parameter
+matrices, so the factored-optimizer policy applies to the same shapes the
+paper measured.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Param creation
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, scale: Optional[float] = None,
+               dtype=jnp.float32) -> jnp.ndarray:
+    scale = scale if scale is not None else (1.0 / math.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+               eps: float) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def make_norm_params(cfg, d: int) -> dict:
+    if cfg.norm == "layernorm":
+        return {"w": jnp.ones((d,), jnp.float32),
+                "b": jnp.zeros((d,), jnp.float32)}
+    return {"w": jnp.ones((d,), jnp.float32)}
+
+
+def norm_specs(cfg) -> dict:
+    if cfg.norm == "layernorm":
+        return {"w": ("embed",), "b": ("embed",)}
+    return {"w": ("embed",)}
+
+
+def apply_norm(cfg, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["w"], p["b"], cfg.norm_eps)
+    return rms_norm(x, p["w"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Activations / MLP
+# ---------------------------------------------------------------------------
+
+def _act(name: str, x: jnp.ndarray) -> jnp.ndarray:
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    if name == "silu":
+        return jax.nn.silu(x)
+    raise ValueError(name)
+
+
+def mlp_init(key, cfg, d: int, f: int) -> dict:
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        p = {"w_gate": dense_init(ks[0], d, f),
+             "w_up": dense_init(ks[1], d, f),
+             "w_down": dense_init(ks[2], f, d)}
+    else:
+        p = {"w_up": dense_init(ks[0], d, f),
+             "w_down": dense_init(ks[1], f, d)}
+    if cfg.mlp_bias:
+        p["b_up"] = jnp.zeros((f,), jnp.float32)
+        p["b_down"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def mlp_specs(cfg) -> dict:
+    if cfg.act == "swiglu":
+        s = {"w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"),
+             "w_down": ("mlp", "embed")}
+    else:
+        s = {"w_up": ("embed", "mlp"), "w_down": ("mlp", "embed")}
+    if cfg.mlp_bias:
+        s["b_up"] = ("mlp",)
+        s["b_down"] = ("embed",)
+    return s
+
+
+def mlp_apply(cfg, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    dt = x.dtype
+    if cfg.act == "swiglu":
+        gate = x @ p["w_gate"].astype(dt)
+        up = x @ p["w_up"].astype(dt)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = x @ p["w_up"].astype(dt)
+        if cfg.mlp_bias:
+            h = h + p["b_up"].astype(dt)
+        h = _act(cfg.act, h)
+    out = h @ p["w_down"].astype(dt)
+    if cfg.mlp_bias and "b_down" in p:
+        out = out + p["b_down"].astype(dt)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., S, H, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos = jnp.cos(angles)[..., :, None, :]              # (..., S, 1, dh/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., ::2], x32[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits: jnp.ndarray, targets: jnp.ndarray,
+                 mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean token-level cross entropy.  logits (..., V) f32-upcast."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def fused_xent_from_hidden(x: jnp.ndarray, head: jnp.ndarray,
+                           targets: jnp.ndarray,
+                           chunk: int = 512) -> jnp.ndarray:
+    """Cross entropy computed from the pre-head hiddens in sequence
+    chunks, with the per-chunk logits rematerialised in the backward —
+    the (B, S, V) f32 logits tensor (GBs at 100k-vocab) never exists.
+
+    x: (B, S, D); head: (D, V); targets: (B, S) — returns mean nll over
+    the first S-1 positions (next-token objective).
+    """
+    b, s, d = x.shape
+    s_eff = s - 1
+    n_chunks = max(1, (s_eff + chunk - 1) // chunk)
+    pad = n_chunks * chunk - s_eff
+    xs = jnp.pad(x[:, :s_eff, :], ((0, 0), (0, pad), (0, 0)))
+    ts = jnp.pad(targets[:, 1:s_eff + 1], ((0, 0), (0, pad)))
+    msk = jnp.pad(jnp.ones((b, s_eff), jnp.float32), ((0, 0), (0, pad)))
+    xs = xs.reshape(b, n_chunks, chunk, d)
+    ts = ts.reshape(b, n_chunks, chunk)
+    msk = msk.reshape(b, n_chunks, chunk)
+
+    @jax.checkpoint
+    def chunk_nll(xc, tc, mc):
+        logits = (xc @ head.astype(xc.dtype)).astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return jnp.sum((logz - gold) * mc)
+
+    def body(acc, i):
+        return acc + chunk_nll(xs[:, i], ts[:, i], msk[:, i]), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                            jnp.arange(n_chunks))
+    return total / (b * s_eff)

@@ -1,0 +1,245 @@
+"""Mamba2 / SSD (state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD algorithm: the sequence is split into chunks of length Q; the
+intra-chunk part is a masked (C B^T) X batched matmul (MXU-friendly — this
+is the whole point of SSD over Mamba1's elementwise scan) and the
+inter-chunk part is a tiny state recurrence over ``S/Q`` steps carried by
+``lax.scan``.  Decode is the O(1)-per-token state update.
+
+State caches (the sub-quadratic long-context story):
+    conv_state: (B, d_conv, conv_dim)    rolling input window
+    ssm_state:  (B, H, P, N)             recurrent state
+— constant in sequence length, which is why mamba2/zamba2 run the
+``long_500k`` cell that pure-attention archs must skip.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def mamba_init(key, cfg) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, nh, conv_dim = _dims(cfg)
+    d_in_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + nh
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": L.dense_init(ks[0], d, d_in_proj),
+        "conv_w": (jax.random.normal(ks[1], (conv_dim, s.d_conv))
+                   * (1.0 / math.sqrt(s.d_conv))).astype(jnp.float32),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "a_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (nh,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))),
+        "norm_w": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": L.dense_init(ks[3], d_inner, d),
+    }
+
+
+def mamba_specs(cfg) -> dict:
+    return {"in_proj": ("embed", "ssm_proj"), "conv_w": ("ssm_conv", None),
+            "conv_b": ("ssm_conv",), "a_log": (None,), "d_skip": (None,),
+            "dt_bias": (None,), "norm_w": ("ssm_inner",),
+            "out_proj": ("ssm_inner", "embed")}
+
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray     # (B, d_conv, conv_dim)
+    ssm: jnp.ndarray      # (B, H, P, N) float32
+
+
+def init_mamba_cache(batch: int, cfg, dtype) -> MambaCache:
+    s = cfg.ssm
+    d_inner, nh, conv_dim = _dims(cfg)
+    return MambaCache(
+        conv=jnp.zeros((batch, s.d_conv, conv_dim), dtype),
+        ssm=jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32))
+
+
+def _split_proj(cfg, zxbcdt):
+    s = cfg.ssm
+    d_inner, nh, conv_dim = _dims(cfg)
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+    return z, xbc, dt
+
+
+def _split_xbc(cfg, xbc):
+    s = cfg.ssm
+    d_inner, _, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    xs, b, c = jnp.split(xbc, [d_inner, d_inner + gn], axis=-1)
+    return xs, b, c
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv. xbc: (B, S, C), w: (C, K)."""
+    k = w.shape[1]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    # stack K shifted views: out[t] = sum_j w[:, j] * x[t - (K-1) + j]
+    views = jnp.stack([pad[:, j:j + xbc.shape[1], :] for j in range(k)],
+                      axis=-1)                       # (B, S, C, K)
+    out = jnp.einsum("bsck,ck->bsc", views.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    return jax.nn.silu(out + b).astype(xbc.dtype)
+
+
+def _expand_groups(x, n_heads, n_groups):
+    """(B, S, G, N) -> (B, S, H, N) by repeating each group."""
+    rep = n_heads // n_groups
+    return jnp.repeat(x, rep, axis=2)
+
+
+def ssd_chunked(xs, b, c, dt, a, chunk: int):
+    """Chunked SSD.
+
+    xs: (Bt, S, H, P); b, c: (Bt, S, H, N); dt: (Bt, S, H); a: (H,) < 0.
+    Returns y: (Bt, S, H, P) and final state (Bt, H, P, N).
+    """
+    bt, s, h, p = xs.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, f"seq {s} not a multiple of chunk {q}"
+    nc = s // q
+
+    def r(t, shape):
+        return t.reshape((bt, nc, q) + shape)
+
+    xs_c = r(xs, (h, p))
+    b_c = r(b, (h, n))
+    c_c = r(c, (h, n))
+    da = (dt * a[None, None, :])                     # (Bt, S, H), <= 0
+    da_c = r(da, (h,))                               # (Bt, nc, q, H)
+    cums = jnp.cumsum(da_c, axis=2)                  # within-chunk cumsum
+
+    # decay matrix L[i, j] = exp(cums[i] - cums[j]) for i >= j else 0
+    diff = cums[:, :, :, None, :] - cums[:, :, None, :, :]  # (Bt,nc,q,q,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    ldec = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+
+    bx = b_c * dt[..., None].reshape(bt, nc, q, h, 1)  # dt-weighted B
+
+    # intra-chunk: Y[i] = sum_{j<=i} L[i,j] (C_i . B_j) X_j
+    cb = jnp.einsum("zcihn,zcjhn->zcijh", c_c.astype(jnp.float32),
+                    bx.astype(jnp.float32))
+    y_intra = jnp.einsum("zcijh,zcjhp->zcihp", cb * ldec,
+                         xs_c.astype(jnp.float32))
+
+    # per-chunk state contribution: S_c = sum_i exp(cums[-1]-cums[i]) Bx_i X_i
+    decay_to_end = jnp.exp(cums[:, :, -1:, :] - cums)          # (Bt,nc,q,H)
+    s_chunk = jnp.einsum("zcqh,zcqhn,zcqhp->zchnp",
+                         decay_to_end, bx.astype(jnp.float32),
+                         xs_c.astype(jnp.float32))
+    chunk_decay = jnp.exp(cums[:, :, -1, :])                   # (Bt,nc,H)
+
+    # inter-chunk recurrence over nc steps
+    def scan_body(hstate, inp):
+        s_c, dec = inp                       # (Bt,h,n,p), (Bt,h)
+        out = hstate                         # state entering the chunk
+        hstate = hstate * dec[:, :, None, None] + s_c
+        return hstate, out
+
+    s_seq = jnp.moveaxis(s_chunk, 1, 0)      # (nc, Bt, h, n, p)
+    d_seq = jnp.moveaxis(chunk_decay, 1, 0)  # (nc, Bt, h)
+    h0 = jnp.zeros((bt, h, n, p), jnp.float32)
+    h_final, h_in = jax.lax.scan(scan_body, h0, (s_seq, d_seq))
+    h_in = jnp.moveaxis(h_in, 0, 1)          # (Bt, nc, h, n, p)
+
+    # inter-chunk output: Y_inter[i] = exp(cums[i]) * C_i . h_in
+    y_inter = jnp.einsum("zcqh,zcqhn,zchnp->zcqhp",
+                         jnp.exp(cums), c_c.astype(jnp.float32), h_in)
+
+    y = (y_intra + y_inter).reshape(bt, s, h, p)
+    # final state stored as (Bt, H, P, N)
+    return y, jnp.moveaxis(h_final, -1, -2)
+
+
+def mamba_apply(cfg, p, x, cache: MambaCache | None = None):
+    """Full-sequence forward.  Returns (out, new_cache | None)."""
+    s_cfg = cfg.ssm
+    bt, s, d = x.shape
+    d_inner, nh, conv_dim = _dims(cfg)
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, b, c = _split_xbc(cfg, xbc_conv)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])        # (Bt,S,H)
+    a = -jnp.exp(p["a_log"])                                   # (H,)
+
+    xs = xs.reshape(bt, s, nh, s_cfg.head_dim)
+    b = _expand_groups(b.reshape(bt, s, s_cfg.n_groups, s_cfg.d_state),
+                       nh, s_cfg.n_groups)
+    c = _expand_groups(c.reshape(bt, s, s_cfg.n_groups, s_cfg.d_state),
+                       nh, s_cfg.n_groups)
+
+    y, h_final = ssd_chunked(xs, b, c, dt, a, s_cfg.chunk)
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bt, s, d_inner).astype(x.dtype)
+
+    # gated RMSNorm then output projection
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+
+    new_cache = None
+    if cache is not None:
+        tail = xbc[:, -s_cfg.d_conv:, :]
+        pad = s_cfg.d_conv - tail.shape[1]
+        if pad > 0:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        new_cache = MambaCache(conv=tail.astype(cache.conv.dtype),
+                               ssm=h_final)
+    return out, new_cache
+
+
+def mamba_decode(cfg, p, x, cache: MambaCache):
+    """One-token step. x: (B, 1, D)."""
+    s_cfg = cfg.ssm
+    bt = x.shape[0]
+    d_inner, nh, conv_dim = _dims(cfg)
+    zxbcdt = x[:, 0, :] @ p["in_proj"].astype(x.dtype)         # (B, d_proj)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+
+    conv_buf = jnp.concatenate(
+        [cache.conv[:, 1:, :], xbc[:, None, :].astype(cache.conv.dtype)],
+        axis=1)                                                # (B, K, C)
+    xbc_c = jnp.einsum("bkc,ck->bc", conv_buf.astype(jnp.float32),
+                       p["conv_w"].astype(jnp.float32))
+    xbc_c = jax.nn.silu(xbc_c + p["conv_b"]).astype(x.dtype)
+    xs, b, c = _split_xbc(cfg, xbc_c)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])
+    a = -jnp.exp(p["a_log"])
+    dec = jnp.exp(dt * a[None, :])                             # (B, H)
+
+    xs = xs.reshape(bt, nh, s_cfg.head_dim).astype(jnp.float32)
+    b = _expand_groups(b.reshape(bt, 1, s_cfg.n_groups, s_cfg.d_state),
+                       nh, s_cfg.n_groups)[:, 0]
+    c = _expand_groups(c.reshape(bt, 1, s_cfg.n_groups, s_cfg.d_state),
+                       nh, s_cfg.n_groups)[:, 0]
+
+    # h <- h * dec + dt * x (outer) B
+    h = cache.ssm * dec[:, :, None, None] + (
+        dt[:, :, None, None] * xs[:, :, :, None] * b[:, :, None, :])
+    y = jnp.einsum("bhpn,bhn->bhp", h, c)
+    y = y + p["d_skip"][None, :, None] * xs
+    y = y.reshape(bt, d_inner).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = (y @ p["out_proj"].astype(x.dtype))[:, None, :]
+    return out, MambaCache(conv=conv_buf, ssm=h)

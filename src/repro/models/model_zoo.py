@@ -1,0 +1,44 @@
+"""Model registry: family -> implementation class.
+
+``build_model(cfg, mesh)`` returns an object exposing the uniform API:
+    init(key) -> params
+    param_specs() -> logical-axis tree mirroring params
+    forward(params, tokens, embeds=None) -> (logits, aux)
+    loss(params, batch) -> (scalar, metrics)
+    init_cache(batch, cache_len) -> cache
+    prefill(params, tokens, cache[, embeds]) -> (logits, cache)
+    decode_step(params, cache, tokens) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from repro.config import ModelConfig
+from repro.models.ssm_lm import SSMLM
+from repro.models.transformer import TransformerLM
+from repro.models.whisper import EncDecLM
+from repro.models.zamba2 import HybridLM
+
+_FAMILIES = {
+    "dense": TransformerLM,
+    "moe": TransformerLM,
+    "vlm": TransformerLM,
+    "ssm": SSMLM,
+    "hybrid": HybridLM,
+    "encdec": EncDecLM,
+}
+
+
+def build_model(cfg: ModelConfig, mesh=None):
+    try:
+        cls = _FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown model family {cfg.family!r}; "
+                         f"available: {sorted(_FAMILIES)}") from None
+    model = cls(cfg, mesh=mesh)
+    if cfg.param_dtype != "float32":
+        import jax
+        import jax.numpy as jnp
+        dt = jnp.dtype(cfg.param_dtype)
+        inner = model.init
+        model.init = lambda key: jax.tree.map(
+            lambda p: p.astype(dt), inner(key))
+    return model

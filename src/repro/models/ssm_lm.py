@@ -1,0 +1,100 @@
+"""Pure SSM language model (mamba2-370m): attention-free Mamba2 stack."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+
+
+class SSMLM:
+    def __init__(self, cfg: ModelConfig, mesh=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.constrain = lambda x: x
+
+    def init(self, key):
+        cfg = self.cfg
+        ke, km, kh = jax.random.split(key, 3)
+        mkeys = jax.random.split(km, cfg.n_layers)
+
+        def init_layer(k):
+            return {"norm": L.make_norm_params(cfg, cfg.d_model),
+                    "mamba": M.mamba_init(k, cfg)}
+
+        return {"embed": L.embed_init(ke, cfg.vocab, cfg.d_model),
+                "layers": jax.vmap(init_layer)(mkeys),
+                "final_norm": L.make_norm_params(cfg, cfg.d_model),
+                "lm_head": L.dense_init(kh, cfg.d_model, cfg.vocab,
+                                        scale=0.02)}
+
+    def param_specs(self):
+        cfg = self.cfg
+        layer = {"norm": L.norm_specs(cfg), "mamba": M.mamba_specs(cfg)}
+        return {
+            "embed": ("vocab", "embed"),
+            "layers": jax.tree.map(lambda a: ("layers",) + tuple(a), layer,
+                                   is_leaf=lambda x: isinstance(x, tuple)),
+            "final_norm": L.norm_specs(cfg),
+            "lm_head": ("embed", "vocab"),
+        }
+
+    def _scan(self, params, x, caches):
+        cfg = self.cfg
+
+        def body(x, xs):
+            lp, mc = xs
+            h = L.apply_norm(cfg, lp["norm"], x)
+            if mc is None:
+                mo, _ = M.mamba_apply(cfg, lp["mamba"], h)
+                new_mc = mc
+            elif x.shape[1] > 1:
+                mo, new_mc = M.mamba_apply(cfg, lp["mamba"], h, mc)
+            else:
+                mo, new_mc = M.mamba_decode(cfg, lp["mamba"], h, mc)
+            return self.constrain(x + mo), new_mc
+
+        if cfg.remat != "none" and caches is None:
+            body = jax.checkpoint(body)
+        return jax.lax.scan(body, x, (params["layers"], caches))
+
+    def forward(self, params, tokens, embeds=None):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = self.constrain(params["embed"].astype(dt)[tokens])
+        x, _ = self._scan(params, x, None)
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        return x @ params["lm_head"].astype(dt), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        logits, _ = self.forward(params, batch["tokens"])
+        ce = L.softmax_xent(logits[:, :-1, :], batch["tokens"][:, 1:])
+        return ce, {"loss": ce}
+
+    def init_cache(self, batch: int, cache_len: int) -> dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        mc = [M.init_mamba_cache(batch, cfg, dt) for _ in range(cfg.n_layers)]
+        return {"mamba": jax.tree.map(lambda *xs: jnp.stack(xs), *mc),
+                "pos": jnp.zeros((), jnp.int32)}
+
+    def prefill(self, params, tokens, cache):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = self.constrain(params["embed"].astype(dt)[tokens])
+        x, mc = self._scan(params, x, cache["mamba"])
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        logits = x[:, -1:, :] @ params["lm_head"].astype(dt)
+        return logits, {"mamba": mc,
+                        "pos": jnp.asarray(tokens.shape[1], jnp.int32)}
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = self.constrain(params["embed"].astype(dt)[tokens])
+        x, mc = self._scan(params, x, cache["mamba"])
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        logits = x @ params["lm_head"].astype(dt)
+        return logits, {"mamba": mc, "pos": cache["pos"] + 1}

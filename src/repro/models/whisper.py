@@ -1,0 +1,214 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Per the assignment, the conv/mel frontend is a STUB: ``input_specs()``
+provides precomputed frame embeddings (B, enc_seq, D) — the transformer
+backbone (encoder self-attention stack + decoder with self & cross
+attention) is fully implemented.
+
+Serving: prefill encodes the audio embeddings, precomputes per-layer cross
+K/V once, and runs the decoder prompt; decode_step is one token against
+both caches.  There is no encoder "decode" — the decoder is the
+autoregressive part (decode shape cells exercise it).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig, mesh=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.constrain = lambda x: x
+
+    # -- params --------------------------------------------------------------
+    def _init_enc_block(self, key):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {"norm1": L.make_norm_params(cfg, cfg.d_model),
+                "attn": A.attn_init(k1, cfg, cfg.d_model),
+                "norm2": L.make_norm_params(cfg, cfg.d_model),
+                "mlp": L.mlp_init(k2, cfg, cfg.d_model, cfg.d_ff)}
+
+    def _init_dec_block(self, key):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"norm1": L.make_norm_params(cfg, cfg.d_model),
+                "self_attn": A.attn_init(k1, cfg, cfg.d_model),
+                "norm_x": L.make_norm_params(cfg, cfg.d_model),
+                "cross_attn": A.attn_init(k2, cfg, cfg.d_model),
+                "norm2": L.make_norm_params(cfg, cfg.d_model),
+                "mlp": L.mlp_init(k3, cfg, cfg.d_model, cfg.d_ff)}
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 6)
+        ekeys = jax.random.split(ks[0], cfg.enc_layers)
+        dkeys = jax.random.split(ks[1], cfg.n_layers)
+        return {
+            "embed": L.embed_init(ks[2], cfg.vocab, cfg.d_model),
+            "enc_pos": L.embed_init(ks[3], cfg.enc_seq, cfg.d_model),
+            "dec_pos": L.embed_init(ks[4], cfg.max_seq_len, cfg.d_model),
+            "enc_blocks": jax.vmap(self._init_enc_block)(ekeys),
+            "dec_blocks": jax.vmap(self._init_dec_block)(dkeys),
+            "enc_norm": L.make_norm_params(cfg, cfg.d_model),
+            "dec_norm": L.make_norm_params(cfg, cfg.d_model),
+        }
+
+    def param_specs(self):
+        cfg = self.cfg
+        enc = {"norm1": L.norm_specs(cfg), "attn": A.attn_specs(cfg),
+               "norm2": L.norm_specs(cfg), "mlp": L.mlp_specs(cfg)}
+        dec = {"norm1": L.norm_specs(cfg), "self_attn": A.attn_specs(cfg),
+               "norm_x": L.norm_specs(cfg), "cross_attn": A.attn_specs(cfg),
+               "norm2": L.norm_specs(cfg), "mlp": L.mlp_specs(cfg)}
+        add = lambda: (lambda axes: ("layers",) + tuple(axes))
+        is_tup = lambda x: isinstance(x, tuple)
+        return {
+            "embed": ("vocab", "embed"),
+            "enc_pos": (None, "embed"),
+            "dec_pos": (None, "embed"),
+            "enc_blocks": jax.tree.map(add(), enc, is_leaf=is_tup),
+            "dec_blocks": jax.tree.map(add(), dec, is_leaf=is_tup),
+            "enc_norm": L.norm_specs(cfg),
+            "dec_norm": L.norm_specs(cfg),
+        }
+
+    # -- encoder ---------------------------------------------------------------
+    def encode(self, params, enc_embeds):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        s = enc_embeds.shape[1]
+        x = enc_embeds.astype(dt) + params["enc_pos"].astype(dt)[None, :s, :]
+
+        def body(x, bp):
+            h = L.apply_norm(cfg, bp["norm1"], x)
+            x = x + A.attn_apply_full(cfg, bp["attn"], h, causal=False)
+            h = L.apply_norm(cfg, bp["norm2"], x)
+            return self.constrain(x + L.mlp_apply(cfg, bp["mlp"], h)), None
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+        return L.apply_norm(cfg, params["enc_norm"], x)
+
+    # -- decoder (training / full teacher forcing) -------------------------------
+    def forward(self, params, tokens, embeds):
+        """embeds: (B, enc_seq, D) stub frontend output; tokens: (B, S)."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        enc_out = self.encode(params, embeds)
+        s = tokens.shape[1]
+        x = params["embed"].astype(dt)[tokens] \
+            + params["dec_pos"].astype(dt)[None, :s, :]
+
+        def body(x, bp):
+            h = L.apply_norm(cfg, bp["norm1"], x)
+            x = x + A.attn_apply_full(cfg, bp["self_attn"], h, causal=True)
+            h = L.apply_norm(cfg, bp["norm_x"], x)
+            ek, ev = self._cross_kv(bp, enc_out)
+            x = x + self._cross_attend(bp, h, ek, ev)
+            h = L.apply_norm(cfg, bp["norm2"], x)
+            return self.constrain(x + L.mlp_apply(cfg, bp["mlp"], h)), None
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+        x = L.apply_norm(cfg, params["dec_norm"], x)
+        return x @ params["embed"].astype(dt).T, jnp.zeros((), jnp.float32)
+
+    def _cross_kv(self, bp, enc_out):
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        b, s, _ = enc_out.shape
+        p = bp["cross_attn"]
+        dt = enc_out.dtype
+        k = (enc_out @ p["wk"].astype(dt)).reshape(b, s, cfg.n_kv_heads, hd)
+        v = (enc_out @ p["wv"].astype(dt)).reshape(b, s, cfg.n_kv_heads, hd)
+        return k, v
+
+    def _cross_attend(self, bp, h, ek, ev):
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        b, s, _ = h.shape
+        p = bp["cross_attn"]
+        dt = h.dtype
+        q = (h @ p["wq"].astype(dt)).reshape(b, s, cfg.n_heads, hd)
+        mask = jnp.ones((1, s, ek.shape[1]), bool)
+        out = A._sdpa(cfg, q, ek, ev, mask)
+        return out @ p["wo"].astype(dt)
+
+    def loss(self, params, batch):
+        logits, _ = self.forward(params, batch["tokens"], batch["embeds"])
+        ce = L.softmax_xent(logits[:, :-1, :], batch["tokens"][:, 1:])
+        return ce, {"loss": ce}
+
+    # -- serving ---------------------------------------------------------------
+    def init_cache(self, batch: int, cache_len: int) -> dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        hd = cfg.resolved_head_dim
+        kv = [A.init_kv_cache(batch, cache_len, cfg, dt)
+              for _ in range(cfg.n_layers)]
+        kv = jax.tree.map(lambda *xs: jnp.stack(xs), *kv)
+        cross = jnp.zeros((cfg.n_layers, 2, batch, cfg.enc_seq,
+                           cfg.n_kv_heads, hd), dt)
+        return {"kv": kv, "cross": cross, "pos": jnp.zeros((), jnp.int32)}
+
+    def prefill(self, params, tokens, cache, embeds=None):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        enc_out = self.encode(params, embeds)
+        s = tokens.shape[1]
+        x = params["embed"].astype(dt)[tokens] \
+            + params["dec_pos"].astype(dt)[None, :s, :]
+
+        def body(x, xs):
+            bp, kv = xs
+            h = L.apply_norm(cfg, bp["norm1"], x)
+            a_out, kv = A.attn_prefill(cfg, bp["self_attn"], h, kv)
+            x = x + a_out
+            h = L.apply_norm(cfg, bp["norm_x"], x)
+            ek, ev = self._cross_kv(bp, enc_out)
+            x = x + self._cross_attend(bp, h, ek, ev)
+            h = L.apply_norm(cfg, bp["norm2"], x)
+            return self.constrain(x + L.mlp_apply(cfg, bp["mlp"], h)), \
+                (kv, jnp.stack([ek, ev]).astype(dt))
+
+        x, (kv, cross) = jax.lax.scan(body, x, (params["dec_blocks"],
+                                                cache["kv"]))
+        x = L.apply_norm(cfg, params["dec_norm"], x)
+        logits = x[:, -1:, :] @ params["embed"].astype(dt).T
+        return logits, {"kv": kv, "cross": cross,
+                        "pos": jnp.asarray(s, jnp.int32)}
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        pos = cache["pos"]
+        x = params["embed"].astype(dt)[tokens] \
+            + jax.lax.dynamic_slice_in_dim(params["dec_pos"].astype(dt),
+                                           pos, 1, axis=0)[None]
+
+        def body(x, xs):
+            bp, kv, cross = xs
+            h = L.apply_norm(cfg, bp["norm1"], x)
+            a_out, kv = A.attn_decode(cfg, bp["self_attn"], h, kv, pos)
+            x = x + a_out
+            h = L.apply_norm(cfg, bp["norm_x"], x)
+            x = x + self._cross_attend(bp, h, cross[0], cross[1])
+            h = L.apply_norm(cfg, bp["norm2"], x)
+            return x + L.mlp_apply(cfg, bp["mlp"], h), kv
+
+        x, kv = jax.lax.scan(body, x, (params["dec_blocks"], cache["kv"],
+                                       cache["cross"]))
+        x = L.apply_norm(cfg, params["dec_norm"], x)
+        logits = x @ params["embed"].astype(dt).T
+        return logits, {"kv": kv, "cross": cache["cross"], "pos": pos + 1}

@@ -1,0 +1,198 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with SHARED attention+MLP blocks
+applied every ``hybrid_attn_every`` layers (arXiv:2411.15242).
+
+The shared blocks (n_shared_blocks of them, alternating) are stored once
+and reused at every application point — Zamba2's parameter-sharing trick.
+Simplification vs the released model (noted in DESIGN.md): the shared block
+consumes the running hidden state directly rather than concat(hidden,
+original embedding) + down-projection.
+
+The layer scan stays uniform by branching on the layer index with
+``lax.cond`` — the shared-attention branch costs nothing on non-attention
+layers at run time, and the HLO contains each branch once.
+
+Decode state = per-layer Mamba caches (O(1) in sequence length) + one KV
+cache per shared-block application point — the attention part is why
+long-context decode still carries an S-sized cache, but only at
+``n_layers / hybrid_attn_every`` points instead of every layer.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mamba2 as M
+
+
+class HybridLM:
+    def __init__(self, cfg: ModelConfig, mesh=None):
+        assert cfg.hybrid_attn_every > 0
+        assert cfg.n_layers % cfg.hybrid_attn_every == 0
+        self.cfg = cfg
+        self.mesh = mesh
+        self.n_apps = cfg.n_layers // cfg.hybrid_attn_every
+        self.constrain = lambda x: x
+
+    # -- params --------------------------------------------------------------
+    def _init_shared(self, key) -> dict:
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {"norm1": L.make_norm_params(cfg, cfg.d_model),
+                "attn": A.attn_init(k1, cfg, cfg.d_model),
+                "norm2": L.make_norm_params(cfg, cfg.d_model),
+                "mlp": L.mlp_init(k2, cfg, cfg.d_model, cfg.d_ff)}
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ke, km, ks, kh = jax.random.split(key, 4)
+        mkeys = jax.random.split(km, cfg.n_layers)
+
+        def init_layer(k):
+            return {"norm": L.make_norm_params(cfg, cfg.d_model),
+                    "mamba": M.mamba_init(k, cfg)}
+
+        skeys = jax.random.split(ks, cfg.n_shared_blocks)
+        return {
+            "embed": L.embed_init(ke, cfg.vocab, cfg.d_model),
+            "layers": jax.vmap(init_layer)(mkeys),
+            "shared": jax.vmap(self._init_shared)(skeys),
+            "final_norm": L.make_norm_params(cfg, cfg.d_model),
+            "lm_head": L.dense_init(kh, cfg.d_model, cfg.vocab, scale=0.02),
+        }
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        layer = {"norm": L.norm_specs(cfg), "mamba": M.mamba_specs(cfg)}
+        shared = {"norm1": L.norm_specs(cfg), "attn": A.attn_specs(cfg),
+                  "norm2": L.norm_specs(cfg), "mlp": L.mlp_specs(cfg)}
+        add = lambda name: (lambda axes: (name,) + tuple(axes))
+        return {
+            "embed": ("vocab", "embed"),
+            "layers": jax.tree.map(add("layers"), layer,
+                                   is_leaf=lambda x: isinstance(x, tuple)),
+            "shared": jax.tree.map(add("shared"), shared,
+                                   is_leaf=lambda x: isinstance(x, tuple)),
+            "final_norm": L.norm_specs(cfg),
+            "lm_head": ("embed", "vocab"),
+        }
+
+    # -- shared attention block -----------------------------------------------
+    def _shared_block(self, sp, x, kv: Optional[A.KVCache], pos):
+        cfg = self.cfg
+        h = L.apply_norm(cfg, sp["norm1"], x)
+        if kv is None:
+            a_out = A.attn_apply_full(cfg, sp["attn"], h, causal=True)
+            new_kv = None
+        elif x.shape[1] > 1:      # prefill
+            a_out, new_kv = A.attn_prefill(cfg, sp["attn"], h, kv)
+        else:                     # decode
+            a_out, new_kv = A.attn_decode(cfg, sp["attn"], h, kv, pos)
+        x = x + a_out
+        h = L.apply_norm(cfg, sp["norm2"], x)
+        x = x + L.mlp_apply(cfg, sp["mlp"], h)
+        return x, new_kv
+
+    def _select_shared(self, params, app_idx):
+        nb = self.cfg.n_shared_blocks
+        return jax.tree.map(lambda p: p[app_idx % nb], params["shared"])
+
+    # -- forward ---------------------------------------------------------------
+    def _scan_layers(self, params, x, mamba_caches, kv_caches, pos):
+        """Shared by train (caches None), prefill and decode."""
+        cfg = self.cfg
+        every = cfg.hybrid_attn_every
+        idxs = jnp.arange(cfg.n_layers)
+
+        def body(carry, xs):
+            x, kvs = carry
+            (lp, mcache), i = xs
+            h = L.apply_norm(cfg, lp["norm"], x)
+            if mcache is None:
+                mo, _ = M.mamba_apply(cfg, lp["mamba"], h)
+                new_mcache = mcache
+            elif x.shape[1] > 1:
+                mo, new_mcache = M.mamba_apply(cfg, lp["mamba"], h, mcache)
+            else:
+                mo, new_mcache = M.mamba_decode(cfg, lp["mamba"], h, mcache)
+            x = self.constrain(x + mo)
+
+            is_attn = (i % every) == (every - 1)
+            app_idx = i // every
+
+            def with_attn(x, kvs):
+                sp = self._select_shared(params, app_idx)
+                if kvs is None:
+                    y, _ = self._shared_block(sp, x, None, pos)
+                    return y, kvs
+                kv = jax.tree.map(
+                    lambda c: jax.lax.dynamic_index_in_dim(
+                        c, app_idx, 0, keepdims=False), kvs)
+                y, new_kv = self._shared_block(sp, x, kv, pos)
+                kvs = jax.tree.map(
+                    lambda c, nk: jax.lax.dynamic_update_index_in_dim(
+                        c, nk.astype(c.dtype), app_idx, 0), kvs, new_kv)
+                return y, kvs
+
+            x, kvs = jax.lax.cond(is_attn,
+                                  lambda op: with_attn(*op),
+                                  lambda op: op,
+                                  (x, kvs))
+            return (x, kvs), new_mcache
+
+        if cfg.remat != "none" and mamba_caches is None:
+            body = jax.checkpoint(body)
+        (x, kv_caches), new_mcaches = jax.lax.scan(
+            body, (x, kv_caches), ((params["layers"], mamba_caches), idxs))
+        return x, new_mcaches, kv_caches
+
+    def forward(self, params, tokens, embeds=None):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = self.constrain(params["embed"].astype(dt)[tokens])
+        x, _, _ = self._scan_layers(params, x, None, None,
+                                    jnp.zeros((), jnp.int32))
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        return x @ params["lm_head"].astype(dt), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        logits, _ = self.forward(params, batch["tokens"])
+        ce = L.softmax_xent(logits[:, :-1, :], batch["tokens"][:, 1:])
+        return ce, {"loss": ce}
+
+    # -- serving ---------------------------------------------------------------
+    def init_cache(self, batch: int, cache_len: int) -> dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        mc = [M.init_mamba_cache(batch, cfg, dt)
+              for _ in range(cfg.n_layers)]
+        mc = jax.tree.map(lambda *xs: jnp.stack(xs), *mc)
+        kv = [A.init_kv_cache(batch, cache_len, cfg, dt)
+              for _ in range(self.n_apps)]
+        kv = jax.tree.map(lambda *xs: jnp.stack(xs), *kv)
+        return {"mamba": mc, "kv": kv, "pos": jnp.zeros((), jnp.int32)}
+
+    def prefill(self, params, tokens, cache):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = self.constrain(params["embed"].astype(dt)[tokens])
+        x, mc, kv = self._scan_layers(params, x, cache["mamba"], cache["kv"],
+                                      jnp.zeros((), jnp.int32))
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        logits = x[:, -1:, :] @ params["lm_head"].astype(dt)
+        return logits, {"mamba": mc, "kv": kv,
+                        "pos": jnp.asarray(tokens.shape[1], jnp.int32)}
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = self.constrain(params["embed"].astype(dt)[tokens])
+        x, mc, kv = self._scan_layers(params, x, cache["mamba"], cache["kv"],
+                                      cache["pos"])
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        logits = x @ params["lm_head"].astype(dt)
+        return logits, {"mamba": mc, "kv": kv, "pos": cache["pos"] + 1}

@@ -1,0 +1,2 @@
+from repro.train.steps import TrainState, build_train_step
+from repro.train.train_loop import LoopConfig, train

@@ -1,0 +1,64 @@
+"""Pallas flash-attention kernel: sweeps vs the naive softmax oracle
+(interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig
+from repro.kernels import ops
+from repro.models import attention as A
+
+
+@pytest.fixture(autouse=True)
+def force_pallas():
+    ops.set_mode("pallas")
+    yield
+    ops.set_mode("auto")
+
+
+def _cfg(h, kv, hd):
+    return ModelConfig(arch="t", family="dense", n_layers=1, d_model=h * hd,
+                       n_heads=h, n_kv_heads=kv, d_ff=64, vocab=64,
+                       head_dim=hd)
+
+
+@pytest.mark.parametrize("h,kv,hd,s,causal", [
+    (4, 4, 64, 256, True),
+    (8, 2, 64, 256, True),       # GQA broadcast
+    (4, 1, 128, 128, False),     # MQA, lane-aligned dh
+    (2, 2, 80, 512, True),       # dh needs padding to 128
+])
+def test_flash_matches_sdpa(h, kv, hd, s, causal):
+    cfg = _cfg(h, kv, hd)
+    b = 2
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kv, hd))
+
+    got = ops.flash_attention(q, k, v, causal=causal, bq=64, bk=64)
+    if causal:
+        mask = (jnp.arange(s)[None, None, :] <= jnp.arange(s)[None, :, None])
+    else:
+        mask = jnp.ones((1, s, s), bool)
+    want = A._sdpa(cfg, q, k, v, mask).reshape(b, s, h, hd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_bf16_inputs():
+    cfg = _cfg(4, 4, 64)
+    b, s = 1, 128
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (b, s, 4, 64)).astype(jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(key, 1),
+                          (b, s, 4, 64)).astype(jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 2),
+                          (b, s, 4, 64)).astype(jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, causal=True, bq=64, bk=64)
+    mask = (jnp.arange(s)[None, None, :] <= jnp.arange(s)[None, :, None])
+    want = A._sdpa(cfg, q, k, v, mask).reshape(b, s, 4, 64)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)

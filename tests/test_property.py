@@ -1,0 +1,95 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import srsi as S
+from repro.core import rank as R
+from repro.core import AdapproxConfig, RankConfig, adapprox, tree_nbytes
+from repro.distributed.straggler import StragglerConfig, StragglerMonitor
+
+SET = dict(max_examples=15, deadline=None)
+
+
+@given(m=st.integers(8, 96), n=st.integers(8, 96), r=st.integers(1, 8),
+       scale_exp=st.integers(-12, 6))
+@settings(**SET)
+def test_srsi_projection_contraction_any_scale(m, n, r, scale_exp):
+    """||A - QU^T||_F <= ||A||_F for every shape/rank/magnitude, and the
+    factors are finite — including magnitudes that underflow naive power
+    iteration (the scale-normalisation invariant)."""
+    r = min(r, min(m, n) - 1) or 1
+    key = jax.random.PRNGKey(m * 1000 + n * 10 + r)
+    a = jnp.abs(jax.random.normal(key, (m, n))) * (10.0 ** scale_exp)
+    res = S.srsi_dense(a, r, 2, 2, jax.random.fold_in(key, 1))
+    assert np.all(np.isfinite(np.asarray(res.q)))
+    assert np.all(np.isfinite(np.asarray(res.u)))
+    approx = res.q @ res.u.T
+    na = float(jnp.linalg.norm(a))
+    assert float(jnp.linalg.norm(a - approx)) <= na * (1 + 1e-3) + 1e-30
+
+
+@given(m=st.integers(16, 64), n=st.integers(16, 64), r=st.integers(2, 6))
+@settings(**SET)
+def test_srsi_q_orthonormal(m, n, r):
+    key = jax.random.PRNGKey(m + n * 131 + r)
+    a = jnp.abs(jax.random.normal(key, (m, n)))
+    res = S.srsi_dense(a, r, 2, 2, jax.random.fold_in(key, 7))
+    gram = np.asarray(res.q.T @ res.q)
+    # columns either orthonormal or dropped (zero)
+    diag = np.diag(gram)
+    for i in range(r):
+        assert abs(diag[i] - 1.0) < 1e-4 or abs(diag[i]) < 1e-6
+    off = gram - np.diag(diag)
+    assert np.abs(off).max() < 1e-4
+
+
+@given(decay=st.floats(0.3, 0.95), thresh=st.floats(0.005, 0.3))
+@settings(**SET)
+def test_rank_selection_feasible_or_kmax(decay, thresh):
+    col = decay ** jnp.arange(64)
+    cum = jnp.cumsum(col / jnp.sum(col))
+    cfg = R.RankConfig(xi_thresh=thresh, k_init=1)
+    k = int(R.select_rank_paper_iteration(cum, jnp.asarray(1.0), cfg, 64))
+    xi = float(R.xi_of_k(cum, jnp.asarray(1.0), jnp.asarray(k)))
+    assert xi <= thresh + 1e-6 or k == 64
+
+
+@given(b1=st.sampled_from([0.0, 0.9]), d=st.floats(0.1, 2.0),
+       gscale=st.floats(1e-4, 1e3))
+@settings(**SET)
+def test_adapprox_update_rms_bounded(b1, d, gscale):
+    """Post-clip update RMS <= lr * d regardless of gradient scale
+    (first step, wd = 0; EMA of clipped updates keeps the bound)."""
+    params = {"w": jnp.zeros((64, 64))}
+    cfg = AdapproxConfig(lr=1.0, b1=b1, clip_d=d, weight_decay=0.0,
+                         min_dim_factor=1, oversample=2, n_iter=2,
+                         rank=RankConfig(k_init=4, mode="static"))
+    opt = adapprox(cfg)
+    state = opt.init(params)
+    g = {"w": gscale * jax.random.normal(jax.random.PRNGKey(3), (64, 64))}
+    upd, _ = opt.update(g, state, params)
+    rms = float(jnp.sqrt(jnp.mean(jnp.square(upd["w"]))))
+    assert rms <= d * (1 + 1e-3)
+
+
+@given(seq=st.lists(st.floats(0.05, 0.15), min_size=30, max_size=60))
+@settings(**SET)
+def test_straggler_never_escalates_on_uniform(seq):
+    mon = StragglerMonitor(StragglerConfig(persist=3))
+    for t in seq:
+        mon.observe(t)
+    assert not mon.escalations
+
+
+@given(k=st.integers(1, 32))
+@settings(**SET)
+def test_factored_state_memory_monotone_in_rank(k):
+    params = {"w": jnp.zeros((256, 256))}
+    def nbytes(kk):
+        opt = adapprox(AdapproxConfig(
+            rank=RankConfig(k_init=kk, mode="static"), b1=0.0,
+            min_dim_factor=1))
+        return tree_nbytes(opt.init(params))
+    assert nbytes(k) <= nbytes(k + 1)

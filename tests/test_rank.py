@@ -1,0 +1,78 @@
+"""Adaptive rank selection (Algorithm 2) unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rank as R
+
+
+def make_cum_energy(decay=0.5, r=64, total=1.0):
+    """Synthetic captured-energy CDF: col j captures decay^j of the rest."""
+    col = decay ** jnp.arange(r)
+    col = col / jnp.sum(col) * total
+    return jnp.cumsum(col), jnp.asarray(total)
+
+
+def test_f_increment_matches_paper_constants():
+    """With the paper's (eta, omega, phi, tau) = (200, -10, -2.5, -9),
+    f(xi) ~= 22 across (0, 1] — the rank grows in ~constant increments."""
+    cfg = R.RankConfig()
+    for xi in [0.011, 0.05, 0.3, 0.9, 1.0]:
+        val = float(R.f_increment(jnp.asarray(xi), cfg))
+        assert 21.0 < val < 24.0, (xi, val)
+
+
+def test_exact_selection_is_minimal_feasible():
+    cum, frob = make_cum_energy(decay=0.6)
+    cfg = R.RankConfig(xi_thresh=0.05, k_init=1)
+    k = int(R.select_rank_exact(cum, frob, cfg, k_max=64))
+    xi_k = float(R.xi_of_k(cum, frob, jnp.asarray(k)))
+    assert xi_k <= 0.05 + 1e-6
+    if k > 1:
+        xi_prev = float(R.xi_of_k(cum, frob, jnp.asarray(k - 1)))
+        assert xi_prev > 0.05
+
+
+def test_paper_iteration_feasible_and_geq_exact():
+    cum, frob = make_cum_energy(decay=0.8, r=256)
+    cfg = R.RankConfig(xi_thresh=0.02, k_init=1)
+    k_paper = int(R.select_rank_paper_iteration(cum, frob, cfg, k_max=256))
+    k_exact = int(R.select_rank_exact(cum, frob, cfg, k_max=256))
+    assert k_paper >= k_exact
+    assert float(R.xi_of_k(cum, frob, jnp.asarray(k_paper))) <= 0.02 + 1e-6
+    # paper increments are ~22, so overshoot is bounded by one increment
+    assert k_paper - k_exact < 25
+
+
+def test_k_max_respected_when_infeasible():
+    """Flat spectrum where the threshold is unreachable -> k == k_max."""
+    cum, frob = make_cum_energy(decay=0.999, r=32, total=1.0)
+    cfg = R.RankConfig(xi_thresh=1e-6)
+    k = int(R.select_rank_paper_iteration(cum, frob, cfg, k_max=32))
+    assert k == 32
+
+
+def test_refresh_interval():
+    cum, frob = make_cum_energy()
+    cfg = R.RankConfig(xi_thresh=0.05, delta_s=10)
+    k_prev = jnp.asarray(3, jnp.int32)
+    # step 11 -> refresh; step 12 -> keep
+    k_sel = R.select_rank(cum, frob, cfg, 64, jnp.asarray(11), k_prev)
+    k_keep = R.select_rank(cum, frob, cfg, 64, jnp.asarray(12), k_prev)
+    assert int(k_keep) == 3
+    assert int(k_sel) != 3 or int(R.select_rank_exact(cum, frob, cfg, 64)) == 3
+
+
+def test_resolve_k_max_quarter_rule():
+    cfg = R.RankConfig(k_max=10_000)
+    assert R.resolve_k_max((768, 3072), cfg) == 192   # 0.25 * 768
+    assert R.resolve_k_max((4, 1024, 1024), cfg) == 256
+    assert R.resolve_k_max((130, 130), cfg) == 32
+
+
+def test_selection_jit_compatible():
+    cum, frob = make_cum_energy()
+    cfg = R.RankConfig(xi_thresh=0.05)
+    fn = jax.jit(lambda c, f, s, kp: R.select_rank(c, f, cfg, 64, s, kp))
+    out = fn(cum, frob, jnp.asarray(1), jnp.asarray(1, jnp.int32))
+    assert out.dtype == jnp.int32

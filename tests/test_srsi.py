@@ -1,0 +1,118 @@
+"""S-RSI correctness: approximation quality vs SVD, orthonormality,
+implicit-operator equivalence, batching, and the error-rate identity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import srsi as S
+
+jax.config.update("jax_enable_x64", False)
+
+
+def lowrank_plus_noise(key, m, n, rank, noise=1e-3):
+    """Synthetic second-moment-like matrix: nonneg, few dominant directions."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    a = jax.random.normal(k1, (m, rank))
+    b = jax.random.normal(k2, (rank, n))
+    scales = 10.0 ** (-jnp.arange(rank, dtype=jnp.float32) / 2.0)
+    base = (a * scales) @ b
+    mat = jnp.square(base) + noise * jnp.square(jax.random.normal(k3, (m, n)))
+    return mat.astype(jnp.float32)
+
+
+def test_cholesky_qr2_orthonormal():
+    y = jax.random.normal(jax.random.PRNGKey(0), (257, 33))
+    q = S.cholesky_qr2(y)
+    np.testing.assert_allclose(np.asarray(q.T @ q), np.eye(33), atol=1e-5)
+
+
+def test_cholesky_qr2_rank_deficient_no_nan():
+    y = jnp.zeros((64, 8))
+    q = S.cholesky_qr2(y)
+    assert not np.any(np.isnan(np.asarray(q)))
+
+
+def test_srsi_matches_svd_quality():
+    a = lowrank_plus_noise(jax.random.PRNGKey(1), 256, 192, rank=6)
+    res = S.srsi_dense(a, r_store=12, oversample=5, n_iter=5,
+                       key=jax.random.PRNGKey(2))
+    approx = S.reconstruct(res.q, res.u)
+    err = jnp.linalg.norm(a - approx) / jnp.linalg.norm(a)
+    # Optimal rank-12 error via SVD:
+    sv = jnp.linalg.svd(a, compute_uv=False)
+    opt = jnp.sqrt(jnp.sum(sv[12:] ** 2)) / jnp.linalg.norm(a)
+    assert float(err) <= float(opt) * 1.10 + 1e-6, (err, opt)
+
+
+def test_error_rate_identity():
+    """xi from cum_energy must equal the directly computed residual norm."""
+    a = lowrank_plus_noise(jax.random.PRNGKey(3), 128, 96, rank=4)
+    res = S.srsi_dense(a, r_store=16, oversample=4, n_iter=4,
+                       key=jax.random.PRNGKey(4))
+    for k in [1, 3, 8, 16]:
+        mask = S.col_mask(16, jnp.asarray(k))
+        approx = (res.q * mask[None, :]) @ (res.u * mask[None, :]).T
+        direct = jnp.linalg.norm(a - approx) / jnp.linalg.norm(a)
+        via_id = S.approx_error_rate(res, jnp.asarray(k))
+        np.testing.assert_allclose(float(via_id), float(direct),
+                                   rtol=5e-3, atol=5e-4)
+
+
+def test_implicit_equals_dense_operator():
+    key = jax.random.PRNGKey(5)
+    q = jax.random.normal(key, (64, 8))
+    u = jax.random.normal(jax.random.fold_in(key, 1), (48, 8))
+    g = jax.random.normal(jax.random.fold_in(key, 2), (64, 48))
+    v = S.make_implicit_v(q, u, g, 0.99)
+    x = jax.random.normal(jax.random.fold_in(key, 3), (48, 5))
+    y = jax.random.normal(jax.random.fold_in(key, 4), (64, 5))
+    vmat = 0.99 * q @ u.T + 0.01 * g * g
+    np.testing.assert_allclose(np.asarray(v.mv(x)), np.asarray(vmat @ x),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(v.rmv(y)), np.asarray(vmat.T @ y),
+                               rtol=2e-4, atol=2e-4)
+    vclamped = 0.99 * jnp.maximum(q @ u.T, 0.0) + 0.01 * g * g
+    np.testing.assert_allclose(float(v.frob_sq()),
+                               float(jnp.sum(vclamped ** 2)),
+                               rtol=1e-4)
+
+
+def test_srsi_implicit_close_to_dense_srsi():
+    """Same operator, same key => identical sketches up to fp error."""
+    key = jax.random.PRNGKey(6)
+    q0 = jnp.abs(jax.random.normal(key, (96, 4)))
+    u0 = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (80, 4)))
+    g = jax.random.normal(jax.random.fold_in(key, 2), (96, 80))
+    v = S.make_implicit_v(q0, u0, g, 0.999)
+    vmat = v.materialize()
+    skey = jax.random.PRNGKey(7)
+    res_i = S.srsi_implicit(v, 8, 4, 3, skey)
+    res_d = S.srsi_dense(vmat, 8, 4, 3, skey)
+    ri = S.reconstruct(res_i.q, res_i.u)
+    rd = S.reconstruct(res_d.q, res_d.u)
+    # materialize() clamps at 0 while mv/rmv do not; the operators differ
+    # only where QU^T < 0 which is rare/small => reconstructions agree.
+    np.testing.assert_allclose(np.asarray(ri), np.asarray(rd),
+                               rtol=1e-3, atol=1e-4 * float(jnp.max(vmat)))
+
+
+def test_batched_srsi():
+    keys = jax.random.split(jax.random.PRNGKey(8), 3)
+    mats = jnp.stack([lowrank_plus_noise(k, 64, 64, 3) for k in keys])
+    bkeys = jax.random.split(jax.random.PRNGKey(9), 3)
+    res = S.srsi_dense_batched(mats, 8, 4, 3, bkeys)
+    assert res.q.shape == (3, 64, 8)
+    assert res.u.shape == (3, 64, 8)
+    for i in range(3):
+        approx = res.q[i] @ res.u[i].T
+        err = jnp.linalg.norm(mats[i] - approx) / jnp.linalg.norm(mats[i])
+        assert float(err) < 0.05
+
+
+def test_zero_matrix_is_safe():
+    res = S.srsi_dense(jnp.zeros((32, 32)), 4, 2, 2, jax.random.PRNGKey(0))
+    assert not np.any(np.isnan(np.asarray(res.q)))
+    assert not np.any(np.isnan(np.asarray(res.u)))
+    np.testing.assert_allclose(np.asarray(S.reconstruct(res.q, res.u)), 0.0,
+                               atol=1e-6)

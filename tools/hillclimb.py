@@ -1,0 +1,111 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+"""Perf hillclimbing harness (§Perf): lower a (arch, cell) under config
+overrides, re-derive the roofline terms, log hypothesis -> before/after.
+
+    PYTHONPATH=src python tools/hillclimb.py qwen2-7b train_4k \
+        --set attn_impl=chunked remat=dots --mb 4 --tag chunked+dots
+
+Records land in experiments/perf/<arch>__<cell>__<tag>.json.
+"""
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+
+import jax
+
+import repro.launch.dryrun as DR
+from repro.configs import archs as ARCHS
+from repro.launch.hlo_cost import parse_hlo_costs
+from repro.launch.mesh import make_production_mesh
+
+PEAK_FLOPS, HBM_BW, ICI_BW = 197e12, 819e9, 50e9
+
+
+def measure(arch, cell, overrides, mb=None, opt_overrides=None, tag="exp"):
+    cfg0 = ARCHS.get_config(arch)
+    cfg = dataclasses.replace(cfg0, **overrides) if overrides else cfg0
+    # monkeypatch config + knobs into the dry-run builder
+    orig_get = ARCHS.get_config
+    DRget = DR.get_config
+    DR.get_config = lambda a: cfg if a == arch else orig_get(a)
+    if mb is not None:
+        DR.microbatches_for = (lambda *a, **k: mb)
+    if opt_overrides:
+        base_opt = DR.dryrun_optimizer
+
+        def patched_opt(a):
+            from repro.core import Schedule, make_optimizer
+            kw = dict(lr=Schedule(3e-4), b1=0.9, b2=0.999, weight_decay=0.1,
+                      k_init=64, mode="static", oversample=5, n_iter=5,
+                      min_dim_factor=128, implicit=True)
+            kw.update(opt_overrides)
+            return make_optimizer("adapprox", **kw)
+        DR.dryrun_optimizer = patched_opt
+
+    mesh = make_production_mesh()
+    fn, structs, _, cellobj = DR.build_cell(arch, cell, mesh)
+    compiled = fn.lower(*structs).compile()
+    cost = parse_hlo_costs(compiled.as_text())
+    mem = compiled.memory_analysis()
+    coll_bytes = sum(v["bytes"] for v in cost.coll.values())
+    peak = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+            + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    rec = {
+        "arch": arch, "cell": cell, "tag": tag,
+        "overrides": {k: str(v) for k, v in (overrides or {}).items()},
+        "microbatches": mb, "opt_overrides": opt_overrides,
+        "flops": cost.flops, "bytes": cost.bytes,
+        "collective_bytes": coll_bytes,
+        "coll": {k: dict(v) for k, v in cost.coll.items()},
+        "t_compute": cost.flops / PEAK_FLOPS,
+        "t_memory": cost.bytes / HBM_BW,
+        "t_collective": coll_bytes / ICI_BW,
+        "peak_gib": peak / 2**30,
+        "top_sites": [[s, b] for s, b in cost.top_sites(10)],
+    }
+    DR.get_config = DRget
+    out = Path("experiments/perf")
+    out.mkdir(parents=True, exist_ok=True)
+    (out / f"{arch}__{cell}__{tag}.json").write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("cell")
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="ModelConfig overrides k=v")
+    ap.add_argument("--opt", nargs="*", default=[],
+                    help="optimizer overrides k=v")
+    ap.add_argument("--mb", type=int, default=None)
+    ap.add_argument("--tag", default="exp")
+    args = ap.parse_args()
+
+    def parse_kv(items):
+        out = {}
+        for item in items:
+            k, v = item.split("=", 1)
+            for cast in (int, float):
+                try:
+                    v = cast(v)
+                    break
+                except ValueError:
+                    continue
+            out[k] = v
+        return out
+
+    rec = measure(args.arch, args.cell, parse_kv(args.set), args.mb,
+                  parse_kv(args.opt) or None, args.tag)
+    print(f"{args.tag}: t_comp={rec['t_compute']:.2f}s "
+          f"t_mem={rec['t_memory']:.2f}s t_coll={rec['t_collective']:.2f}s "
+          f"peak={rec['peak_gib']:.1f}GiB")
+    for s, b in rec["top_sites"][:6]:
+        print(f"  {b:10.3g}  {s}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+"""Bisect per-device temp memory: forward | grad | grad+opt."""
+import sys
+import jax
+import jax.numpy as jnp
+
+from repro.config import CELLS
+from repro.configs import get_config, input_specs
+from repro.core import apply_updates
+from repro.distributed import sharding as SH
+from repro.launch.dryrun import dryrun_optimizer, microbatches_for
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.train.steps import TrainState, build_train_step
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "qwen2-7b"
+what = sys.argv[2] if len(sys.argv) > 2 else "all"
+
+cfg = get_config(arch)
+cell = CELLS["train_4k"]
+mesh = make_production_mesh()
+model = build_model(cfg, mesh)
+model.constrain = SH.make_act_constrainer(mesh, "train")
+params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+pshard = SH.param_shardings(model, mesh, "train")
+pspecs = SH.param_pspecs(model, mesh, "train")
+batch_struct = input_specs(cfg, cell)
+bshard = SH.batch_shardings(cfg, "train", mesh, batch_struct)
+mb = microbatches_for(arch, "train_4k")
+
+
+def report(name, fn, *structs):
+    co = fn.lower(*structs).compile()
+    m = co.memory_analysis()
+    print(f"{name:12s} temp={m.temp_size_in_bytes/2**30:7.2f} GiB  "
+          f"args={m.argument_size_in_bytes/2**30:6.2f} GiB", flush=True)
+
+
+if what in ("fwd", "all"):
+    def fwd(params, batch):
+        def split(x):
+            return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+        micro = jax.tree.map(split, batch)
+        def body(c, b):
+            l, _ = model.loss(params, b)
+            return c + l, None
+        out, _ = jax.lax.scan(body, 0.0, micro)
+        return out
+    report("fwd", jax.jit(fwd, in_shardings=(pshard, bshard)),
+           params_struct, batch_struct)
+
+if what in ("grad", "all"):
+    def gstep(params, batch):
+        def split(x):
+            return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+        micro = jax.tree.map(split, batch)
+        def body(acc, b):
+            g = jax.grad(lambda p: model.loss(p, b)[0])(params)
+            return jax.tree.map(lambda a, x: a + x.astype(jnp.float32),
+                                acc, g), None
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        g, _ = jax.lax.scan(body, zeros, micro)
+        return g
+    report("grad", jax.jit(gstep, in_shardings=(pshard, bshard)),
+           params_struct, batch_struct)
+
+if what in ("opt", "all"):
+    opt = dryrun_optimizer(arch)
+    def ostep(params, opt_state, grads):
+        upd, opt_state = opt.update(grads, opt_state, params)
+        return apply_updates(params, upd), opt_state
+    ostruct = jax.eval_shape(opt.init, params_struct)
+    oshard = SH.opt_state_shardings("adapprox", ostruct, params_struct,
+                                    pspecs, mesh)
+    gshard = jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s.spec), pshard,
+        is_leaf=lambda s: isinstance(s, jax.sharding.NamedSharding))
+    report("opt", jax.jit(ostep, in_shardings=(pshard, oshard, gshard),
+                          donate_argnums=(0, 1)),
+           params_struct, ostruct, params_struct)
+
+if what in ("train", "all"):
+    opt = dryrun_optimizer(arch)
+    sstruct = jax.eval_shape(lambda p: TrainState.create(p, opt),
+                             params_struct)
+    oshard = SH.opt_state_shardings("adapprox", sstruct.opt_state,
+                                    params_struct, pspecs, mesh)
+    rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    sshard = TrainState(params=pshard, opt_state=oshard, step=rep)
+    step = build_train_step(model, opt, microbatches=mb)
+    report("train", jax.jit(step, in_shardings=(sshard, bshard),
+                            donate_argnums=(0,)), sstruct, batch_struct)
