@@ -10,8 +10,9 @@ from __future__ import annotations
 
 import jax
 
+from repro.config import OptimizerConfig
 from repro.configs import get_config
-from repro.core import make_optimizer, tree_nbytes
+from repro.core import build_optimizer, tree_nbytes
 from repro.models import build_model
 
 # The paper reports 50.1% / 65.5% / 0.1% / 15.5% etc. relative to AdamW.
@@ -38,26 +39,30 @@ def state_mb(arch: str, b1: float, method: str) -> float:
     model = build_model(cfg)
     params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
 
+    base = dict(schedule="constant", lr=1e-3, weight_decay=0.0)
     if method == "adamw":
         # PyTorch AdamW allocates both moments regardless of beta1
-        opt = make_optimizer("adamw", b1=max(b1, 0.9))
+        ocfg = OptimizerConfig(name="adamw", b1=max(b1, 0.9), **base)
     elif method == "adafactor":
-        opt = make_optimizer("adafactor", b1=b1)
+        ocfg = OptimizerConfig(name="adafactor", b1=b1, **base)
     elif method == "came":
         if b1 == 0.0:
             return float("nan")          # non-viable (paper: "--")
-        opt = make_optimizer("came", b1=b1)
+        ocfg = OptimizerConfig(name="came", b1=b1, **base)
     elif method == "adapprox_kinit":
-        opt = make_optimizer("adapprox", b1=b1, k_init=1, mode="static")
+        ocfg = OptimizerConfig(name="adapprox", b1=b1, k=1,
+                               rank_mode="static", **base)
     elif method == "adapprox_kmax":
-        opt = make_optimizer("adapprox", b1=b1, k_max=10**9, mode="paper")
+        ocfg = OptimizerConfig(name="adapprox", b1=b1, k=1, k_max=10**9,
+                               rank_mode="paper", **base)
     elif method == "adapprox_kmax_int8":
         # beyond-paper: paper Discussion names quantization compatibility
-        opt = make_optimizer("adapprox", b1=b1, k_max=10**9, mode="paper",
-                             factor_dtype="int8")
+        ocfg = OptimizerConfig(name="adapprox", b1=b1, k=1, k_max=10**9,
+                               rank_mode="paper", factor_dtype="int8",
+                               **base)
     else:
         raise ValueError(method)
-    state = jax.eval_shape(opt.init, params)
+    state = jax.eval_shape(build_optimizer(ocfg).init, params)
     return tree_nbytes(state) / 1e6
 
 

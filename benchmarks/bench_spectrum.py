@@ -12,7 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core import apply_updates, make_optimizer
+from repro.config import OptimizerConfig
+from repro.core import apply_updates, build_optimizer
 from repro.data import DataConfig, make_source
 from repro.models import build_model
 
@@ -25,7 +26,9 @@ def run() -> list[str]:
                            n_heads=4, n_kv_heads=4, d_ff=256,
                            max_seq_len=64)
     model = build_model(cfg)
-    opt = make_optimizer("adamw", lr=3e-3)
+    opt = build_optimizer(OptimizerConfig(
+        name="adamw", schedule="constant", lr=3e-3,
+        weight_decay=0.0))
     params = model.init(jax.random.PRNGKey(0))
     state = opt.init(params)
     src = make_source(DataConfig(vocab=256, seq_len=64, global_batch=8,
@@ -42,7 +45,8 @@ def run() -> list[str]:
         params, state = step(params, state, batch)
 
     rows = [f"fig1_matrix,rank_index,singular_value,energy_captured_pct"]
-    flat_v, _ = jax.tree.flatten(state.v)
+    # the chain state is a tuple; stage 0 is scale_by_adam's moments
+    flat_v, _ = jax.tree.flatten(state[0].v)
     flat_p, _ = jax.tree.flatten(params)
     picked = 0
     for v, p in zip(flat_v, flat_p):

@@ -9,7 +9,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import apply_updates, make_optimizer
+from repro.config import OptimizerConfig
+from repro.core import apply_updates, build_optimizer
 
 SHAPES = [(768, 768), (768, 3072), (3072, 768), (12, 768, 768)]
 
@@ -22,7 +23,8 @@ def make_params():
 
 def time_opt(name: str, reps: int = 5, **kw) -> float:
     params = make_params()
-    opt = make_optimizer(name, **kw)
+    opt = build_optimizer(OptimizerConfig(name=name, schedule="constant",
+                                          lr=1e-3, weight_decay=0.0, **kw))
     state = opt.init(params)
     grads = jax.tree.map(
         lambda p: jax.random.normal(jax.random.PRNGKey(1), p.shape), params)
@@ -47,11 +49,11 @@ def run() -> list[str]:
         ("adamw", {}),
         ("adafactor", {"b1": 0.9}),
         ("came", {}),
-        ("adapprox_k8", dict(k_init=8, mode="static")),
-        ("adapprox_k32", dict(k_init=32, mode="static")),
-        ("adapprox_adaptive", dict(k_init=1, k_max=64, mode="paper",
-                                   delta_s=10)),
-        ("adapprox_implicit", dict(k_init=32, mode="static",
+        ("adapprox_k8", dict(k=8, rank_mode="static", implicit=False)),
+        ("adapprox_k32", dict(k=32, rank_mode="static", implicit=False)),
+        ("adapprox_adaptive", dict(k=1, k_max=64, rank_mode="paper",
+                                   delta_s=10, implicit=False)),
+        ("adapprox_implicit", dict(k=32, rank_mode="static",
                                    implicit=True)),
     ]
     for name, kw in cases:

@@ -19,10 +19,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.config import OptimizerConfig
 from repro.configs import get_smoke_config
-from repro.core import Schedule, apply_updates, make_optimizer
-from repro.data import DataConfig, make_source
+from repro.core import apply_updates, build_optimizer
 from repro.models import build_model
+from repro.data import DataConfig, make_source
 
 STEPS = 300
 EVAL_EVERY = 25
@@ -38,31 +39,33 @@ def _model():
     return cfg, build_model(cfg)
 
 
-def make_opt(name: str, variant: str = ""):
-    lr = Schedule(3e-3, warmup_steps=20, total_steps=STEPS, min_lr=3e-4)
-    common = dict(lr=lr, weight_decay=0.1)
+def opt_config(name: str, variant: str = "") -> OptimizerConfig:
+    common = dict(name=name, lr=3e-3, schedule="cosine", warmup_steps=20,
+                  total_steps=STEPS, min_lr=3e-4, weight_decay=0.1,
+                  min_dim_factor=64)
     if name == "adamw":
-        if variant == "no_m1":
-            return make_optimizer("adamw", b1=0.0, **common)
-        return make_optimizer("adamw", **common)
+        return OptimizerConfig(**common,
+                               b1=0.0 if variant == "no_m1" else 0.9)
     if name == "adafactor":
-        b1 = 0.0 if variant == "no_m1" else 0.9
-        return make_optimizer("adafactor", b1=b1, b2_schedule=True,
-                              min_dim_factor=64, **common)
+        return OptimizerConfig(**common, b2_schedule=True,
+                               b1=0.0 if variant == "no_m1" else 0.9)
     if name == "came":
-        return make_optimizer("came", b2=0.999, b3=0.9999,
-                              min_dim_factor=64, **common)
+        return OptimizerConfig(**common, b2=0.999, b3=0.9999)
     if name == "adapprox":
-        kw = dict(b1=0.9, k_init=1, k_max=32, mode="paper", xi_thresh=0.01,
-                  delta_s=10, min_dim_factor=64, oversample=5, n_iter=5)
+        kw = dict(b1=0.9, k=1, k_max=32, rank_mode="paper", xi_thresh=0.01,
+                  delta_s=10, oversample=5, n_iter=5, implicit=False)
         if variant == "no_m1":
             kw["b1"] = 0.0
         if variant == "no_clip":
             kw["clip_d"] = 1e9
         if variant == "guidance":
             kw["guidance"] = "update"
-        return make_optimizer("adapprox", **common, **kw)
+        return OptimizerConfig(**common, **kw)
     raise ValueError(name)
+
+
+def make_opt(name: str, variant: str = ""):
+    return build_optimizer(opt_config(name, variant))
 
 
 def train_curve(name: str, variant: str = "", steps: int = STEPS):

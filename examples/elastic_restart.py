@@ -12,14 +12,17 @@ import numpy as np
 
 from repro.checkpoint import CheckpointConfig, CheckpointManager
 from repro.configs import get_smoke_config
-from repro.core import make_optimizer
+from repro.config import OptimizerConfig
+from repro.core import build_optimizer
 from repro.distributed import plan_remesh
 from repro.models import build_model
 from repro.train import TrainState
 
 cfg = get_smoke_config("qwen2-7b")
 model = build_model(cfg)
-opt = make_optimizer("adapprox", k_init=4, mode="static", min_dim_factor=16)
+opt = build_optimizer(OptimizerConfig(
+    name="adapprox", schedule="constant", lr=1e-3, weight_decay=0.0,
+    k=4, rank_mode="static", min_dim_factor=16, implicit=False))
 params = model.init(jax.random.PRNGKey(0))
 state = TrainState.create(params, opt)
 

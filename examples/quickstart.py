@@ -5,8 +5,9 @@
 import jax
 import jax.numpy as jnp
 
+from repro.config import OptimizerConfig
 from repro.configs import get_smoke_config
-from repro.core import Schedule, apply_updates, make_optimizer, rank_metrics
+from repro.core import apply_updates, build_optimizer, rank_metrics
 from repro.data import DataConfig, make_source
 from repro.models import build_model
 
@@ -16,12 +17,14 @@ cfg = get_smoke_config("gpt2-117m", vocab=VOCAB, max_seq_len=SEQ)
 model = build_model(cfg)
 params = model.init(jax.random.PRNGKey(0))
 
-# Adapprox: factored second moment with adaptive rank (paper Algorithm 3)
-opt = make_optimizer(
-    "adapprox", lr=Schedule(3e-3, warmup_steps=10, total_steps=STEPS),
-    b1=0.9, weight_decay=0.1,
-    k_init=1, k_max=16, mode="paper", xi_thresh=0.01, delta_s=10,
-    min_dim_factor=32)
+# Adapprox: factored second moment with adaptive rank (paper Algorithm 3).
+# build_optimizer lowers the declarative config to the documented chain
+# scale_by_adapprox -> add_decayed_weights -> scale_by_schedule -> scale(-1).
+opt = build_optimizer(OptimizerConfig(
+    name="adapprox", lr=3e-3, schedule="cosine", warmup_steps=10,
+    total_steps=STEPS, min_lr=0.0, b1=0.9, weight_decay=0.1,
+    k=1, k_max=16, rank_mode="paper", xi_thresh=0.01, delta_s=10,
+    min_dim_factor=32, implicit=False))
 opt_state = opt.init(params)
 source = make_source(DataConfig(vocab=VOCAB, seq_len=SEQ,
                                 global_batch=BATCH))

@@ -1,0 +1,25 @@
+"""Version-compat shims for the moving parts of the jax API."""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` across jax versions.
+
+    jax >= 0.7 exposes ``jax.shard_map(check_vma=...)``; 0.6 promoted it to
+    the top level but still spells the kwarg ``check_rep``; older releases
+    only have ``jax.experimental.shard_map.shard_map`` (also ``check_rep``).
+    Dispatch on the actual signature, not mere presence of the attribute.
+    """
+    if hasattr(jax, "shard_map"):
+        params = inspect.signature(jax.shard_map).parameters
+        kw = {"check_vma" if "check_vma" in params else "check_rep":
+              check_vma}
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)

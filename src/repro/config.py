@@ -154,14 +154,32 @@ def applicable_cells(model: ModelConfig) -> list[str]:
 
 @dataclasses.dataclass(frozen=True)
 class OptimizerConfig:
+    """Declarative optimizer spec — the single input to
+    ``repro.core.build_optimizer``, which lowers it to a chain of
+    ``scale_by_*`` transformation primitives.
+
+    ``name`` selects the preconditioner family (adapprox | adamw |
+    adafactor | came); the schedule block builds the LR schedule; the
+    decay block controls decoupled weight decay and its parameter mask;
+    the remaining groups are family-specific knobs (ignored by families
+    that don't use them).
+    """
+
     name: str = "adapprox"
+    # LR schedule: "cosine" = linear warmup + cosine decay to min_lr
+    # (repro.core.Schedule); "constant" = fixed lr.
     lr: float = 3e-4
+    schedule: str = "cosine"        # cosine | constant
     warmup_steps: int = 1000
     total_steps: int = 100_000
     min_lr: float = 5e-5
+    # shared moment/decay knobs
     b1: float = 0.9
     b2: float = 0.999
+    eps: float = 1e-8
+    clip_d: float = 1.0             # RMS update clip (adapprox/adafactor/came)
     weight_decay: float = 0.1
+    decay_mask: str = "all"         # all | no_1d (exempt biases/norms/scalars)
     # adapprox specifics
     rank_mode: str = "static"       # static | paper | exact
     k: int = 64                     # static rank / k_init (adaptive)
@@ -173,6 +191,14 @@ class OptimizerConfig:
     guidance: str = "off"
     implicit: bool = True
     use_kernels: bool = False
+    min_dim_factor: int = 128       # factor leaves with min(m, n) >= this
+    factor_dtype: str = "float32"   # "int8": quantized factors
+    seed: int = 0
+    # adafactor specifics
+    b2_schedule: bool = True        # b2_t = 1 - t^-0.8
+    relative_step: bool = False
+    # came specifics
+    b3: float = 0.9999              # instability-statistic decay
 
 
 @dataclasses.dataclass(frozen=True)

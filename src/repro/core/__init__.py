@@ -1,27 +1,71 @@
-"""repro.core — the paper's contribution: Adapprox and its substrate.
+"""repro.core — the paper's contribution: Adapprox and its substrate,
+exposed as composable optax-style gradient transformations.
 
-Public API:
-    adapprox(AdapproxConfig)   — the paper's optimizer (Algorithm 3)
-    adamw / adafactor / came   — baselines the paper compares against
-    srsi_dense / srsi_implicit — Streamlined Randomized Subspace Iteration
-    RankConfig                 — adaptive rank selection (Algorithm 2)
-    make_optimizer(name, **kw) — registry used by configs / launcher
+Layers, bottom to top:
+
+  Primitives (transform.py, types.py)
+      ``GradientTransformation(init, update, state_sharding_spec)`` is the
+      protocol; ``chain(*ts)`` composes stages; ``partition(labeler,
+      {label: t})`` routes parameter groups through different transforms
+      (e.g. dense Adam on 1-D leaves, Adapprox on matrices, no decay on
+      norms).  Reusable stages: ``add_decayed_weights(wd, mask)``,
+      ``clip_update_rms(d)``, ``scale_by_schedule(sched)``,
+      ``scale_by_relative_step(eps2)``, ``scale(c)``,
+      ``clip_by_global_norm(n)``.
+
+  Preconditioners (pure: gradients -> update direction, no lr/wd/sign)
+      scale_by_adapprox(AdapproxConfig)   — Algorithm 3's second moment
+      scale_by_adam(b1, b2, eps)          — bias-corrected Adam
+      scale_by_factored_rms(AdafactorConfig) — Shazeer & Stern rank-1
+      scale_by_came(CAMEConfig)           — CAME confidence guidance
+
+  Named optimizers (documented chains, bit-identical to the former
+  monoliths):  every one is
+      chain(scale_by_<X>(cfg), add_decayed_weights(cfg.weight_decay),
+            scale_by_schedule(cfg.lr), scale(-1.0))
+      adapprox(AdapproxConfig)   — the paper's optimizer (Algorithm 3)
+      adamw / adafactor / came   — baselines the paper compares against
+      (adafactor swaps the schedule stage for ``scale_by_relative_step``
+      when cfg.relative_step is set)
+
+  Construction surface
+      build_optimizer(OptimizerConfig)  — THE entry point for launchers /
+          benchmarks / examples: lowers the declarative config to a chain.
+      make_optimizer(name, **kw)        — kwargs-level registry for tests
+          and ad-hoc experimentation; same chains underneath.
+
+  Substrate
+      srsi_dense / srsi_implicit — Streamlined Randomized Subspace Iteration
+      RankConfig                 — adaptive rank selection (Algorithm 2)
+
+Sharding: every stateful transformation carries a ``state_sharding_spec``
+hook mapping param PartitionSpecs to state PartitionSpecs;
+``distributed/sharding.py`` consumes it without knowing any state class.
 """
 import dataclasses as _dc
 
-from repro.core.types import (GradientTransformation, Schedule, apply_updates,
-                              chain, clip_by_global_norm, constant_schedule,
-                              global_norm, tree_nbytes)
+from repro.core.types import (EmptyState, GradientTransformation, Schedule,
+                              apply_updates, chain, clip_by_global_norm,
+                              constant_schedule, global_norm,
+                              replicate_state_spec, state_sharding_spec,
+                              tree_nbytes)
+from repro.core.transform import (CountState, PartitionState,
+                                  add_decayed_weights, clip_update_rms,
+                                  mask_nd, partition, scale,
+                                  scale_by_relative_step, scale_by_schedule)
 from repro.core.srsi import (ImplicitV, SRSIResult, cholesky_qr2,
                              make_implicit_v, reconstruct, srsi_dense,
                              srsi_implicit)
 from repro.core.rank import RankConfig, f_increment, resolve_k_max
 from repro.core.factored import DenseLeaf, FactoredLeaf
 from repro.core.adapprox import (AdapproxConfig, AdapproxState, adapprox,
-                                 rank_metrics)
-from repro.core.adamw import AdamWConfig, adamw
-from repro.core.adafactor import AdafactorConfig, adafactor
-from repro.core.came import CAMEConfig, came
+                                 adapprox_state, rank_metrics,
+                                 scale_by_adapprox)
+from repro.core.adamw import AdamWConfig, AdamWState, adamw, scale_by_adam
+from repro.core.adafactor import (AdafactorConfig, AdafactorState, adafactor,
+                                  scale_by_factored_rms)
+from repro.core.came import CAMEConfig, CAMEState, came, scale_by_came
+from repro.core.build import build_optimizer
 
 _REGISTRY = {}
 
@@ -34,20 +78,28 @@ def register(name):
 
 
 def make_optimizer(name: str, **kwargs) -> GradientTransformation:
-    """Build an optimizer by name. kwargs override the config defaults."""
+    """Build an optimizer by name. kwargs override the config defaults.
+
+    This is the kwargs-level registry (tests, notebooks, ablations); config
+    files and launchers go through :func:`build_optimizer` instead.  Both
+    produce the same chains.
+    """
+    if name in _REGISTRY:
+        # registry factories see every kwarg untouched (incl. decay_mask)
+        return _REGISTRY[name](**kwargs)
+    decay_mask = kwargs.pop("decay_mask", None)
     if name == "adapprox":
         rank_keys = {f.name for f in _dc.fields(RankConfig)}
         rank_kw = {k: kwargs.pop(k) for k in list(kwargs) if k in rank_keys}
         rank = RankConfig(**rank_kw)
-        return adapprox(AdapproxConfig(rank=rank, **kwargs))
+        return adapprox(AdapproxConfig(rank=rank, **kwargs),
+                        decay_mask=decay_mask)
     if name == "adamw":
-        return adamw(AdamWConfig(**kwargs))
+        return adamw(AdamWConfig(**kwargs), decay_mask=decay_mask)
     if name == "adafactor":
-        return adafactor(AdafactorConfig(**kwargs))
+        return adafactor(AdafactorConfig(**kwargs), decay_mask=decay_mask)
     if name == "came":
-        return came(CAMEConfig(**kwargs))
-    if name in _REGISTRY:
-        return _REGISTRY[name](**kwargs)
+        return came(CAMEConfig(**kwargs), decay_mask=decay_mask)
     raise ValueError(f"unknown optimizer {name!r}; "
                      f"available: adapprox, adamw, adafactor, came, "
                      f"{sorted(_REGISTRY)}")

@@ -6,6 +6,17 @@ optional first moment, RMS update clipping, optional beta2 schedule
 ``b2_t = 1 - t^{-0.8}``, decoupled weight decay, optional relative step
 sizes.  The paper's GPT-2 comparison drives all optimizers with the same
 external LR schedule, so ``relative_step`` defaults to False here.
+
+:func:`scale_by_factored_rms` is the pure preconditioner (factored second
+moment + clip + optional first moment); :func:`adafactor` is the documented
+chain
+
+    chain(scale_by_factored_rms(cfg),
+          add_decayed_weights(wd),
+          scale_by_schedule(lr) | scale_by_relative_step(eps2),
+          scale(-1.0))
+
+bit-identical to the former monolithic implementation.
 """
 from __future__ import annotations
 
@@ -14,8 +25,11 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
-from repro.core.types import GradientTransformation, resolve_schedule
+from repro.core.transform import (add_decayed_weights, scale,
+                                  scale_by_relative_step, scale_by_schedule)
+from repro.core.types import GradientTransformation, chain
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,8 +71,31 @@ def _rms(x):
     return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)
 
 
-def adafactor(cfg: AdafactorConfig) -> GradientTransformation:
-    schedule = resolve_schedule(cfg.lr)
+def _rowcol_spec(pspec: P) -> tuple:
+    """Row/col stat specs for a param (…, m, n) with spec (…, a, b)."""
+    parts = list(pspec)
+    bd, a, b = parts[:-2], parts[-2], parts[-1]
+    return P(*bd, a), P(*bd, b)
+
+
+def _adafactor_state_spec(state: AdafactorState, param_specs):
+    flat_specs = jax.tree.leaves(param_specs,
+                                 is_leaf=lambda x: isinstance(x, P))
+    leaves = []
+    for pspec, leaf in zip(flat_specs, state.leaves):
+        m1 = pspec if leaf.m1 is not None else None
+        if leaf.r is not None:
+            rs, cs = _rowcol_spec(pspec)
+            leaves.append(AdafactorLeaf(r=rs, c=cs, v=None, m1=m1))
+        else:
+            leaves.append(AdafactorLeaf(r=None, c=None, v=pspec, m1=m1))
+    return AdafactorState(step=P(), leaves=tuple(leaves))
+
+
+def scale_by_factored_rms(cfg: AdafactorConfig) -> GradientTransformation:
+    """Adafactor's preconditioner: rank-1 factored (or dense-fallback)
+    second moment, RMS clipping and the optional first-moment EMA.  Step
+    size / decay / sign live in the chain (see module docstring)."""
 
     def init(params):
         def mk(p):
@@ -82,9 +119,10 @@ def adafactor(cfg: AdafactorConfig) -> GradientTransformation:
 
         flat_p, treedef = jax.tree.flatten(params)
         flat_g = treedef.flatten_up_to(grads)
+        del flat_p
 
-        deltas, new_leaves = [], []
-        for g, leaf, w in zip(flat_g, state.leaves, flat_p):
+        outs, new_leaves = [], []
+        for g, leaf in zip(flat_g, state.leaves):
             g32 = g.astype(jnp.float32)
             gsq = jnp.square(g32) + cfg.eps1
             if leaf.r is not None:
@@ -102,12 +140,6 @@ def adafactor(cfg: AdafactorConfig) -> GradientTransformation:
 
             u = u / jnp.maximum(1.0, _rms(u) / cfg.clip_d)
 
-            if cfg.relative_step:
-                rho = jnp.minimum(1e-2, 1.0 / jnp.sqrt(t))
-                alpha = jnp.maximum(cfg.eps2, _rms(w.astype(jnp.float32))) * rho
-            else:
-                alpha = schedule(step)
-
             if leaf.m1 is not None:
                 m1 = cfg.b1 * leaf.m1 + (1.0 - cfg.b1) * u
                 out = m1
@@ -115,11 +147,24 @@ def adafactor(cfg: AdafactorConfig) -> GradientTransformation:
             else:
                 out = u
 
-            deltas.append(-(alpha * (out + cfg.weight_decay
-                                     * w.astype(jnp.float32))))
+            outs.append(out)
             new_leaves.append(new)
 
-        return (jax.tree.unflatten(treedef, deltas),
+        return (jax.tree.unflatten(treedef, outs),
                 AdafactorState(step=step, leaves=tuple(new_leaves)))
 
-    return GradientTransformation(init, update)
+    return GradientTransformation(init, update, _adafactor_state_spec)
+
+
+def adafactor(cfg: AdafactorConfig,
+              decay_mask: Optional[Callable] = None
+              ) -> GradientTransformation:
+    """Adafactor as a documented chain (see module docstring)."""
+    step_stage = (scale_by_relative_step(cfg.eps2) if cfg.relative_step
+                  else scale_by_schedule(cfg.lr))
+    return chain(
+        scale_by_factored_rms(cfg),
+        add_decayed_weights(cfg.weight_decay, decay_mask),
+        step_stage,
+        scale(-1.0),
+    )

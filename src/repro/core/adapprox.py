@@ -21,6 +21,19 @@ faithful baseline):
     and the sketch matmuls (kernels/).
   * ``rank.mode='exact'``: minimal-k selection instead of the paper's
     incremental probe.
+
+Composition: :func:`scale_by_adapprox` is the pure preconditioner — it maps
+gradients to the (positive) update direction ``m_out`` and owns only the
+factored/dense second moment, the update-EMA first moment, RMS clipping and
+guidance.  :func:`adapprox` is the documented chain
+
+    chain(scale_by_adapprox(cfg),
+          add_decayed_weights(cfg.weight_decay),
+          scale_by_schedule(cfg.lr),
+          scale(-1.0))
+
+which reproduces the monolithic seed implementation bit-for-bit (same
+arithmetic, same order, same PRNG folding).
 """
 from __future__ import annotations
 
@@ -30,11 +43,14 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.core import factored as F
 from repro.core import rank as R
 from repro.core import srsi as S
-from repro.core.types import GradientTransformation
+from repro.core.transform import (add_decayed_weights, scale,
+                                  scale_by_schedule)
+from repro.core.types import GradientTransformation, chain
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,7 +130,7 @@ def _init_leaf(p: jnp.ndarray, cfg: AdapproxConfig):
 # Per-matrix (2D) factored update
 # ---------------------------------------------------------------------------
 
-def _factored_update_2d(g, q, u, k, m1, w, key, step, lr, cfg: AdapproxConfig,
+def _factored_update_2d(g, q, u, k, m1, key, step, cfg: AdapproxConfig,
                         r_store: int, p_eff: int, k_max_leaf: int):
     g32 = g.astype(jnp.float32)
     v_op = S.make_implicit_v(q, u, g32, cfg.b2)
@@ -165,11 +181,10 @@ def _factored_update_2d(g, q, u, k, m1, w, key, step, lr, cfg: AdapproxConfig,
     else:
         m_out, m1_new = u_hat, None
 
-    delta = -(lr * (m_out + cfg.weight_decay * w.astype(jnp.float32)))
-    return delta, q_new, u_new, k_new, xi, m1_new
+    return m_out, q_new, u_new, k_new, xi, m1_new
 
 
-def _update_factored(g, leaf: F.FactoredLeaf, w, key, step, lr,
+def _update_factored(g, leaf: F.FactoredLeaf, w, key, step,
                      cfg: AdapproxConfig):
     bd = F.batch_dims(w.shape)
     leaf_q, leaf_u = leaf.q, leaf.u
@@ -185,18 +200,17 @@ def _update_factored(g, leaf: F.FactoredLeaf, w, key, step, lr,
                            p_eff=p_eff, k_max_leaf=k_max_leaf)
     # ``m1`` may be None (b1 = 0); None is an empty pytree so it passes
     # through vmap untouched.
-    core = lambda g, q, u, k, m1, w, key: fn(g, q, u, k, m1, w, key, step, lr)
+    core = lambda g, q, u, k, m1, key: fn(g, q, u, k, m1, key, step)
     mapped = F.vmap_over_batch(core, len(bd))
     keys = F.batched_keys(key, bd)
-    delta, q, u, k, xi, m1 = mapped(g, leaf_q, leaf_u, leaf.k, leaf.m1, w,
-                                    keys)
+    m_out, q, u, k, xi, m1 = mapped(g, leaf_q, leaf_u, leaf.k, leaf.m1, keys)
     if cfg.factor_dtype == "int8":
         from repro.core import quantized as QZ
         q, u = QZ.quantize(q), QZ.quantize(u)
-    return delta, F.FactoredLeaf(q=q, u=u, k=k, xi=xi, m1=m1)
+    return m_out, F.FactoredLeaf(q=q, u=u, k=k, xi=xi, m1=m1)
 
 
-def _update_dense(g, leaf: F.DenseLeaf, w, lr, cfg: AdapproxConfig):
+def _update_dense(g, leaf: F.DenseLeaf, cfg: AdapproxConfig):
     g32 = g.astype(jnp.float32)
     v = cfg.b2 * leaf.v + (1.0 - cfg.b2) * jnp.square(g32)
     u_hat = g32 / (jnp.sqrt(v) + cfg.eps)
@@ -206,17 +220,53 @@ def _update_dense(g, leaf: F.DenseLeaf, w, lr, cfg: AdapproxConfig):
         m_out = m1
     else:
         m1, m_out = None, u_hat
-    delta = -(lr * (m_out + cfg.weight_decay * w.astype(jnp.float32)))
-    return delta, F.DenseLeaf(v=v, m1=m1)
+    return m_out, F.DenseLeaf(v=v, m1=m1)
 
 
 # ---------------------------------------------------------------------------
-# Public factory
+# Sharding protocol
 # ---------------------------------------------------------------------------
 
-def adapprox(cfg: AdapproxConfig) -> GradientTransformation:
-    from repro.core.types import resolve_schedule
-    schedule = resolve_schedule(cfg.lr)
+def _factored_leaf_spec(pspec: P, has_m1: bool) -> F.FactoredLeaf:
+    """Param (…, m, n) with spec (…, a, b):
+    q (…, m, r) -> (…, a, None); u (…, n, r) -> (…, b, None);
+    k/xi (…,) -> batch part; m1 -> param spec.  (The factors of a sharded
+    matrix shard along the same axes as the matrix itself.)"""
+    parts = list(pspec)
+    bd, a, b = parts[:-2], parts[-2], parts[-1]
+    return F.FactoredLeaf(
+        q=P(*bd, a, None), u=P(*bd, b, None),
+        k=P(*bd), xi=P(*bd),
+        m1=P(*parts) if has_m1 else None)
+
+
+def _state_spec(state: AdapproxState, param_specs) -> AdapproxState:
+    flat_specs = jax.tree.leaves(param_specs,
+                                 is_leaf=lambda x: isinstance(x, P))
+    leaves = []
+    for pspec, leaf in zip(flat_specs, state.leaves):
+        has_m1 = leaf.m1 is not None
+        if isinstance(leaf, F.FactoredLeaf):
+            leaves.append(_factored_leaf_spec(pspec, has_m1))
+        else:
+            leaves.append(F.DenseLeaf(v=pspec, m1=pspec if has_m1 else None))
+    return AdapproxState(step=P(), key=P(), leaves=tuple(leaves))
+
+
+# ---------------------------------------------------------------------------
+# Public factories
+# ---------------------------------------------------------------------------
+
+def scale_by_adapprox(cfg: AdapproxConfig) -> GradientTransformation:
+    """The pure Adapprox preconditioner: gradients -> update direction.
+
+    Owns the factored second moment (S-RSI refresh, adaptive rank), the
+    update-EMA first moment, per-matrix RMS clipping and cosine guidance.
+    Learning rate, weight decay and the descent sign are NOT applied —
+    chain with ``add_decayed_weights`` / ``scale_by_schedule`` / ``scale``
+    (see :func:`adapprox`).  ``cfg.lr`` / ``cfg.weight_decay`` are ignored
+    here.
+    """
 
     def init(params):
         flat, _ = jax.tree.flatten(params)
@@ -227,37 +277,83 @@ def adapprox(cfg: AdapproxConfig) -> GradientTransformation:
 
     def update(grads, state: AdapproxState, params):
         step = state.step + 1              # paper counts from t = 1
-        lr = schedule(step)
         flat_p, treedef = jax.tree.flatten(params)
         flat_g = treedef.flatten_up_to(grads)
         step_key = jax.random.fold_in(state.key, step)
 
-        deltas, new_leaves = [], []
+        outs, new_leaves = [], []
         for i, (g, leaf, w) in enumerate(zip(flat_g, state.leaves, flat_p)):
             if isinstance(leaf, F.FactoredLeaf):
                 d, nl = _update_factored(g, leaf, w,
                                          jax.random.fold_in(step_key, i),
-                                         step, lr, cfg)
+                                         step, cfg)
             else:
-                d, nl = _update_dense(g, leaf, w, lr, cfg)
-            deltas.append(d)
+                d, nl = _update_dense(g, leaf, cfg)
+            outs.append(d)
             new_leaves.append(nl)
 
-        updates = jax.tree.unflatten(treedef, deltas)
+        updates = jax.tree.unflatten(treedef, outs)
         return updates, AdapproxState(step=step, key=state.key,
                                       leaves=tuple(new_leaves))
 
-    return GradientTransformation(init, update)
+    return GradientTransformation(init, update, _state_spec)
 
 
-def rank_metrics(state: AdapproxState) -> dict:
-    """Mean effective rank / xi across factored leaves (for logging)."""
+def adapprox(cfg: AdapproxConfig,
+             decay_mask: Optional[Callable] = None) -> GradientTransformation:
+    """Algorithm 3 as a documented chain (bit-identical to the former
+    monolithic implementation for any config):
+
+        preconditioner -> + wd*W -> * lr_t -> * (-1)
+
+    ``decay_mask``: optional mask forwarded to ``add_decayed_weights``
+    (e.g. ``transform.mask_nd(2)`` to exempt biases/norms from decay).
+    """
+    return chain(
+        scale_by_adapprox(cfg),
+        add_decayed_weights(cfg.weight_decay, decay_mask),
+        scale_by_schedule(cfg.lr),
+        scale(-1.0),
+    )
+
+
+def _find_states(state, cls):
+    """Yield every ``cls`` instance inside an (arbitrarily nested) optimizer
+    state — chains are tuples, partitions are dicts."""
+    if isinstance(state, cls):
+        yield state
+        return
+    if isinstance(state, (tuple, list)):
+        for s in state:
+            yield from _find_states(s, cls)
+    elif isinstance(state, dict):
+        for s in state.values():
+            yield from _find_states(s, cls)
+    elif hasattr(state, "inner"):           # PartitionState
+        yield from _find_states(state.inner, cls)
+
+
+def rank_metrics(state) -> dict:
+    """Mean effective rank / xi across factored leaves (for logging).
+
+    Accepts a bare ``AdapproxState`` or any chain/partition state
+    containing one.
+    """
     ks, xis = [], []
-    for leaf in state.leaves:
-        if isinstance(leaf, F.FactoredLeaf):
-            ks.append(jnp.mean(leaf.k.astype(jnp.float32)))
-            xis.append(jnp.mean(leaf.xi))
+    for sub in _find_states(state, AdapproxState):
+        for leaf in sub.leaves:
+            if isinstance(leaf, F.FactoredLeaf):
+                ks.append(jnp.mean(leaf.k.astype(jnp.float32)))
+                xis.append(jnp.mean(leaf.xi))
     if not ks:
         return {}
     return {"adapprox/mean_rank": jnp.mean(jnp.stack(ks)),
             "adapprox/mean_xi": jnp.mean(jnp.stack(xis))}
+
+
+def adapprox_state(state) -> AdapproxState:
+    """Extract the ``AdapproxState`` from a (possibly chained/partitioned)
+    optimizer state — convenience for tests and metric probes."""
+    for sub in _find_states(state, AdapproxState):
+        return sub
+    raise ValueError("no AdapproxState found in optimizer state")

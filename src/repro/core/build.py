@@ -1,0 +1,80 @@
+"""``build_optimizer(OptimizerConfig)`` — the single optimizer-construction
+path used by launchers, benchmarks and examples.
+
+Lowers the declarative :class:`repro.config.OptimizerConfig` to the
+documented transformation chains in this package:
+
+    adapprox : scale_by_adapprox    -> +wd*W -> *lr_t -> *(-1)
+    adamw    : scale_by_adam        -> +wd*W -> *lr_t -> *(-1)
+    adafactor: scale_by_factored_rms-> +wd*W -> *lr_t | *alpha_t -> *(-1)
+    came     : scale_by_came        -> +wd*W -> *lr_t -> *(-1)
+
+``cfg.decay_mask = "no_1d"`` swaps the decay stage's mask so 1-D leaves
+(biases, norm scales) are exempt from weight decay — the standard
+production configuration — without forking any optimizer.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from repro.config import OptimizerConfig
+from repro.core.adafactor import AdafactorConfig, adafactor
+from repro.core.adamw import AdamWConfig, adamw
+from repro.core.adapprox import AdapproxConfig, adapprox
+from repro.core.came import CAMEConfig, came
+from repro.core.rank import RankConfig
+from repro.core.transform import resolve_decay_mask
+from repro.core.types import GradientTransformation, Schedule, \
+    constant_schedule
+
+
+def _schedule_of(cfg: OptimizerConfig) -> Callable:
+    if cfg.schedule == "constant":
+        return constant_schedule(cfg.lr)
+    if cfg.schedule == "cosine":
+        return Schedule(cfg.lr, warmup_steps=cfg.warmup_steps,
+                        total_steps=cfg.total_steps, min_lr=cfg.min_lr)
+    raise ValueError(f"unknown schedule {cfg.schedule!r} "
+                     f"(expected 'cosine' or 'constant')")
+
+
+def _decay_mask_of(cfg: OptimizerConfig) -> Optional[Callable]:
+    return resolve_decay_mask(cfg.decay_mask)
+
+
+def build_optimizer(cfg: OptimizerConfig) -> GradientTransformation:
+    """Build the configured optimizer chain.  See module docstring."""
+    sched = _schedule_of(cfg)
+    mask = _decay_mask_of(cfg)
+    if cfg.name == "adapprox":
+        acfg = AdapproxConfig(
+            lr=sched, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps, clip_d=cfg.clip_d,
+            weight_decay=cfg.weight_decay,
+            rank=RankConfig(k_init=cfg.k, k_max=cfg.k_max,
+                            xi_thresh=cfg.xi_thresh, delta_s=cfg.delta_s,
+                            mode=cfg.rank_mode),
+            oversample=cfg.oversample, n_iter=cfg.n_iter,
+            min_dim_factor=cfg.min_dim_factor, guidance=cfg.guidance,
+            implicit=cfg.implicit, use_kernels=cfg.use_kernels,
+            factor_dtype=cfg.factor_dtype, seed=cfg.seed)
+        return adapprox(acfg, decay_mask=mask)
+    if cfg.name == "adamw":
+        return adamw(AdamWConfig(lr=sched, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps,
+                                 weight_decay=cfg.weight_decay),
+                     decay_mask=mask)
+    if cfg.name == "adafactor":
+        return adafactor(
+            AdafactorConfig(lr=sched, b1=cfg.b1, b2=cfg.b2,
+                            b2_schedule=cfg.b2_schedule, clip_d=cfg.clip_d,
+                            weight_decay=cfg.weight_decay,
+                            relative_step=cfg.relative_step,
+                            min_dim_factor=cfg.min_dim_factor),
+            decay_mask=mask)
+    if cfg.name == "came":
+        return came(CAMEConfig(lr=sched, b1=cfg.b1, b2=cfg.b2, b3=cfg.b3,
+                               clip_d=cfg.clip_d,
+                               weight_decay=cfg.weight_decay,
+                               min_dim_factor=cfg.min_dim_factor),
+                    decay_mask=mask)
+    raise ValueError(f"unknown optimizer {cfg.name!r}; "
+                     f"available: adapprox, adamw, adafactor, came")

@@ -6,6 +6,16 @@ Adafactor's factored second moment, plus a factored *instability* statistic
 update (confidence guidance).  CAME requires ``b1 > 0`` (the paper notes it
 is non-viable at ``b1 = 0`` — our constructor enforces that, matching
 Table 2's "--" entry).
+
+:func:`scale_by_came` is the pure preconditioner; :func:`came` is the
+documented chain
+
+    chain(scale_by_came(cfg),
+          add_decayed_weights(wd),
+          scale_by_schedule(lr),
+          scale(-1.0))
+
+bit-identical to the former monolithic implementation.
 """
 from __future__ import annotations
 
@@ -14,8 +24,11 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
-from repro.core.types import GradientTransformation, resolve_schedule
+from repro.core.transform import (add_decayed_weights, scale,
+                                  scale_by_schedule)
+from repro.core.types import GradientTransformation, chain
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,11 +75,30 @@ def _factored_vhat(r, c):
     return (r[..., :, None] * c[..., None, :]) / (denom + 1e-30)
 
 
-def came(cfg: CAMEConfig) -> GradientTransformation:
+def _came_state_spec(state: CAMEState, param_specs):
+    flat_specs = jax.tree.leaves(param_specs,
+                                 is_leaf=lambda x: isinstance(x, P))
+    leaves = []
+    for pspec, leaf in zip(flat_specs, state.leaves):
+        parts = list(pspec)
+        if leaf.r is not None:
+            bd, a, b = parts[:-2], parts[-2], parts[-1]
+            rs, cs = P(*bd, a), P(*bd, b)
+            leaves.append(CAMELeaf(r=rs, c=cs, v=None, rs=rs, cs=cs,
+                                   m1=pspec))
+        else:
+            leaves.append(CAMELeaf(r=None, c=None, v=pspec, rs=None, cs=None,
+                                   m1=pspec))
+    return CAMEState(step=P(), leaves=tuple(leaves))
+
+
+def scale_by_came(cfg: CAMEConfig) -> GradientTransformation:
+    """CAME's preconditioner: factored second moment + RMS clip + first
+    moment + factored-instability confidence scaling.  Step size / decay /
+    sign live in the chain (see module docstring)."""
     if cfg.b1 <= 0:
         raise ValueError("CAME requires b1 > 0 (confidence guidance depends "
                          "on the first moment; see Adapprox Table 2).")
-    schedule = resolve_schedule(cfg.lr)
 
     def init(params):
         def mk(p):
@@ -85,12 +117,12 @@ def came(cfg: CAMEConfig) -> GradientTransformation:
 
     def update(grads, state: CAMEState, params):
         step = state.step + 1
-        lr = schedule(step)
         flat_p, treedef = jax.tree.flatten(params)
         flat_g = treedef.flatten_up_to(grads)
+        del flat_p
 
-        deltas, new_leaves = [], []
-        for g, leaf, w in zip(flat_g, state.leaves, flat_p):
+        outs, new_leaves = [], []
+        for g, leaf in zip(flat_g, state.leaves):
             g32 = g.astype(jnp.float32)
             gsq = jnp.square(g32) + cfg.eps1
             if leaf.r is not None:
@@ -115,11 +147,21 @@ def came(cfg: CAMEConfig) -> GradientTransformation:
                 out = m1
                 new = CAMELeaf(r=None, c=None, v=v, rs=None, cs=None, m1=m1)
 
-            deltas.append(-(lr * (out + cfg.weight_decay
-                                  * w.astype(jnp.float32))))
+            outs.append(out)
             new_leaves.append(new)
 
-        return (jax.tree.unflatten(treedef, deltas),
+        return (jax.tree.unflatten(treedef, outs),
                 CAMEState(step=step, leaves=tuple(new_leaves)))
 
-    return GradientTransformation(init, update)
+    return GradientTransformation(init, update, _came_state_spec)
+
+
+def came(cfg: CAMEConfig,
+         decay_mask: Optional[Callable] = None) -> GradientTransformation:
+    """CAME as a documented chain (see module docstring)."""
+    return chain(
+        scale_by_came(cfg),
+        add_decayed_weights(cfg.weight_decay, decay_mask),
+        scale_by_schedule(cfg.lr),
+        scale(-1.0),
+    )

@@ -254,6 +254,12 @@ def approx_error_rate(res: SRSIResult, k: jnp.ndarray) -> jnp.ndarray:
         ||A - Q_k Q_k^T A||_F^2 = ||A||_F^2 - ||Q_k^T A||_F^2,
 
     so no residual materialisation is needed.  ``k`` may be traced (int32).
+
+    Accuracy note: the identity assumes exactly orthonormal Q_k.
+    CholeskyQR3 leaves ~1e-6 relative orthonormality error in fp32, which
+    gives xi an absolute floor of ~sqrt(1e-6) = 1e-3 — irrelevant for rank
+    selection (xi_thresh ~1e-2) but visible when the true residual is
+    smaller than the floor.
     """
     r = res.cum_energy.shape[0]
     idx = jnp.clip(k - 1, 0, r - 1)

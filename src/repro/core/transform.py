@@ -1,0 +1,284 @@
+"""Composable gradient-transformation primitives (optax-style).
+
+The named optimizers in this package are *chains* of small pure stages:
+
+    chain(scale_by_<preconditioner>(cfg),   # grads -> update direction
+          add_decayed_weights(wd, mask),    # + wd * W   (decoupled decay)
+          scale_by_schedule(schedule),      # * lr_t
+          scale(-1.0))                      # descent sign
+
+Each stage owns exactly one concern, so the paper's ablations (guidance
+on/off, first-moment on/off, rank modes) and production needs (per-group
+decay masks, runtime LR control, mixed dense/factored second moments) are
+config changes instead of optimizer forks.  :func:`partition` routes
+different parameter groups through different transforms — e.g. dense Adam
+on 1-D leaves, Adapprox on matrices, no decay on norms/biases.
+
+All stages follow the :class:`~repro.core.types.GradientTransformation`
+protocol, including the optional ``state_sharding_spec`` hook used by
+``distributed/sharding.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.types import (EmptyState, GradientTransformation,
+                              resolve_schedule, state_sharding_spec)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CountState:
+    """A bare step counter (int32 scalar, counts from 0)."""
+
+    count: jnp.ndarray
+
+
+def _count_init(params):
+    del params
+    return CountState(count=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Stateless elementwise stages
+# ---------------------------------------------------------------------------
+
+def scale(factor: float) -> GradientTransformation:
+    """Multiply every update leaf by a static ``factor`` (e.g. -1.0 for the
+    descent sign at the end of a chain)."""
+
+    def init(params):
+        del params
+        return EmptyState()
+
+    def update(updates, state, params):
+        del params
+        return jax.tree.map(lambda u: u * factor, updates), state
+
+    return GradientTransformation(init, update)
+
+
+def resolve_decay_mask(mask):
+    """Normalise a decay-mask spec: None / callable / bool pytree pass
+    through; the string forms ``"all"`` (decay everything) and ``"no_1d"``
+    (exempt 1-D leaves) resolve to their canonical masks."""
+    if isinstance(mask, str):
+        if mask == "all":
+            return None
+        if mask == "no_1d":
+            return mask_nd(2)
+        raise ValueError(f"unknown decay_mask {mask!r} "
+                         f"(expected 'all', 'no_1d', a callable, or a "
+                         f"bool pytree)")
+    return mask
+
+
+def add_decayed_weights(weight_decay: float,
+                        mask: Optional[Callable] = None
+                        ) -> GradientTransformation:
+    """Decoupled weight decay: ``u <- u + wd * W`` (the chain's trailing
+    ``scale_by_schedule`` and ``scale(-1)`` turn this into AdamW-style
+    ``-lr * wd * W``).
+
+    ``mask``: optional ``params -> pytree of bool`` (or a bool pytree, or
+    the string ``"all"`` / ``"no_1d"``) selecting which leaves decay.  The
+    canonical production mask excludes 1-D leaves (norm scales, biases) —
+    see :func:`mask_nd`.
+    """
+    mask = resolve_decay_mask(mask)
+
+    def init(params):
+        del params
+        return EmptyState()
+
+    def update(updates, state, params):
+        if weight_decay == 0.0:
+            return updates, state
+        if mask is None:
+            return jax.tree.map(
+                lambda u, w: u + weight_decay * w.astype(jnp.float32),
+                updates, params), state
+        m = mask(params) if callable(mask) else mask
+        return jax.tree.map(
+            lambda u, w, keep:
+                u + weight_decay * w.astype(jnp.float32) if keep else u,
+            updates, params, m), state
+
+    return GradientTransformation(init, update)
+
+
+def mask_nd(min_ndim: int = 2) -> Callable:
+    """Decay-mask factory: keep only leaves with ``ndim >= min_ndim``
+    (default: exclude biases / norm scales / scalars from weight decay)."""
+    return lambda params: jax.tree.map(lambda p: p.ndim >= min_ndim, params)
+
+
+def clip_update_rms(d: float) -> GradientTransformation:
+    """Per-leaf RMS clipping ``u <- u / max(1, RMS(u)/d)`` (Shazeer & Stern
+    update clipping).  The factored preconditioners apply this *per 2-D
+    matrix inside the vmap* (paper semantics); this standalone stage is the
+    per-leaf variant for custom chains."""
+
+    def init(params):
+        del params
+        return EmptyState()
+
+    def update(updates, state, params):
+        del params
+
+        def clip(u):
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            return u / jnp.maximum(1.0, rms / d)
+
+        return jax.tree.map(clip, updates), state
+
+    return GradientTransformation(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Schedule stages
+# ---------------------------------------------------------------------------
+
+def scale_by_schedule(schedule: "float | Callable") -> GradientTransformation:
+    """Multiply updates by ``schedule(t)`` with ``t`` counting from 1 (the
+    paper's convention; every seed optimizer evaluated its LR at
+    ``state.step + 1``)."""
+    sched = resolve_schedule(schedule)
+
+    def update(updates, state, params):
+        del params
+        count = state.count + 1
+        lr = sched(count)
+        return (jax.tree.map(lambda u: u * lr, updates),
+                CountState(count=count))
+
+    return GradientTransformation(_count_init, update)
+
+
+def scale_by_relative_step(eps2: float = 1e-3) -> GradientTransformation:
+    """Adafactor's relative step size: per-leaf
+    ``alpha_t = max(eps2, RMS(W)) * min(1e-2, 1/sqrt(t))`` — replaces
+    :func:`scale_by_schedule` in the adafactor chain when
+    ``relative_step=True``."""
+
+    def update(updates, state, params):
+        count = state.count + 1
+        t = count.astype(jnp.float32)
+        rho = jnp.minimum(1e-2, 1.0 / jnp.sqrt(t))
+
+        def one(u, w):
+            w32 = w.astype(jnp.float32)
+            rms = jnp.sqrt(jnp.mean(jnp.square(w32)) + 1e-30)
+            return u * (jnp.maximum(eps2, rms) * rho)
+
+        return jax.tree.map(one, updates, params), CountState(count=count)
+
+    return GradientTransformation(_count_init, update)
+
+
+# ---------------------------------------------------------------------------
+# Parameter-group partitioning
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PartitionState:
+    """State of :func:`partition`.
+
+    ``inner``: dict ``{label: sub_state}`` (a plain pytree: jits,
+    checkpoints and shards like any optimizer state).
+    ``labels``: flat per-param-leaf label tuple, stored as *static* pytree
+    metadata — it survives ``jit`` / ``eval_shape``, which is what lets the
+    ``state_sharding_spec`` hook recover ownership without re-running the
+    labeler on params it does not have.
+    """
+
+    inner: dict = dataclasses.field(metadata=dict(static=False))
+    labels: tuple = dataclasses.field(metadata=dict(static=True))
+
+
+def _flat_labels(labeler, params, treedef):
+    labels = labeler(params) if callable(labeler) else labeler
+    return tuple(treedef.flatten_up_to(labels))
+
+
+def _select(tree, flat_labels, label, treedef):
+    """Copy of ``tree`` with leaves not carrying ``label`` replaced by None
+    (None is an empty pytree, so sub-transforms skip them naturally)."""
+    flat = treedef.flatten_up_to(tree)
+    return jax.tree.unflatten(
+        treedef, [x if l == label else None
+                  for x, l in zip(flat, flat_labels)])
+
+
+def partition(labeler,
+              transforms: "dict[str, GradientTransformation]"
+              ) -> GradientTransformation:
+    """Route parameter groups through per-label transforms.
+
+    ``labeler``: a pytree of string labels mirroring the params, or a
+    callable ``params -> label pytree`` (it may only inspect leaf
+    shapes/dtypes — it runs under tracing).  Every label it produces must
+    be a key of ``transforms``.
+
+    Each sub-transform sees the full param structure with non-owned leaves
+    replaced by ``None`` (an empty pytree), so its state only holds its own
+    leaves; updates are merged back by ownership.  Example — dense Adam on
+    small/1-D leaves, Adapprox on matrices::
+
+        opt = partition(
+            lambda params: jax.tree.map(
+                lambda p: "factored" if p.ndim >= 2 else "dense", params),
+            {"factored": adapprox(acfg), "dense": adamw(AdamWConfig())})
+    """
+    items = tuple(sorted(transforms.items()))
+
+    def _check(flat_labels):
+        known = {label for label, _ in items}
+        seen = set(flat_labels)
+        if not seen <= known:
+            raise ValueError(f"labeler produced labels {sorted(seen - known)} "
+                             f"with no transform; known: {sorted(known)}")
+
+    def init(params):
+        treedef = jax.tree.structure(params)
+        labels = _flat_labels(labeler, params, treedef)
+        _check(labels)
+        inner = {label: t.init(_select(params, labels, label, treedef))
+                 for label, t in items}
+        return PartitionState(inner=inner, labels=labels)
+
+    def update(grads, state, params):
+        flat_p, treedef = jax.tree.flatten(params)
+        labels = state.labels      # ownership fixed at init; never re-label
+        merged = [None] * len(flat_p)
+        inner = {}
+        for label, t in items:
+            sub_g = _select(grads, labels, label, treedef)
+            sub_p = _select(params, labels, label, treedef)
+            upd, inner[label] = t.update(sub_g, state.inner[label], sub_p)
+            for i, u in enumerate(treedef.flatten_up_to(upd)):
+                if labels[i] == label:
+                    merged[i] = u
+        return (jax.tree.unflatten(treedef, merged),
+                PartitionState(inner=inner, labels=labels))
+
+    def spec(state, param_specs):
+        is_spec = lambda x: isinstance(x, P)
+        treedef = jax.tree.structure(param_specs, is_leaf=is_spec)
+        flat_specs = treedef.flatten_up_to(param_specs)
+        inner = {}
+        for label, t in items:
+            sub_specs = jax.tree.unflatten(
+                treedef, [s if l == label else None
+                          for s, l in zip(flat_specs, state.labels)])
+            inner[label] = state_sharding_spec(t, state.inner[label],
+                                               sub_specs)
+        return PartitionState(inner=inner, labels=state.labels)
+
+    return GradientTransformation(init, update, spec)

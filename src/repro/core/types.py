@@ -24,18 +24,44 @@ class GradientTransformation(NamedTuple):
     """``init(params) -> state`` and ``update(grads, state, params) -> (updates, state)``.
 
     ``updates`` are *additive*: the caller applies ``params + updates``.
-    Learning rate / weight decay are folded into the transformation itself
-    (Adapprox, Adafactor and CAME all own their step-size logic).
+    The named optimizers (adapprox / adamw / adafactor / came) are chains of
+    ``scale_by_*`` preconditioners plus weight-decay / schedule / sign stages,
+    so the returned updates already carry the step size and descent sign.
+
+    ``state_sharding_spec(state, param_specs) -> state-like tree of
+    PartitionSpec`` is an optional protocol hook: given this transformation's
+    state (or an ``eval_shape`` struct of it) and a pytree of
+    ``PartitionSpec`` mirroring the params, it returns a pytree of
+    ``PartitionSpec`` mirroring the state.  ``distributed/sharding.py``
+    derives optimizer-state shardings through this hook instead of
+    isinstance-sniffing state classes.  ``None`` means "replicate every
+    state leaf" (see :func:`state_sharding_spec`).
     """
 
     init: Callable[[Params], OptState]
     update: Callable[[Grads, OptState, Params], tuple[Updates, OptState]]
+    state_sharding_spec: Optional[Callable[[OptState, Any], Any]] = None
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class EmptyState:
     """State for stateless transformations."""
+
+
+def replicate_state_spec(state):
+    """Default sharding spec: replicate every array leaf of ``state``."""
+    from jax.sharding import PartitionSpec as P
+    return jax.tree.map(lambda _: P(), state)
+
+
+def state_sharding_spec(transform: GradientTransformation, state,
+                        param_specs):
+    """Resolve a transformation's state shardings via the protocol hook,
+    falling back to full replication for transformations without one."""
+    if transform.state_sharding_spec is None:
+        return replicate_state_spec(state)
+    return transform.state_sharding_spec(state, param_specs)
 
 
 def chain(*transforms: GradientTransformation) -> GradientTransformation:
@@ -51,7 +77,11 @@ def chain(*transforms: GradientTransformation) -> GradientTransformation:
             new_states.append(s)
         return grads, tuple(new_states)
 
-    return GradientTransformation(init, update)
+    def spec(state, param_specs):
+        return tuple(state_sharding_spec(t, s, param_specs)
+                     for t, s in zip(transforms, state))
+
+    return GradientTransformation(init, update, spec)
 
 
 def apply_updates(params: Params, updates: Updates) -> Params:

@@ -12,8 +12,10 @@ Parallelism map (production mesh (pod, data, model) = (2, 16, 16)):
 
 Rule tables below map each *logical* axis name used by the model zoo to a
 mesh axis per cell kind.  Optimizer-state shardings are derived from the
-param specs (factored Q inherits the row spec, U the column spec — the
-factors of a sharded matrix shard along the same axes).
+param specs through each transformation's ``state_sharding_spec`` protocol
+hook (factored Q inherits the row spec, U the column spec — the factors of
+a sharded matrix shard along the same axes); this module knows nothing
+about any optimizer's state classes.
 """
 from __future__ import annotations
 
@@ -26,9 +28,7 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig
-from repro.core import adamw as AW
-from repro.core import factored as F
-from repro.core.adapprox import AdapproxState
+from repro.core import types as T
 
 
 def dp_axes(mesh: Mesh) -> tuple:
@@ -171,46 +171,16 @@ def param_pspecs(model, mesh: Mesh, kind: str, fsdp: bool = True):
 # Optimizer state shardings
 # --------------------------------------------------------------------------
 
-def _factored_leaf_sharding(pspec: P, mesh: Mesh, has_m1: bool):
-    """Param (…, m, n) with spec (…, a, b):
-    q (…, m, r) -> (…, a, None); u (…, n, r) -> (…, b, None);
-    k/xi (…,) -> batch part; m1 -> param spec."""
-    parts = list(pspec)
-    bd, a, b = parts[:-2], parts[-2], parts[-1]
-    mk = lambda s: NamedSharding(mesh, P(*s))
-    return F.FactoredLeaf(
-        q=mk(bd + [a, None]), u=mk(bd + [b, None]),
-        k=mk(bd), xi=mk(bd),
-        m1=mk(parts) if has_m1 else None)
-
-
-def _dense_leaf_sharding(pspec: P, mesh: Mesh, has_m1: bool):
-    mk = NamedSharding(mesh, pspec)
-    return F.DenseLeaf(v=mk, m1=mk if has_m1 else None)
-
-
-def opt_state_shardings(opt_name: str, state_struct, params_struct,
+def opt_state_shardings(opt: T.GradientTransformation, state_struct,
                         pspecs_tree, mesh: Mesh):
     """Build the sharding pytree matching ``opt.init``'s state, from the
-    param PartitionSpecs.  Supports adapprox and adamw (the optimizers used
-    in dry-runs); extend per optimizer as needed."""
-    flat_specs = jax.tree.leaves(pspecs_tree,
-                                 is_leaf=lambda x: isinstance(x, P))
-    rep = NamedSharding(mesh, P())
-    if opt_name == "adapprox":
-        leaves = []
-        for spec, leaf in zip(flat_specs, state_struct.leaves):
-            has_m1 = leaf.m1 is not None
-            if isinstance(leaf, F.FactoredLeaf):
-                leaves.append(_factored_leaf_sharding(spec, mesh, has_m1))
-            else:
-                leaves.append(_dense_leaf_sharding(spec, mesh, has_m1))
-        return AdapproxState(step=rep, key=rep, leaves=tuple(leaves))
-    if opt_name == "adamw":
-        tree = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs_tree,
-                            is_leaf=lambda x: isinstance(x, P))
-        return AW.AdamWState(step=rep, m=tree, v=tree)
-    raise ValueError(f"no state-sharding rule for optimizer {opt_name!r}")
+    param PartitionSpecs, via the transformation's ``state_sharding_spec``
+    protocol hook (transformations without one get fully replicated
+    state).  Works for any chain / partition of transformations — this
+    module never inspects optimizer state classes."""
+    spec_tree = T.state_sharding_spec(opt, state_struct, pspecs_tree)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
 
 
 # --------------------------------------------------------------------------

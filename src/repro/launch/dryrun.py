@@ -36,7 +36,7 @@ import jax.numpy as jnp
 
 from repro.config import CELLS, OptimizerConfig, applicable_cells
 from repro.configs import ASSIGNED, get_config, get_smoke_config, input_specs
-from repro.core import Schedule, make_optimizer
+from repro.core import build_optimizer
 from repro.distributed import sharding as SH
 from repro.launch.mesh import make_production_mesh, make_test_mesh
 from repro.models import build_model
@@ -49,14 +49,19 @@ DEFAULT_OUT = Path("experiments/dryrun")
 # Optimizer used for train cells (the paper's technique, production config)
 # --------------------------------------------------------------------------
 
-def dryrun_optimizer(arch: str):
+def dryrun_opt_config(arch: str) -> OptimizerConfig:
     # b1=0 for the 1T model: the full first moment alone would be 2-4 TB
     # (paper Table 2's beta1=0 row is exactly this regime).
     b1 = 0.0 if arch.startswith("kimi") else 0.9
-    return make_optimizer(
-        "adapprox", lr=Schedule(3e-4), b1=b1, b2=0.999, weight_decay=0.1,
-        k_init=64, mode="static", oversample=5, n_iter=5,
+    return OptimizerConfig(
+        name="adapprox", lr=3e-4, schedule="cosine", warmup_steps=1000,
+        total_steps=100_000, min_lr=0.0, b1=b1, b2=0.999, weight_decay=0.1,
+        k=64, rank_mode="static", oversample=5, n_iter=5,
         min_dim_factor=128, implicit=True)
+
+
+def dryrun_optimizer(arch: str):
+    return build_optimizer(dryrun_opt_config(arch))
 
 
 def microbatches_for(arch: str, cell: str, mesh=None,
@@ -184,8 +189,8 @@ def build_cell(arch: str, cell_name: str, mesh, smoke: bool = False):
         opt = dryrun_optimizer(arch)
         state_struct = jax.eval_shape(
             lambda p: TrainState.create(p, opt), params_struct)
-        oshard = SH.opt_state_shardings("adapprox", state_struct.opt_state,
-                                        params_struct, pspecs, mesh)
+        oshard = SH.opt_state_shardings(opt, state_struct.opt_state,
+                                        pspecs, mesh)
         sshard = TrainState(params=pshard, opt_state=oshard,
                             step=jax.sharding.NamedSharding(
                                 mesh, jax.sharding.PartitionSpec()))
@@ -251,6 +256,9 @@ def run_cell(arch: str, cell_name: str, multi_pod: bool, out_dir: Path,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    # jax moved from list[dict] (one per program) to a flat dict; accept both
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     hlo_text = compiled.as_text()
     # Loop-aware accounting: XLA's cost_analysis counts while bodies once
     # (scan-over-layers would be undercounted ~L x microbatches times).

@@ -16,23 +16,26 @@ import logging
 import jax
 
 from repro.checkpoint import CheckpointConfig
+from repro.config import OptimizerConfig
 from repro.configs import get_config, get_smoke_config
-from repro.core import Schedule, make_optimizer
+from repro.core import build_optimizer
 from repro.data import DataConfig
 from repro.models import build_model
 from repro.train import LoopConfig, train
 
 
-def build_optimizer(name: str, steps: int, lr: float):
-    sched = Schedule(lr, warmup_steps=max(steps // 20, 5), total_steps=steps,
-                     min_lr=lr / 6)
+def optimizer_config(name: str, steps: int, lr: float) -> OptimizerConfig:
+    """The launcher's OptimizerConfig: cosine schedule derived from the run
+    length, paper-faithful Adapprox adaptive-rank settings."""
+    common = dict(name=name, lr=lr, schedule="cosine",
+                  warmup_steps=max(steps // 20, 5), total_steps=steps,
+                  min_lr=lr / 6, weight_decay=0.1)
     if name == "adapprox":
-        return make_optimizer("adapprox", lr=sched, b1=0.9, weight_decay=0.1,
-                              k_init=1, k_max=128, mode="paper",
-                              xi_thresh=0.01, delta_s=10, min_dim_factor=64)
+        return OptimizerConfig(**common, rank_mode="paper", k=1, k_max=128,
+                               xi_thresh=0.01, delta_s=10,
+                               min_dim_factor=64, implicit=False)
     if name in ("adamw", "adafactor", "came"):
-        return make_optimizer(name, lr=sched, weight_decay=0.1,
-                              **({"b1": 0.9} if name == "adafactor" else {}))
+        return OptimizerConfig(**common)
     raise ValueError(name)
 
 
@@ -56,7 +59,8 @@ def main(argv=None):
     cfg = (get_smoke_config(args.arch, max_seq_len=args.seq)
            if args.smoke else get_config(args.arch))
     model = build_model(cfg)
-    opt = build_optimizer(args.optimizer, args.steps, args.lr)
+    opt = build_optimizer(optimizer_config(args.optimizer, args.steps,
+                                           args.lr))
     data_cfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
                           global_batch=args.batch)
     ckpt = (CheckpointConfig(directory=args.ckpt_dir,

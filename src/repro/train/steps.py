@@ -1,6 +1,11 @@
 """Train-step construction: loss -> grad -> optimizer, with gradient
 accumulation (microbatching) and mixed precision (fp32 master params, model
-casts to cfg.dtype internally)."""
+casts to cfg.dtype internally).
+
+``opt`` may be a built ``GradientTransformation`` (any chain / partition)
+or a declarative ``repro.config.OptimizerConfig`` — the latter is lowered
+through ``repro.core.build_optimizer`` so call sites can stay config-only.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -9,7 +14,15 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import GradientTransformation, apply_updates, global_norm
+from repro.config import OptimizerConfig
+from repro.core import (GradientTransformation, apply_updates,
+                        build_optimizer, global_norm)
+
+
+def _as_transform(opt) -> GradientTransformation:
+    if isinstance(opt, OptimizerConfig):
+        return build_optimizer(opt)
+    return opt
 
 
 @jax.tree_util.register_dataclass
@@ -20,12 +33,13 @@ class TrainState:
     step: jnp.ndarray
 
     @staticmethod
-    def create(params, opt: GradientTransformation) -> "TrainState":
+    def create(params, opt) -> "TrainState":
+        opt = _as_transform(opt)
         return TrainState(params=params, opt_state=opt.init(params),
                           step=jnp.zeros((), jnp.int32))
 
 
-def build_train_step(model, opt: GradientTransformation,
+def build_train_step(model, opt,
                      microbatches: int = 1,
                      grad_clip_norm: Optional[float] = None) -> Callable:
     """Returns train_step(state, batch) -> (state, metrics).
@@ -34,6 +48,7 @@ def build_train_step(model, opt: GradientTransformation,
     gradients accumulate in fp32 across a lax.scan — peak activation memory
     drops by ~microbatches at the cost of re-running the forward.
     """
+    opt = _as_transform(opt)
 
     def loss_fn(params, batch):
         loss, metrics = model.loss(params, batch)

@@ -7,8 +7,8 @@ import numpy as np
 import pytest
 
 from repro.core import (AdapproxConfig, AdapproxState, RankConfig, adapprox,
-                        apply_updates, make_optimizer, rank_metrics,
-                        tree_nbytes)
+                        adapprox_state, apply_updates, make_optimizer,
+                        rank_metrics, tree_nbytes)
 from repro.core import factored as F
 
 
@@ -40,7 +40,8 @@ def test_state_layout():
     params = make_params(jax.random.PRNGKey(0))
     opt = adapprox(small_cfg())
     state = opt.init(params)
-    leaves = dict(zip(["b", "stack", "w"], state.leaves))  # dict flatten order
+    leaves = dict(zip(["b", "stack", "w"],
+                      adapprox_state(state).leaves))  # dict flatten order
     assert isinstance(leaves["w"], F.FactoredLeaf)
     assert isinstance(leaves["stack"], F.FactoredLeaf)
     assert isinstance(leaves["b"], F.DenseLeaf)
@@ -53,7 +54,7 @@ def test_no_first_moment_when_b1_zero():
     params = make_params(jax.random.PRNGKey(0))
     opt = adapprox(small_cfg(b1=0.0))
     state = opt.init(params)
-    for leaf in state.leaves:
+    for leaf in adapprox_state(state).leaves:
         assert leaf.m1 is None
     grads = make_grads(jax.random.PRNGKey(1), params)
     updates, state = jax.jit(opt.update)(grads, state, params)
@@ -119,9 +120,9 @@ def test_adaptive_rank_rises_for_high_rank_v():
     for t in range(1, 4):
         g = jax.random.normal(jax.random.fold_in(key, t), (256, 256))
         _, state = upd({"w": g}, state, params)
-    k = int(state.leaves[0].k)
+    k = int(adapprox_state(state).leaves[0].k)
     assert k > 1, "adaptive rank should grow for a near-full-rank V"
-    xi = float(state.leaves[0].xi)
+    xi = float(adapprox_state(state).leaves[0].xi)
     assert xi <= 0.01 + 1e-5 or k == 64
 
 
@@ -137,7 +138,7 @@ def test_adaptive_rank_stays_low_for_rank1_v():
     upd = jax.jit(opt.update)
     for t in range(1, 4):
         _, state = upd({"w": r @ c}, state, params)
-    assert int(state.leaves[0].k) <= 2
+    assert int(adapprox_state(state).leaves[0].k) <= 2
 
 
 def test_implicit_mode_matches_explicit():
@@ -149,7 +150,8 @@ def test_implicit_mode_matches_explicit():
         opt = adapprox(cfg)
         state = opt.init(params)
         updates, state2 = jax.jit(opt.update)({"w": g}, state, params)
-        outs.append((np.asarray(updates["w"]), np.asarray(state2.leaves[0].q)))
+        outs.append((np.asarray(updates["w"]),
+                     np.asarray(adapprox_state(state2).leaves[0].q)))
     np.testing.assert_allclose(outs[0][0], outs[1][0], rtol=1e-3, atol=1e-5)
 
 

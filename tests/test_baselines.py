@@ -39,7 +39,8 @@ def test_came_requires_first_moment():
 
 def test_came_state_layout():
     params = {"w": jnp.zeros((256, 512)), "b": jnp.zeros((512,))}
-    st = came(CAMEConfig()).init(params)
+    # chain state: stage 0 is scale_by_came's CAMEState
+    st = came(CAMEConfig()).init(params)[0]
     leaves = {0: st.leaves[0], 1: st.leaves[1]}
     # dict order: b first
     assert leaves[0].v is not None and leaves[0].r is None      # dense for 1D

@@ -56,4 +56,7 @@ def test_hlo_cost_walker_loop_multiplication():
     cost = parse_hlo_costs(compiled.as_text())
     expect = 7 * 2 * 128 ** 3
     assert abs(cost.flops - expect) / expect < 0.05
-    assert cost.flops > compiled.cost_analysis()["flops"] * 5
+    xla_cost = compiled.cost_analysis()
+    if isinstance(xla_cost, (list, tuple)):       # jax < 0.5 returns list
+        xla_cost = xla_cost[0]
+    assert cost.flops > xla_cost["flops"] * 5

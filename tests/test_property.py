@@ -1,8 +1,16 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+Requires the optional ``hypothesis`` dev dependency (see ROADMAP.md
+§Tooling); the module skips cleanly when it is absent so the tier-1 run
+never aborts at collection.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import srsi as S
 from repro.core import rank as R

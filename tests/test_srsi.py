@@ -46,17 +46,33 @@ def test_srsi_matches_svd_quality():
 
 
 def test_error_rate_identity():
-    """xi from cum_energy must equal the directly computed residual norm."""
+    """xi from cum_energy must equal the directly computed residual norm.
+
+    The projection identity ``||A - Q_k Q_k^T A||^2 = ||A||^2 - ||Q_k^T
+    A||^2`` holds exactly only for exactly-orthonormal Q.  CholeskyQR3
+    leaves ~1e-6 relative orthonormality error in fp32, which enters the
+    *energy* (xi^2) at that order — so xi itself carries an absolute floor
+    of ~sqrt(1e-6) = 1e-3.  Once the true residual drops to that floor
+    (large k), identity-xi and direct-xi legitimately diverge in relative
+    terms; the correct expectation is agreement up to rtol OR the fp32
+    floor, whichever is larger.
+    """
     a = lowrank_plus_noise(jax.random.PRNGKey(3), 128, 96, rank=4)
     res = S.srsi_dense(a, r_store=16, oversample=4, n_iter=4,
                        key=jax.random.PRNGKey(4))
+    xi_floor = 2e-3          # sqrt(CholeskyQR3 fp32 orthonormality error)
     for k in [1, 3, 8, 16]:
         mask = S.col_mask(16, jnp.asarray(k))
         approx = (res.q * mask[None, :]) @ (res.u * mask[None, :]).T
         direct = jnp.linalg.norm(a - approx) / jnp.linalg.norm(a)
         via_id = S.approx_error_rate(res, jnp.asarray(k))
         np.testing.assert_allclose(float(via_id), float(direct),
-                                   rtol=5e-3, atol=5e-4)
+                                   rtol=5e-3, atol=xi_floor)
+        # the identity may sit at its floor, but must never *understate*
+        # a residual that is clearly above it (rank selection depends on
+        # xi being an upper-ish estimate at coarse k)
+        if float(direct) > 10 * xi_floor:
+            assert float(via_id) > float(direct) * 0.99
 
 
 def test_implicit_equals_dense_operator():

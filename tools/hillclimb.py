@@ -37,12 +37,10 @@ def measure(arch, cell, overrides, mb=None, opt_overrides=None, tag="exp"):
         base_opt = DR.dryrun_optimizer
 
         def patched_opt(a):
-            from repro.core import Schedule, make_optimizer
-            kw = dict(lr=Schedule(3e-4), b1=0.9, b2=0.999, weight_decay=0.1,
-                      k_init=64, mode="static", oversample=5, n_iter=5,
-                      min_dim_factor=128, implicit=True)
-            kw.update(opt_overrides)
-            return make_optimizer("adapprox", **kw)
+            import dataclasses as _dc
+            from repro.core import build_optimizer
+            ocfg = _dc.replace(DR.dryrun_opt_config(a), **opt_overrides)
+            return build_optimizer(ocfg)
         DR.dryrun_optimizer = patched_opt
 
     mesh = make_production_mesh()
