@@ -1,9 +1,23 @@
-"""Optimizer step wall-time comparison (CPU, jitted): per-step cost of the
-update itself — AdamW vs Adafactor vs CAME vs Adapprox (static / adaptive /
-implicit / kernel-interpret).  Complements Fig. 2's factorisation timing
-with end-to-end optimizer-step numbers on GPT-2-like param stacks."""
+"""Optimizer step wall-time comparison (jitted): per-step cost of the
+update itself — AdamW vs Adafactor vs CAME vs Adapprox, including the
+amortized-refresh configs (refresh_every / warm_start / bucketed) whose
+trajectory this file tracks per PR via ``BENCH_step_time.json``.
+
+The parameter set is a GPT-2-shaped transformer stack (scan-stacked
+attention + MLP projections, ~117M-proportioned widths, layer count scaled
+down so the CPU CI smoke run stays cheap) plus 1-D bias/norm leaves, so
+bucketing and the dense fallback are both exercised.
+
+Measurement protocol: one compile step, then ``reps`` timed steps (reps is
+a multiple of refresh_every for every config here, so amortized configs are
+charged their full share of refresh steps).
+
+CLI:  python benchmarks/bench_step_time.py [--quick] [--out PATH.json]
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -12,19 +26,60 @@ import jax.numpy as jnp
 from repro.config import OptimizerConfig
 from repro.core import apply_updates, build_optimizer
 
-SHAPES = [(768, 768), (768, 3072), (3072, 768), (12, 768, 768)]
+# GPT-2-ish block stack: (L, d, *) scan-stacked projections.  full = bench
+# fidelity (768-wide, 4 layers); quick = CI smoke (256-wide, 2 layers).
+STACKS = {
+    "full": {
+        "qkv": (4, 768, 2304),
+        "attn_out": (4, 768, 768),
+        "mlp_in": (4, 768, 3072),
+        "mlp_out": (4, 3072, 768),
+        "ln_g": (4, 768),
+        "ln_b": (4, 768),
+    },
+    "quick": {
+        "qkv": (2, 256, 768),
+        "attn_out": (2, 256, 256),
+        "mlp_in": (2, 256, 1024),
+        "mlp_out": (2, 1024, 256),
+        "ln_g": (2, 256),
+        "ln_b": (2, 256),
+    },
+}
+
+# (case name, optimizer family, OptimizerConfig overrides).  The first
+# adapprox entry is the PR-1 default config — the baseline the amortized
+# configs are measured against.
+CASES = [
+    ("adamw", "adamw", {}),
+    ("adafactor", "adafactor", {"b1": 0.9}),
+    ("came", "came", {}),
+    ("adapprox_default", "adapprox", {}),
+    ("adapprox_bucketed", "adapprox", {"bucketed": True}),
+    ("adapprox_warm1", "adapprox",
+     {"warm_start": True, "n_iter_warm": 1}),
+    ("adapprox_refresh5_warm1", "adapprox",
+     {"refresh_every": 5, "warm_start": True, "n_iter_warm": 1}),
+    ("adapprox_refresh5_warm1_bucketed", "adapprox",
+     {"refresh_every": 5, "warm_start": True, "n_iter_warm": 1,
+      "bucketed": True}),
+]
 
 
-def make_params():
+def make_params(stack: str):
     key = jax.random.PRNGKey(0)
-    return {f"w{i}": jax.random.normal(jax.random.fold_in(key, i), s) * 0.02
-            for i, s in enumerate(SHAPES)}
+    return {name: jax.random.normal(jax.random.fold_in(key, i), shape) * 0.02
+            for i, (name, shape) in enumerate(STACKS[stack].items())}
 
 
-def time_opt(name: str, reps: int = 5, **kw) -> float:
-    params = make_params()
-    opt = build_optimizer(OptimizerConfig(name=name, schedule="constant",
-                                          lr=1e-3, weight_decay=0.0, **kw))
+def time_opt(family: str, overrides: dict, stack: str, reps: int,
+             min_dim_factor: int) -> float:
+    """ms per optimizer step, jitted, averaged over ``reps`` post-compile
+    steps."""
+    params = make_params(stack)
+    opt = build_optimizer(OptimizerConfig(
+        name=family, schedule="constant", lr=1e-3, weight_decay=0.0,
+        min_dim_factor=min_dim_factor, **overrides))
     state = opt.init(params)
     grads = jax.tree.map(
         lambda p: jax.random.normal(jax.random.PRNGKey(1), p.shape), params)
@@ -34,34 +89,68 @@ def time_opt(name: str, reps: int = 5, **kw) -> float:
         upd, s = opt.update(g, s, p)
         return apply_updates(p, upd), s
 
-    params2, state = step(grads, state, params)   # compile
+    params2, state = step(grads, state, params)   # compile (= step 1)
     jax.block_until_ready(params2)
     t0 = time.perf_counter()
     for _ in range(reps):
         params2, state = step(grads, state, params2)
     jax.block_until_ready(params2)
-    return (time.perf_counter() - t0) / reps * 1e6
+    return (time.perf_counter() - t0) / reps * 1e3
+
+
+def collect(quick: bool = False) -> dict:
+    stack = "quick" if quick else "full"
+    reps = 5 if quick else 10          # multiple of refresh_every=5
+    min_dim_factor = 128
+    results = []
+    for name, family, overrides in CASES:
+        ms = time_opt(family, overrides, stack, reps, min_dim_factor)
+        results.append({"name": name, "optimizer": family,
+                        "config": overrides, "ms_per_step": round(ms, 3)})
+    by_name = {r["name"]: r["ms_per_step"] for r in results}
+    base = by_name["adapprox_default"]
+    derived = {
+        f"speedup_{n}_vs_adapprox_default": round(base / by_name[n], 2)
+        for n in by_name if n.startswith("adapprox_") and
+        n != "adapprox_default"
+    }
+    return {
+        "benchmark": "optimizer_step_time",
+        "stack": stack,
+        "shapes": {k: list(v) for k, v in STACKS[stack].items()},
+        "backend": jax.default_backend(),
+        "reps": reps,
+        "results": results,
+        "derived": derived,
+    }
 
 
 def run() -> list[str]:
-    rows = ["steptime_optimizer,us_per_step"]
-    cases = [
-        ("adamw", {}),
-        ("adafactor", {"b1": 0.9}),
-        ("came", {}),
-        ("adapprox_k8", dict(k=8, rank_mode="static", implicit=False)),
-        ("adapprox_k32", dict(k=32, rank_mode="static", implicit=False)),
-        ("adapprox_adaptive", dict(k=1, k_max=64, rank_mode="paper",
-                                   delta_s=10, implicit=False)),
-        ("adapprox_implicit", dict(k=32, rank_mode="static",
-                                   implicit=True)),
-    ]
-    for name, kw in cases:
-        base = name.split("_")[0]
-        us = time_opt(base, **kw)
-        rows.append(f"{name},{us:.0f}")
+    """benchmarks.run harness entry point: CSV rows."""
+    data = collect(quick=False)
+    rows = ["steptime_optimizer,ms_per_step"]
+    rows += [f"{r['name']},{r['ms_per_step']:.1f}" for r in data["results"]]
+    rows += [f"{k},{v}" for k, v in data["derived"].items()]
     return rows
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small stack + fewer reps (CI smoke)")
+    ap.add_argument("--out", default=None,
+                    help="write machine-readable JSON here")
+    args = ap.parse_args()
+    data = collect(quick=args.quick)
+    for r in data["results"]:
+        print(f"{r['name']},{r['ms_per_step']:.1f}ms")
+    for k, v in data["derived"].items():
+        print(f"{k},{v}x")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(data, f, indent=2)
+        print(f"wrote {args.out}")
+
+
 if __name__ == "__main__":
-    print("\n".join(run()))
+    main()

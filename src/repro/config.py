@@ -191,6 +191,16 @@ class OptimizerConfig:
     guidance: str = "off"
     implicit: bool = True
     use_kernels: bool = False
+    # amortized-refresh perf knobs (defaults off => paper-faithful cadence):
+    # refresh_every=T runs full S-RSI every T steps and folds G^2 into the
+    # factors in between; warm_start seeds S-RSI from the stored U so
+    # n_iter_warm (1-2) power iterations suffice; bucketed groups
+    # same-shape leaves into one vmapped trace per bucket.
+    refresh_every: int = 1
+    warm_start: bool = False
+    n_iter_warm: int = 1
+    warm_drift_xi: float = 0.5
+    bucketed: bool = False
     min_dim_factor: int = 128       # factor leaves with min(m, n) >= this
     factor_dtype: str = "float32"   # "int8": quantized factors
     seed: int = 0

@@ -21,6 +21,14 @@ faithful baseline):
     and the sketch matmuls (kernels/).
   * ``rank.mode='exact'``: minimal-k selection instead of the paper's
     incremental probe.
+  * ``warm_start=True`` (+ ``n_iter_warm``, ``warm_drift_xi``): seed S-RSI
+    from the stored U so 1-2 power iterations replace the cold l = 5.
+  * ``refresh_every=T``: full S-RSI every T steps; between refreshes the
+    factors absorb gradients via the one-sided fold
+    ``U <- b2*U + (1-b2)(G^2)^T Q`` under the frozen basis Q — the
+    elementwise update remains exact w.r.t. the implicit operator.
+  * ``bucketed=True``: same-shape factored leaves run as ONE vmapped
+    trace per shape bucket instead of N sequential per-leaf traces.
 
 Composition: :func:`scale_by_adapprox` is the pure preconditioner — it maps
 gradients to the (positive) update direction ``m_out`` and owns only the
@@ -72,6 +80,18 @@ class AdapproxConfig:
     use_kernels: bool = False              # Pallas fused update path
     factor_dtype: str = "float32"          # "int8": 4x smaller factors
     seed: int = 0
+    # --- amortized-refresh perf knobs (all default-off => bit-exact vs the
+    # paper-faithful baseline; see docs in scale_by_adapprox)
+    refresh_every: int = 1                 # full S-RSI every T steps; between
+                                           # refreshes fold G^2 into U under
+                                           # the frozen basis Q (exact w.r.t.
+                                           # the implicit operator)
+    warm_start: bool = False               # seed S-RSI from the stored U
+    n_iter_warm: int = 1                   # l when warm-started (1-2 suffice)
+    warm_drift_xi: float = 0.5             # drift guard: cold-restart the
+                                           # sketch when stored xi exceeds this
+    bucketed: bool = False                 # group same-shape leaves into one
+                                           # vmapped S-RSI + update per bucket
 
 
 @jax.tree_util.register_dataclass
@@ -85,6 +105,30 @@ class AdapproxState:
 
 def _rms(x: jnp.ndarray) -> jnp.ndarray:
     return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)
+
+
+# Lazy module handles: repro.kernels.ops / repro.core.quantized are only
+# needed on the kernel / int8 paths, and importing them per traced update
+# call (the old inline ``from repro.kernels import ops``) put an import-lock
+# acquisition + sys.modules lookup inside the hot per-leaf Python loop.
+_KERNEL_OPS = None
+_QUANTIZED = None
+
+
+def _kernel_ops():
+    global _KERNEL_OPS
+    if _KERNEL_OPS is None:
+        from repro.kernels import ops
+        _KERNEL_OPS = ops
+    return _KERNEL_OPS
+
+
+def _quantized():
+    global _QUANTIZED
+    if _QUANTIZED is None:
+        from repro.core import quantized
+        _QUANTIZED = quantized
+    return _QUANTIZED
 
 
 def _leaf_r_store(shape: tuple[int, ...], cfg: AdapproxConfig) -> int:
@@ -114,7 +158,7 @@ def _init_leaf(p: jnp.ndarray, cfg: AdapproxConfig):
         q0 = jnp.zeros(bd + (m, r), jnp.float32)
         u0 = jnp.zeros(bd + (n, r), jnp.float32)
         if cfg.factor_dtype == "int8":
-            from repro.core import quantized as QZ
+            QZ = _quantized()
             q0, u0 = QZ.quantize(q0), QZ.quantize(u0)
         return F.FactoredLeaf(
             q=q0,
@@ -130,33 +174,86 @@ def _init_leaf(p: jnp.ndarray, cfg: AdapproxConfig):
 # Per-matrix (2D) factored update
 # ---------------------------------------------------------------------------
 
-def _factored_update_2d(g, q, u, k, m1, key, step, cfg: AdapproxConfig,
+def _factored_update_2d(g, q, u, k, xi_prev, m1, key, step,
+                        cfg: AdapproxConfig,
                         r_store: int, p_eff: int, k_max_leaf: int):
     g32 = g.astype(jnp.float32)
     v_op = S.make_implicit_v(q, u, g32, cfg.b2)
 
+    # V_t is needed every step for the elementwise update unless the fused
+    # kernel reconstructs it tile-wise; the dense-S-RSI refresh reuses it.
     vmat = None
-    if cfg.implicit:
-        res = S.srsi_implicit(v_op, r_store, p_eff, cfg.n_iter, key)
-    else:
+    if not cfg.use_kernels:
         vmat = v_op.materialize()          # paper-faithful: V_t formed
-        res = S.srsi_dense(vmat, r_store, p_eff, cfg.n_iter, key)
 
-    # --- adaptive rank (Algorithm 2 semantics over the captured-energy CDF)
-    k_new = R.select_rank(res.cum_energy, res.frob_sq, cfg.rank, k_max_leaf,
-                          step, jnp.minimum(k, k_max_leaf))
-    xi = R.xi_of_k(res.cum_energy, res.frob_sq, k_new)
-    mask = S.col_mask(r_store, k_new)
-    q_new = res.q * mask[None, :]
-    u_new = res.u * mask[None, :]
+    def _run_srsi(n_it: int, u0, use_warm):
+        if cfg.implicit:
+            # ||V||_F^2 from the already-materialised V when we have one
+            # (use_kernels=False) — rebuilding it via the streaming
+            # frob_sq would duplicate the O(mnr) reconstruct.
+            fs = None if vmat is None else jnp.sum(jnp.square(vmat))
+            return S.srsi_implicit(v_op, r_store, p_eff, n_it, key,
+                                   frob_sq=fs, u0=u0, use_warm=use_warm)
+        vm = vmat if vmat is not None else v_op.materialize()
+        return S.srsi_dense(vm, r_store, p_eff, n_it, key,
+                            u0=u0, use_warm=use_warm)
+
+    def _refresh():
+        """Full S-RSI re-factorisation + adaptive rank (the seed path)."""
+        if cfg.warm_start:
+            # Seed the subspace iteration from the stored U; the drift
+            # guard falls back to a cold Gaussian sketch when the last
+            # approximation error regressed past warm_drift_xi (srsi.py
+            # additionally re-randomizes zero columns: init, rank growth).
+            # Step 1 has no subspace to inherit, so it runs the full cold
+            # iteration (scalar predicate => stays a real branch under
+            # vmap).  A *drift-guard* cold restart keeps n_iter_warm —
+            # its predicate is per-leaf (batched), so a cond would decay
+            # to a both-branches select under vmap and always pay the
+            # full-l cost; instead the re-randomized sketch re-converges
+            # over the next couple of warm refreshes (power iterations
+            # accumulate across steps on the slow-moving EMA operator).
+            use_warm = xi_prev <= cfg.warm_drift_xi
+            res = jax.lax.cond(
+                step == 1,
+                lambda: _run_srsi(cfg.n_iter, None, None),
+                lambda: _run_srsi(cfg.n_iter_warm, u, use_warm))
+        else:
+            res = _run_srsi(cfg.n_iter, None, None)
+        # --- adaptive rank (Algorithm 2 over the captured-energy CDF)
+        k_new = R.select_rank(res.cum_energy, res.frob_sq, cfg.rank,
+                              k_max_leaf, step, jnp.minimum(k, k_max_leaf),
+                              refresh_every=cfg.refresh_every)
+        xi = R.xi_of_k(res.cum_energy, res.frob_sq, k_new)
+        mask = S.col_mask(r_store, k_new)
+        return res.q * mask[None, :], res.u * mask[None, :], k_new, xi
+
+    def _fold():
+        """Between refreshes: fold G_t^2 into U under the frozen basis Q —
+        U <- mask * (b2*U + (1-b2) (G^2)^T Q), the exact projection of
+        V_t = b2 V_{t-1} + (1-b2) G^2 onto span(Q).  O(mnr) matmul, no
+        subspace iteration, no QR."""
+        mask = S.col_mask(r_store, jnp.minimum(k, k_max_leaf))
+        if cfg.use_kernels:
+            u_new = _kernel_ops().one_sided_fold(u, q, g32, cfg.b2, mask)
+        else:
+            u_new = (cfg.b2 * u
+                     + (1.0 - cfg.b2) * ((g32 * g32).T @ q)) * mask[None, :]
+        return q, u_new, k, xi_prev
+
+    if cfg.refresh_every > 1:
+        # step counts from 1; refresh at t = 1, 1+T, 1+2T, ...  The scalar
+        # predicate is unbatched under vmap, so lax.cond stays a real
+        # branch (fold steps never pay for the S-RSI HLO).
+        do_refresh = (step % cfg.refresh_every) == (1 % cfg.refresh_every)
+        q_new, u_new, k_new, xi = jax.lax.cond(do_refresh, _refresh, _fold)
+    else:
+        q_new, u_new, k_new, xi = _refresh()
 
     # --- elementwise update from V_t (prev factors + fresh G^2)
     if cfg.use_kernels:
-        from repro.kernels import ops as KO
-        u_hat = KO.lowrank_update(q, u, g32, cfg.b2, cfg.eps)
+        u_hat = _kernel_ops().lowrank_update(q, u, g32, cfg.b2, cfg.eps)
     else:
-        if vmat is None:
-            vmat = v_op.materialize()
         u_hat = g32 / (jnp.sqrt(vmat) + cfg.eps)
 
     u_hat = u_hat / jnp.maximum(1.0, _rms(u_hat) / cfg.clip_d)
@@ -184,30 +281,92 @@ def _factored_update_2d(g, q, u, k, m1, key, step, cfg: AdapproxConfig,
     return m_out, q_new, u_new, k_new, xi, m1_new
 
 
-def _update_factored(g, leaf: F.FactoredLeaf, w, key, step,
-                     cfg: AdapproxConfig):
-    bd = F.batch_dims(w.shape)
-    leaf_q, leaf_u = leaf.q, leaf.u
-    if cfg.factor_dtype == "int8":
-        from repro.core import quantized as QZ
-        leaf_q, leaf_u = QZ.dequantize(leaf_q), QZ.dequantize(leaf_u)
-    r_store = leaf_q.shape[-1]
-    p_eff = _leaf_oversample(w.shape, r_store, cfg)
+def _leaf_meta(w_shape, r_store: int, cfg: AdapproxConfig):
+    p_eff = _leaf_oversample(w_shape, r_store, cfg)
     k_max_leaf = (r_store if cfg.rank.mode == "static"
-                  else R.resolve_k_max(w.shape, cfg.rank, cfg.k_max_frac))
+                  else R.resolve_k_max(w_shape, cfg.rank, cfg.k_max_frac))
+    return p_eff, k_max_leaf
 
+
+def _dequant_factors(leaf: F.FactoredLeaf, cfg: AdapproxConfig):
+    if cfg.factor_dtype == "int8":
+        QZ = _quantized()
+        return QZ.dequantize(leaf.q), QZ.dequantize(leaf.u)
+    return leaf.q, leaf.u
+
+
+def _run_factored_core(g, q32, u32, k, xi, m1, keys, step,
+                       cfg: AdapproxConfig, r_store: int, p_eff: int,
+                       k_max_leaf: int, n_batch: int):
+    """vmap ``_factored_update_2d`` over ``n_batch`` leading axes — the
+    shared engine of the per-leaf path (n_batch = len(batch_dims)) and the
+    bucketed path (one extra stacking axis)."""
     fn = functools.partial(_factored_update_2d, cfg=cfg, r_store=r_store,
                            p_eff=p_eff, k_max_leaf=k_max_leaf)
     # ``m1`` may be None (b1 = 0); None is an empty pytree so it passes
     # through vmap untouched.
-    core = lambda g, q, u, k, m1, key: fn(g, q, u, k, m1, key, step)
-    mapped = F.vmap_over_batch(core, len(bd))
+    core = lambda g, q, u, k, xi, m1, key: fn(g, q, u, k, xi, m1, key, step)
+    mapped = F.vmap_over_batch(core, n_batch)
+    return mapped(g, q32, u32, k, xi, m1, keys)
+
+
+def _update_factored(g, leaf: F.FactoredLeaf, w, key, step,
+                     cfg: AdapproxConfig):
+    bd = F.batch_dims(w.shape)
+    leaf_q, leaf_u = _dequant_factors(leaf, cfg)
+    r_store = leaf_q.shape[-1]
+    p_eff, k_max_leaf = _leaf_meta(w.shape, r_store, cfg)
     keys = F.batched_keys(key, bd)
-    m_out, q, u, k, xi, m1 = mapped(g, leaf_q, leaf_u, leaf.k, leaf.m1, keys)
+    m_out, q, u, k, xi, m1 = _run_factored_core(
+        g, leaf_q, leaf_u, leaf.k, leaf.xi, leaf.m1, keys, step, cfg,
+        r_store, p_eff, k_max_leaf, len(bd))
     if cfg.factor_dtype == "int8":
-        from repro.core import quantized as QZ
+        QZ = _quantized()
         q, u = QZ.quantize(q), QZ.quantize(u)
     return m_out, F.FactoredLeaf(q=q, u=u, k=k, xi=xi, m1=m1)
+
+
+def _update_factored_bucket(gs, leaves, ws, idxs, step_key, step,
+                            cfg: AdapproxConfig):
+    """One vmapped S-RSI + update for a bucket of same-signature leaves.
+
+    All leaves share ``(batch_dims, m, n, r_store)`` (see
+    ``F.leaf_signature``), so their state stacks along a new leading axis
+    and the whole bucket traces ONCE — for a transformer stack with dozens
+    of shape-sharing projection matrices this collapses N sequential HLO
+    copies into one batched program (smaller HLO, fewer launches).  Each
+    slice sees exactly the per-leaf PRNG key ``fold_in(step_key, i)`` and
+    the same arithmetic, merely batched — updates, factors, rank and first
+    moment are bit-identical to the per-leaf loop (the metrics-only ``xi``
+    scalar can wobble 1 ulp from batched-vs-unbatched XLA fusion; see
+    tests/test_refresh.py).
+    """
+    bd = F.batch_dims(ws[0].shape)
+    deq = [_dequant_factors(leaf, cfg) for leaf in leaves]
+    q_stk = jnp.stack([q for q, _ in deq])
+    u_stk = jnp.stack([u for _, u in deq])
+    r_store = q_stk.shape[-1]
+    p_eff, k_max_leaf = _leaf_meta(ws[0].shape, r_store, cfg)
+    g_stk = jnp.stack(gs)          # uniform dtype: part of the signature
+    k_stk = jnp.stack([leaf.k for leaf in leaves])
+    xi_stk = jnp.stack([leaf.xi for leaf in leaves])
+    m1_stk = (jnp.stack([leaf.m1 for leaf in leaves])
+              if leaves[0].m1 is not None else None)
+    keys = jnp.stack([
+        F.batched_keys(jax.random.fold_in(step_key, i), bd) for i in idxs])
+    m_out, q, u, k, xi, m1 = _run_factored_core(
+        g_stk, q_stk, u_stk, k_stk, xi_stk, m1_stk, keys, step, cfg,
+        r_store, p_eff, k_max_leaf, len(bd) + 1)
+    results = []
+    for j in range(len(idxs)):
+        qj, uj = q[j], u[j]
+        if cfg.factor_dtype == "int8":
+            QZ = _quantized()
+            qj, uj = QZ.quantize(qj), QZ.quantize(uj)
+        m1j = m1[j] if m1 is not None else None
+        results.append((m_out[j],
+                        F.FactoredLeaf(q=qj, u=uj, k=k[j], xi=xi[j], m1=m1j)))
+    return results
 
 
 def _update_dense(g, leaf: F.DenseLeaf, cfg: AdapproxConfig):
@@ -281,16 +440,47 @@ def scale_by_adapprox(cfg: AdapproxConfig) -> GradientTransformation:
         flat_g = treedef.flatten_up_to(grads)
         step_key = jax.random.fold_in(state.key, step)
 
-        outs, new_leaves = [], []
-        for i, (g, leaf, w) in enumerate(zip(flat_g, state.leaves, flat_p)):
-            if isinstance(leaf, F.FactoredLeaf):
-                d, nl = _update_factored(g, leaf, w,
-                                         jax.random.fold_in(step_key, i),
-                                         step, cfg)
-            else:
-                d, nl = _update_dense(g, leaf, cfg)
-            outs.append(d)
-            new_leaves.append(nl)
+        n_leaves = len(flat_p)
+        outs = [None] * n_leaves
+        new_leaves = [None] * n_leaves
+
+        if not cfg.bucketed:
+            for i, (g, leaf, w) in enumerate(
+                    zip(flat_g, state.leaves, flat_p)):
+                if isinstance(leaf, F.FactoredLeaf):
+                    d, nl = _update_factored(
+                        g, leaf, w, jax.random.fold_in(step_key, i),
+                        step, cfg)
+                else:
+                    d, nl = _update_dense(g, leaf, cfg)
+                outs[i], new_leaves[i] = d, nl
+        else:
+            # Bucketed execution: dense leaves update inline; factored
+            # leaves group by (batch_dims, m, n, dtype) signature and run
+            # one vmapped trace per bucket (bit-identical — per-leaf PRNG
+            # folding is preserved inside the bucket).
+            buckets: dict = {}
+            for i, (g, leaf, w) in enumerate(
+                    zip(flat_g, state.leaves, flat_p)):
+                if isinstance(leaf, F.FactoredLeaf):
+                    buckets.setdefault(
+                        F.leaf_signature(w.shape, g.dtype), []).append(i)
+                else:
+                    outs[i], new_leaves[i] = _update_dense(g, leaf, cfg)
+            for idxs in buckets.values():
+                if len(idxs) == 1:          # singleton: skip stack/unstack
+                    i = idxs[0]
+                    outs[i], new_leaves[i] = _update_factored(
+                        flat_g[i], state.leaves[i], flat_p[i],
+                        jax.random.fold_in(step_key, i), step, cfg)
+                    continue
+                res = _update_factored_bucket(
+                    [flat_g[i] for i in idxs],
+                    [state.leaves[i] for i in idxs],
+                    [flat_p[i] for i in idxs],
+                    idxs, step_key, step, cfg)
+                for i, (d, nl) in zip(idxs, res):
+                    outs[i], new_leaves[i] = d, nl
 
         updates = jax.tree.unflatten(treedef, outs)
         return updates, AdapproxState(step=step, key=state.key,

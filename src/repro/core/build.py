@@ -56,7 +56,10 @@ def build_optimizer(cfg: OptimizerConfig) -> GradientTransformation:
             oversample=cfg.oversample, n_iter=cfg.n_iter,
             min_dim_factor=cfg.min_dim_factor, guidance=cfg.guidance,
             implicit=cfg.implicit, use_kernels=cfg.use_kernels,
-            factor_dtype=cfg.factor_dtype, seed=cfg.seed)
+            factor_dtype=cfg.factor_dtype, seed=cfg.seed,
+            refresh_every=cfg.refresh_every, warm_start=cfg.warm_start,
+            n_iter_warm=cfg.n_iter_warm, warm_drift_xi=cfg.warm_drift_xi,
+            bucketed=cfg.bucketed)
         return adapprox(acfg, decay_mask=mask)
     if cfg.name == "adamw":
         return adamw(AdamWConfig(lr=sched, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps,

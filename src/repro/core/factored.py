@@ -23,7 +23,13 @@ class FactoredLeaf:
     q:  (*batch, m, r_store) float32 — left feature matrix (cols > k zeroed)
     u:  (*batch, n, r_store) float32 — right feature matrix
     k:  (*batch,) int32 — current effective rank (adaptive mode)
-    xi: (*batch,) float32 — last approximation error rate (metrics only)
+    xi: (*batch,) float32 — last approximation error rate.  Metrics, plus
+        one control use: the warm-start drift guard compares it against
+        ``warm_drift_xi`` (never feeds the update arithmetic itself; note
+        xi can differ by 1 ulp between bucketed and per-leaf execution —
+        see tests/test_refresh.py — so that threshold compare is the one
+        place the two modes could in principle diverge, at an exact-
+        boundary measure-zero event)
     m1: (*batch, m, n) float32 | None — running average of *updates*
         (Adapprox replaces Adam's gradient EMA with an update EMA).
     """
@@ -59,6 +65,15 @@ def vmap_over_batch(fn, n_batch_dims: int, key_arg: bool = False):
     for _ in range(n_batch_dims):
         fn = jax.vmap(fn)
     return fn
+
+
+def leaf_signature(shape: tuple[int, ...], g_dtype) -> tuple:
+    """Bucketing key for factored leaves: two leaves can share one vmapped
+    S-RSI + update trace iff their full param shape (batch dims included)
+    and gradient dtype agree — ``r_store``, oversample and ``k_max`` are
+    all deterministic functions of (shape, config), so the shape subsumes
+    them."""
+    return (tuple(shape), jnp.dtype(g_dtype).name)
 
 
 def batched_keys(key: jax.Array, bdims: tuple[int, ...]) -> jax.Array:

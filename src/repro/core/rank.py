@@ -98,18 +98,34 @@ def select_rank_exact(cum_energy: jnp.ndarray, frob_sq: jnp.ndarray,
 
 def select_rank(cum_energy: jnp.ndarray, frob_sq: jnp.ndarray,
                 cfg: RankConfig, k_max: int, step: jnp.ndarray,
-                k_prev: jnp.ndarray) -> jnp.ndarray:
+                k_prev: jnp.ndarray,
+                refresh_every: int = 1) -> jnp.ndarray:
     """Dispatch on mode; only re-selects when ``step % delta_s == 1``
-    (paper: "if (t mod Delta_s) = 1"), otherwise keeps ``k_prev``."""
+    (paper: "if (t mod Delta_s) = 1"), otherwise keeps ``k_prev``.
+
+    ``refresh_every``: S-RSI refresh interval of the caller (adapprox's
+    amortized-refresh mode).  When > 1, this function is only invoked on
+    refresh steps (t = 1, 1+T, 1+2T, ...), so the paper's step-modulo
+    condition could desync from the refresh grid and never fire (e.g.
+    delta_s = 10, T = 7).  Instead the re-selection cadence is expressed in
+    *refresh indices*: re-select every ceil(delta_s / T)-th refresh, which
+    preserves delta_s's wall-step meaning.  ``refresh_every = 1`` is
+    bit-identical to the paper rule.
+    """
     if cfg.mode == "static":
         return k_prev
     if cfg.mode == "exact":
         k_new = select_rank_exact(cum_energy, frob_sq, cfg, k_max)
     else:
         k_new = select_rank_paper_iteration(cum_energy, frob_sq, cfg, k_max)
-    # Paper: refresh when (t mod Delta_s) = 1; the modulo keeps delta_s = 1
-    # meaning "every step".
-    refresh = (step % cfg.delta_s) == (1 % cfg.delta_s)
+    if refresh_every <= 1:
+        # Paper: refresh when (t mod Delta_s) = 1; the modulo keeps
+        # delta_s = 1 meaning "every step".
+        refresh = (step % cfg.delta_s) == (1 % cfg.delta_s)
+    else:
+        period = max(1, -(-cfg.delta_s // refresh_every))   # ceil
+        ridx = (step - 1) // refresh_every                   # 0 at t = 1
+        refresh = (ridx % period) == 0
     return jnp.where(refresh, k_new, k_prev)
 
 

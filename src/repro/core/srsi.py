@@ -37,6 +37,29 @@ import jax.numpy as jnp
 # Orthonormalisation: CholeskyQR2
 # ---------------------------------------------------------------------------
 
+def _tri_inv_lower(l: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of a small (r, r) lower-triangular matrix via row-wise
+    forward substitution:  X[i] = (e_i - L[i] @ X) / L[i, i].
+
+    Deliberately NOT ``triangular_solve``: LAPACK's trsm takes a different
+    code path under a leading batch dimension, so vmapped and unbatched
+    results differ in the last ulp — which would make bucketed (stacked +
+    vmapped) leaf execution bitwise-diverge from the per-leaf loop.  The
+    substitution loop uses only matmul / dynamic-slice / where, whose
+    batching rules are bit-stable, at the same O(r^3) flop count.  r is the
+    sketch width (~k_max + p ≲ 150), so the r-step loop is negligible next
+    to the (m, n, r) sketch matmuls.
+    """
+    r = l.shape[0]
+    eye = jnp.eye(r, dtype=l.dtype)
+
+    def body(i, x):
+        row = (eye[i] - l[i] @ x) / l[i, i]
+        return jax.lax.dynamic_update_slice(x, row[None, :], (i, 0))
+
+    return jax.lax.fori_loop(0, r, body, jnp.zeros_like(l))
+
+
 def _cholesky_qr(y: jnp.ndarray, shift_rel: float = 1e-5) -> jnp.ndarray:
     """One shifted CholeskyQR pass: returns Q with (approximately)
     orthonormal columns.
@@ -67,8 +90,10 @@ def _cholesky_qr(y: jnp.ndarray, shift_rel: float = 1e-5) -> jnp.ndarray:
     r = gram.shape[0]
     gram = gram + (shift_rel + 1e-30) * jnp.eye(r, dtype=jnp.float32)
     chol = jnp.linalg.cholesky(gram)
-    # Q = Y_s R^{-1}  (R = chol.T upper triangular).
-    q = jax.scipy.linalg.solve_triangular(chol, ys.T, lower=True).T
+    # Q = Y_s R^{-1} = Y_s L^{-T}  (R = chol.T upper triangular).  The
+    # explicit small inverse (not trsm) keeps vmapped == unbatched bitwise
+    # — see _tri_inv_lower.
+    q = ys @ _tri_inv_lower(chol).T
     # Degenerate sketch directions (collapsed by power iteration) can turn
     # into NaN under XLA's fused loop bodies even though the unrolled math
     # is finite.  Zeroing them is semantically "drop that sketch column":
@@ -140,13 +165,38 @@ class ImplicitV(NamedTuple):
         return (self.b2 * jnp.maximum(qm @ self.u.T, 0.0)
                 + (1.0 - self.b2) * g32 * g32)
 
-    def frob_sq(self) -> jnp.ndarray:
-        """||V||_F^2 — streaming, O(mn) flops, O(1) extra memory.
+    def frob_sq(self, row_tile: int = 512) -> jnp.ndarray:
+        """||V||_F^2 — streaming: O(mn) flops but O(row_tile * n) transient
+        memory instead of materialising the full (m, n) matrix in HBM.
 
-        XLA fuses the reconstruct + square + reduce; the Pallas kernel path
-        (kernels/lowrank_update.py) does the same tiling explicitly.
+        The clamp ``max(Q U^T, 0)`` is applied tile-wise: a ``lax.scan`` over
+        row blocks of Q (and G) reconstructs one (row_tile, n) slab at a
+        time, accumulating ``sum(V_tile**2)`` in fp32.  Zero-padded rows
+        contribute exactly 0 (padded Q rows give a zero low-rank slab and
+        padded G rows a zero dense slab), so padding is free.
         """
-        return jnp.sum(jnp.square(self.materialize()))
+        g32 = self.g.astype(jnp.float32)
+        qm = self.q * self.col_mask[None, :]
+        m = g32.shape[0]
+        if m <= row_tile:
+            v = (self.b2 * jnp.maximum(qm @ self.u.T, 0.0)
+                 + (1.0 - self.b2) * g32 * g32)
+            return jnp.sum(jnp.square(v))
+        pad = (-m) % row_tile
+        qp = jnp.pad(qm, ((0, pad), (0, 0)))
+        gp = jnp.pad(g32, ((0, pad), (0, 0)))
+        n_tiles = (m + pad) // row_tile
+        qt = qp.reshape(n_tiles, row_tile, qm.shape[1])
+        gt = gp.reshape(n_tiles, row_tile, g32.shape[1])
+
+        def body(acc, slab):
+            q_blk, g_blk = slab
+            v = (self.b2 * jnp.maximum(q_blk @ self.u.T, 0.0)
+                 + (1.0 - self.b2) * g_blk * g_blk)
+            return acc + jnp.sum(jnp.square(v)), None
+
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (qt, gt))
+        return total
 
 
 def make_implicit_v(q, u, g, b2, col_mask=None) -> ImplicitV:
@@ -177,7 +227,9 @@ def _srsi_core(matmul_a: Callable[[jnp.ndarray], jnp.ndarray],
                r_store: int,
                oversample: int,
                n_iter: int,
-               key: jax.Array) -> SRSIResult:
+               key: jax.Array,
+               u0: Optional[jnp.ndarray] = None,
+               use_warm: Optional[jnp.ndarray] = None) -> SRSIResult:
     """Shared implementation.  ``matmul_a(x: (n, r)) -> (m, r)``,
     ``matmul_at(y: (m, r)) -> (n, r)``.
 
@@ -185,6 +237,22 @@ def _srsi_core(matmul_a: Callable[[jnp.ndarray], jnp.ndarray],
     sampling ``r_store + oversample`` columns and truncating to ``r_store``
     at the end (the paper truncates to ``k``; we store ``k_max`` columns in
     adaptive mode and mask down to ``k_t`` — see rank.py).
+
+    Warm start (``u0``): because V_t is a slow EMA (b2 ~ 0.999), the
+    previous step's right factor U is already a near-converged subspace
+    iterate.  When ``u0: (n, r_store)`` is given, its columns seed the
+    sketch instead of fresh Gaussians, so 1–2 power iterations recover the
+    accuracy that a cold Gaussian start needs l = 5 for.  Robustness:
+
+      * zero columns of ``u0`` (init state; rank-masked columns after
+        adaptive-rank truncation) individually fall back to the Gaussian
+        column — they carry no subspace information and would be degenerate
+        sketch directions;
+      * the ``oversample`` columns are ALWAYS fresh Gaussians, so the
+        iteration keeps exploring outside the inherited subspace (this is
+        what lets rank growth and slow subspace drift be picked up);
+      * ``use_warm`` (traced bool, optional) drops the entire warm seed in
+        favour of the Gaussian sketch — the caller's drift guard.
 
     Scale normalisation: second-moment matrices late in training have
     entries ~(1-b2)*g^2 ~ 1e-8; the implicit power (A A^T)^l A then
@@ -195,6 +263,16 @@ def _srsi_core(matmul_a: Callable[[jnp.ndarray], jnp.ndarray],
     inv = (1.0 / scale).astype(jnp.float32)
     r_total = r_store + oversample
     u = jax.random.normal(key, (n, r_total), dtype=jnp.float32)
+    if u0 is not None:
+        r_warm = u0.shape[-1]
+        u032 = u0.astype(jnp.float32)
+        col_ok = jnp.sum(jnp.square(u032), axis=0) > 0.0
+        warm_cols = jnp.where(col_ok[None, :], u032, u[:, :r_warm])
+        warm = jnp.concatenate([warm_cols, u[:, r_warm:]], axis=1)
+        if use_warm is not None:
+            u = jnp.where(use_warm, warm, u)
+        else:
+            u = warm
 
     def half_step(u):
         q = matmul_a(u) * inv
@@ -218,24 +296,31 @@ def _srsi_core(matmul_a: Callable[[jnp.ndarray], jnp.ndarray],
 
 
 def srsi_dense(a: jnp.ndarray, r_store: int, oversample: int, n_iter: int,
-               key: jax.Array) -> SRSIResult:
-    """Paper-faithful S-RSI on an explicit target matrix ``a: (m, n)``."""
+               key: jax.Array,
+               u0: Optional[jnp.ndarray] = None,
+               use_warm: Optional[jnp.ndarray] = None) -> SRSIResult:
+    """Paper-faithful S-RSI on an explicit target matrix ``a: (m, n)``.
+    ``u0``/``use_warm``: optional warm-start seed (see ``_srsi_core``)."""
     a32 = a.astype(jnp.float32)
     return _srsi_core(lambda x: a32 @ x,
                       lambda y: a32.T @ y,
                       jnp.sum(jnp.square(a32)),
-                      a.shape[1], r_store, oversample, n_iter, key)
+                      a.shape[1], r_store, oversample, n_iter, key,
+                      u0=u0, use_warm=use_warm)
 
 
 def srsi_implicit(v: ImplicitV, r_store: int, oversample: int, n_iter: int,
                   key: jax.Array,
-                  frob_sq: Optional[jnp.ndarray] = None) -> SRSIResult:
+                  frob_sq: Optional[jnp.ndarray] = None,
+                  u0: Optional[jnp.ndarray] = None,
+                  use_warm: Optional[jnp.ndarray] = None) -> SRSIResult:
     """S-RSI on the implicit operator — never materialises ``V`` (beyond-paper
-    memory optimisation; bitwise-different but statistically identical)."""
+    memory optimisation; bitwise-different but statistically identical).
+    ``u0``/``use_warm``: optional warm-start seed (see ``_srsi_core``)."""
     if frob_sq is None:
         frob_sq = v.frob_sq()
     return _srsi_core(v.mv, v.rmv, frob_sq, v.shape[1], r_store, oversample,
-                      n_iter, key)
+                      n_iter, key, u0=u0, use_warm=use_warm)
 
 
 def reconstruct(q: jnp.ndarray, u: jnp.ndarray,

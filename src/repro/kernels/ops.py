@@ -119,6 +119,23 @@ def sq_matmul_t(g: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
     return fn(g, y)
 
 
+def one_sided_fold(u: jnp.ndarray, q: jnp.ndarray, g: jnp.ndarray,
+                   b2: float,
+                   col_mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Rank-projected factor fold ``mask * (b2*U + (1-b2) (G^2)^T Q)`` —
+    the between-refresh update of Adapprox's amortized S-RSI.  The hot
+    (G^2)^T Q product goes through the fused ``sq_matmul_t`` Pallas kernel
+    dispatch (G^2 never materialised, batching included); the rank-r EMA +
+    mask broadcast over any leading batch dims.  ``col_mask`` (r,) is
+    shared across the batch.
+    """
+    y = sq_matmul_t(g, q)
+    folded = b2 * u.astype(jnp.float32) + (1.0 - b2) * y
+    if col_mask is not None:
+        folded = folded * col_mask[None, :]
+    return folded
+
+
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                     causal: bool = True, bq: int = 512,
                     bk: int = 512) -> jnp.ndarray:

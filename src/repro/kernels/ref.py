@@ -41,3 +41,23 @@ def sq_matmul_t(g: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
     """Z = (G * G)^T @ Y.   g: (m, n), y: (m, s) -> (n, s) f32."""
     g32 = g.astype(jnp.float32)
     return (g32 * g32).T @ y.astype(jnp.float32)
+
+
+def one_sided_fold(u: jnp.ndarray, q: jnp.ndarray, g: jnp.ndarray,
+                   b2: float,
+                   col_mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Amortized-refresh factor fold (Adapprox ``refresh_every`` mode):
+
+        U_t = mask * (b2 * U_{t-1} + (1 - b2) * (G^2)^T @ Q)
+
+    i.e. the rank-projected EMA of the second moment under a FROZEN left
+    basis Q.  Exact identity: with U = V^T Q this is V_t^T Q for
+    V_t = b2 V_{t-1} + (1-b2) G^2 projected onto span(Q), so the stored
+    pair (Q, U_t) keeps representing the implicit operator between full
+    S-RSI refreshes.  u: (n, r), q: (m, r), g: (m, n) -> (n, r) f32.
+    """
+    u32 = u.astype(jnp.float32)
+    folded = b2 * u32 + (1.0 - b2) * sq_matmul_t(g, q.astype(jnp.float32))
+    if col_mask is not None:
+        folded = folded * col_mask[None, :]
+    return folded

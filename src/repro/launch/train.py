@@ -24,16 +24,23 @@ from repro.models import build_model
 from repro.train import LoopConfig, train
 
 
-def optimizer_config(name: str, steps: int, lr: float) -> OptimizerConfig:
+def optimizer_config(name: str, steps: int, lr: float,
+                     refresh_every: int = 1, warm_start: bool = False,
+                     bucketed: bool = False) -> OptimizerConfig:
     """The launcher's OptimizerConfig: cosine schedule derived from the run
-    length, paper-faithful Adapprox adaptive-rank settings."""
+    length, paper-faithful Adapprox adaptive-rank settings.  The amortized-
+    refresh knobs (refresh_every / warm_start / bucketed, adapprox only)
+    trade a bounded amount of factorization freshness for step time — see
+    repro.core's module docstring for the measured curve."""
     common = dict(name=name, lr=lr, schedule="cosine",
                   warmup_steps=max(steps // 20, 5), total_steps=steps,
                   min_lr=lr / 6, weight_decay=0.1)
     if name == "adapprox":
         return OptimizerConfig(**common, rank_mode="paper", k=1, k_max=128,
                                xi_thresh=0.01, delta_s=10,
-                               min_dim_factor=64, implicit=False)
+                               min_dim_factor=64, implicit=False,
+                               refresh_every=refresh_every,
+                               warm_start=warm_start, bucketed=bucketed)
     if name in ("adamw", "adafactor", "came"):
         return OptimizerConfig(**common)
     raise ValueError(name)
@@ -49,6 +56,12 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--optimizer", default="adapprox")
+    ap.add_argument("--refresh-every", type=int, default=1,
+                    help="adapprox: full S-RSI every T steps (fold between)")
+    ap.add_argument("--warm-start", action="store_true",
+                    help="adapprox: warm-start S-RSI from the stored U")
+    ap.add_argument("--bucketed", action="store_true",
+                    help="adapprox: one vmapped trace per same-shape bucket")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--log-every", type=int, default=20)
@@ -59,8 +72,10 @@ def main(argv=None):
     cfg = (get_smoke_config(args.arch, max_seq_len=args.seq)
            if args.smoke else get_config(args.arch))
     model = build_model(cfg)
-    opt = build_optimizer(optimizer_config(args.optimizer, args.steps,
-                                           args.lr))
+    opt = build_optimizer(optimizer_config(
+        args.optimizer, args.steps, args.lr,
+        refresh_every=args.refresh_every, warm_start=args.warm_start,
+        bucketed=args.bucketed))
     data_cfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
                           global_batch=args.batch)
     ckpt = (CheckpointConfig(directory=args.ckpt_dir,

@@ -1,0 +1,361 @@
+"""Amortized second-moment refresh: warm-start S-RSI, refresh-interval
+scheduling (factor folding), bucketed leaf execution, and the streaming
+frob_sq — the perf mechanisms behind ``refresh_every`` / ``warm_start`` /
+``bucketed`` (all default-off; the default chain stays bit-exact vs seed,
+which tests/test_compose.py::test_chained_adapprox_matches_seed_monolith
+continues to enforce)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adapprox_state, apply_updates, make_optimizer
+from repro.core import srsi as S
+from repro.core.adamw import AdamWConfig, adamw
+from repro.core.transform import partition
+from repro.kernels import ops as KO
+from repro.kernels import ref as KR
+
+
+# ---------------------------------------------------------------------------
+# warm-start S-RSI
+# ---------------------------------------------------------------------------
+
+def _drifting_ema(key, m, n, steps, b2=0.99, rank=6):
+    """An EMA second-moment stream with a stable dominant subspace: V_t =
+    b2 V_{t-1} + (1-b2) (M + eps*N_t)^2 for a fixed low-rank-ish M."""
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (m, rank))
+    b = jax.random.normal(k2, (rank, n))
+    scales = 10.0 ** (-jnp.arange(rank, dtype=jnp.float32) / 2.0)
+    base = (a * scales) @ b
+    v = jnp.zeros((m, n))
+    out = []
+    for t in range(steps):
+        noise = jax.random.normal(jax.random.fold_in(key, 100 + t), (m, n))
+        g = base + 0.05 * noise
+        v = b2 * v + (1.0 - b2) * jnp.square(g)
+        out.append(v)
+    return out
+
+
+def test_warm_start_converges_to_cold_subspace():
+    """Warm-started l=1 S-RSI tracks the same dominant subspace as a cold
+    l=5 run on a slowly-drifting EMA matrix: after a few steps the top-k
+    principal angles between the two bases are small, and the captured
+    energy matches."""
+    mats = _drifting_ema(jax.random.PRNGKey(0), 128, 96, steps=10)
+    r, p = 12, 4
+    u_warm = None
+    res_w = res_c = None
+    for t, v in enumerate(mats):
+        key = jax.random.fold_in(jax.random.PRNGKey(1), t)
+        res_c = S.srsi_dense(v, r, p, n_iter=5, key=key)
+        res_w = S.srsi_dense(v, r, p, n_iter=1, key=key, u0=u_warm,
+                             use_warm=None if u_warm is None else
+                             jnp.asarray(True))
+        u_warm = res_w.u
+    # top-4 principal angles: cos(theta) = singular values of Qw^T Qc
+    k = 4
+    sv = jnp.linalg.svd(res_w.q[:, :k].T @ res_c.q[:, :k],
+                        compute_uv=False)
+    assert float(jnp.min(sv)) > 0.95, sv
+    # captured-energy parity at full stored rank (relative)
+    ew = float(res_w.cum_energy[-1] / res_w.frob_sq)
+    ec = float(res_c.cum_energy[-1] / res_c.frob_sq)
+    assert ew > ec - 0.02, (ew, ec)
+
+
+def test_warm_start_zero_u0_falls_back_to_gaussian():
+    """All-zero warm columns (init state) must reproduce the cold sketch
+    bit-for-bit — the per-column fallback re-randomizes them."""
+    a = jnp.square(jax.random.normal(jax.random.PRNGKey(2), (64, 48)))
+    key = jax.random.PRNGKey(3)
+    cold = S.srsi_dense(a, 8, 4, 2, key)
+    warm = S.srsi_dense(a, 8, 4, 2, key, u0=jnp.zeros((48, 8)),
+                        use_warm=jnp.asarray(True))
+    np.testing.assert_array_equal(np.asarray(cold.q), np.asarray(warm.q))
+    np.testing.assert_array_equal(np.asarray(cold.u), np.asarray(warm.u))
+
+
+def test_warm_start_drift_guard_rerandomizes():
+    """use_warm=False (the xi drift guard tripping) must drop the warm seed
+    entirely and reproduce the cold-start result bit-for-bit."""
+    a = jnp.square(jax.random.normal(jax.random.PRNGKey(4), (64, 48)))
+    key = jax.random.PRNGKey(5)
+    junk = jax.random.normal(jax.random.PRNGKey(6), (48, 8))
+    cold = S.srsi_dense(a, 8, 4, 2, key)
+    guarded = S.srsi_dense(a, 8, 4, 2, key, u0=junk,
+                           use_warm=jnp.asarray(False))
+    np.testing.assert_array_equal(np.asarray(cold.q), np.asarray(guarded.q))
+    np.testing.assert_array_equal(np.asarray(cold.u), np.asarray(guarded.u))
+
+
+# ---------------------------------------------------------------------------
+# streaming frob_sq (implicit mode no longer materializes V)
+# ---------------------------------------------------------------------------
+
+def test_streaming_frob_sq_matches_dense():
+    """Tiled frob_sq == sum(materialize()**2) incl. the tile-wise clamp,
+    for row counts that don't divide the tile (padding path)."""
+    key = jax.random.PRNGKey(7)
+    for m, n, tile in [(130, 48, 64), (512, 32, 128), (64, 96, 512)]:
+        q = jax.random.normal(jax.random.fold_in(key, m), (m, 6))
+        u = jax.random.normal(jax.random.fold_in(key, m + 1), (n, 6))
+        g = jax.random.normal(jax.random.fold_in(key, m + 2), (m, n))
+        v = S.make_implicit_v(q, u, g, 0.99)
+        want = float(jnp.sum(jnp.square(v.materialize())))
+        got = float(v.frob_sq(row_tile=tile))
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# one-sided fold (refresh-interval mode's between-refresh update)
+# ---------------------------------------------------------------------------
+
+def test_one_sided_fold_kernel_matches_ref():
+    key = jax.random.PRNGKey(8)
+    u = jax.random.normal(key, (48, 8))
+    q = jax.random.normal(jax.random.fold_in(key, 1), (64, 8))
+    g = jax.random.normal(jax.random.fold_in(key, 2), (64, 48))
+    mask = (jnp.arange(8) < 5).astype(jnp.float32)
+    want = KR.one_sided_fold(u, q, g, 0.999, mask)
+    prev = KO._MODE
+    try:
+        KO.set_mode("ref")
+        got = KO.one_sided_fold(u, q, g, 0.999, mask)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+        # batched leading dim
+        ub, qb, gb = (jnp.stack([x, x]) for x in (u, q, g))
+        gotb = KO.one_sided_fold(ub, qb, gb, 0.999, mask)
+        np.testing.assert_allclose(np.asarray(gotb[0]), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+        KO.set_mode("pallas")       # interpret mode off-TPU
+        got_k = KO.one_sided_fold(u, q, g, 0.999, mask)
+        np.testing.assert_allclose(np.asarray(got_k), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+    finally:
+        KO.set_mode(prev)
+
+
+def test_fold_step_update_is_exact_wrt_implicit_operator():
+    """On a non-refresh step the elementwise update must STILL be the exact
+    Adapprox rule u = G/(sqrt(V_t)+eps) with V_t = b2*max(QU^T,0)+(1-b2)G^2
+    built from the stored factors — folding only amortizes the
+    re-factorization, never the update."""
+    params = {"w": jax.random.normal(jax.random.PRNGKey(9), (160, 144)) * 0.02}
+    opt = make_optimizer("adapprox", lr=1.0, weight_decay=0.0, b1=0.0,
+                         k_init=8, mode="static", min_dim_factor=64,
+                         refresh_every=3)
+    state = opt.init(params)
+    upd = jax.jit(opt.update)
+    p = params
+    cfg_b2, cfg_eps, clip_d = 0.999, 1e-8, 1.0
+    for t in range(1, 4):
+        st_pre = adapprox_state(state)
+        q, u = st_pre.leaves[0].q, st_pre.leaves[0].u
+        g = {"w": jax.random.normal(jax.random.fold_in(
+            jax.random.PRNGKey(10), t), (160, 144))}
+        got, state = upd(g, state, p)
+        v = (cfg_b2 * jnp.maximum(q @ u.T, 0.0)
+             + (1.0 - cfg_b2) * jnp.square(g["w"]))
+        want = g["w"] / (jnp.sqrt(v) + cfg_eps)
+        want = want / jnp.maximum(
+            1.0, jnp.sqrt(jnp.mean(jnp.square(want)) + 1e-30) / clip_d)
+        np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(-want),
+                                   rtol=1e-5, atol=1e-6,
+                                   err_msg=f"step {t}")
+        st_post = adapprox_state(state)
+        if t in (2, 3):            # fold steps: basis frozen, k/xi kept
+            np.testing.assert_array_equal(np.asarray(st_post.leaves[0].q),
+                                          np.asarray(q))
+        p = apply_updates(p, got)
+
+
+def test_fold_tracks_projected_ema():
+    """Across a fold interval the stored U equals the explicit rank-
+    projected EMA  U_t = b2*U_{t-1} + (1-b2)(G^2)^T Q  under the frozen
+    refresh-step basis."""
+    params = {"w": jax.random.normal(jax.random.PRNGKey(11), (160, 144)) * 0.02}
+    opt = make_optimizer("adapprox", lr=1e-3, weight_decay=0.0, b1=0.0,
+                         k_init=8, mode="static", min_dim_factor=64,
+                         refresh_every=4)
+    state = opt.init(params)
+    upd = jax.jit(opt.update)
+    p, b2 = params, 0.999
+    u_ref = q_ref = None
+    for t in range(1, 5):
+        g = {"w": jax.random.normal(jax.random.fold_in(
+            jax.random.PRNGKey(12), t), (160, 144))}
+        got, state = upd(g, state, p)
+        st = adapprox_state(state)
+        if t == 1:                 # refresh step: adopt the new basis
+            q_ref, u_ref = st.leaves[0].q, st.leaves[0].u
+        else:                      # fold: U <- b2 U + (1-b2)(G^2)^T Q
+            u_ref = b2 * u_ref + (1.0 - b2) * (
+                jnp.square(g["w"]).T @ q_ref)
+            np.testing.assert_array_equal(np.asarray(st.leaves[0].q),
+                                          np.asarray(q_ref))
+            np.testing.assert_allclose(np.asarray(st.leaves[0].u),
+                                       np.asarray(u_ref),
+                                       rtol=1e-5, atol=1e-7)
+        p = apply_updates(p, got)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint/restore across a refresh interval
+# ---------------------------------------------------------------------------
+
+def _toy_partitioned_opt():
+    labeler = lambda params: jax.tree.map(
+        lambda p: "factored" if p.ndim >= 2 else "dense", params)
+    sub_f = make_optimizer("adapprox", lr=1e-3, weight_decay=0.0,
+                           k_init=6, mode="static", min_dim_factor=64,
+                           refresh_every=3, warm_start=True, n_iter_warm=1)
+    sub_d = adamw(AdamWConfig(lr=1e-3))
+    return partition(labeler, {"factored": sub_f, "dense": sub_d})
+
+
+def test_refresh_every_checkpoint_roundtrip():
+    """A mid-refresh-interval checkpoint/restore through PartitionState is
+    bit-transparent: the refresh phase is a pure function of state.step, so
+    serializing the state to host numpy and rebuilding it continues the
+    trajectory bit-for-bit (incl. which steps refresh vs fold)."""
+    params = {"w": jax.random.normal(jax.random.PRNGKey(13), (160, 144)) * 0.02,
+              "b": jnp.zeros((144,))}
+    opt = _toy_partitioned_opt()
+    gkey = jax.random.PRNGKey(14)
+    grads = lambda t, p: jax.tree.map(lambda x: jax.random.normal(
+        jax.random.fold_in(gkey, t * 17 + x.size), x.shape), p)
+    upd = jax.jit(opt.update)
+
+    # uninterrupted run: 5 steps (refresh at t=1 and t=4, folds between)
+    state = opt.init(params)
+    p = params
+    for t in range(1, 6):
+        u, state = upd(grads(t, p), state, p)
+        p = apply_updates(p, u)
+
+    # interrupted run: stop after t=2 (mid-interval), round-trip the state
+    # through host numpy (what a checkpoint does), continue
+    state2 = opt.init(params)
+    p2 = params
+    for t in range(1, 3):
+        u, state2 = upd(grads(t, p2), state2, p2)
+        p2 = apply_updates(p2, u)
+    flat, treedef = jax.tree.flatten(state2)
+    restored = jax.tree.unflatten(
+        treedef, [jnp.asarray(np.asarray(x)) for x in flat])
+    for t in range(3, 6):
+        u, restored = upd(grads(t, p2), restored, p2)
+        p2 = apply_updates(p2, u)
+
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# bucketed leaf execution
+# ---------------------------------------------------------------------------
+
+def _bucket_params():
+    key = jax.random.PRNGKey(15)
+    mk = lambda i, s: jax.random.normal(jax.random.fold_in(key, i), s) * 0.02
+    return {
+        "attn_q": mk(0, (160, 144)),
+        "attn_k": mk(1, (160, 144)),
+        "attn_v": mk(2, (160, 144)),
+        "proj": mk(3, (144, 160)),
+        "stack": mk(4, (3, 160, 144)),
+        "bias": jnp.zeros((144,)),
+    }
+
+
+def _run_steps(opt, params, n_steps, gkey):
+    state = opt.init(params)
+    upd = jax.jit(opt.update)
+    p = params
+    for t in range(1, n_steps + 1):
+        g = jax.tree.map(lambda x: jax.random.normal(
+            jax.random.fold_in(gkey, t * 31 + x.size), x.shape), p)
+        u, state = upd(g, state, p)
+        p = apply_updates(p, u)
+    return p, state
+
+
+def _assert_same_adapprox_run(p_seq, s_seq, p_bkt, s_bkt):
+    """Updates/params and every trajectory-relevant state field (q, u, k,
+    m1, dense v, step, key) must match bit-for-bit.  The metrics-only
+    ``xi`` scalar is allowed 1 float32 ulp: XLA's fusion emitter compiles
+    the gather+div+sqrt chain of xi_of_k differently inside batched vs
+    unbatched programs (every constituent primitive is bit-stable under
+    vmap in isolation — verified — but fused neighborhoods differ), and xi
+    never feeds back into the update arithmetic (factored.py documents it
+    as metrics-only; its only control use is the warm-start drift-guard
+    threshold compare, where a 1-ulp wobble matters only at the exact
+    threshold boundary)."""
+    for a, b in zip(jax.tree.leaves(p_seq), jax.tree.leaves(p_bkt)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    sa, sb = adapprox_state(s_seq), adapprox_state(s_bkt)
+    np.testing.assert_array_equal(np.asarray(sa.step), np.asarray(sb.step))
+    for la, lb in zip(sa.leaves, sb.leaves):
+        for field in ("q", "u", "k", "m1", "v"):
+            xa = getattr(la, field, None)
+            xb = getattr(lb, field, None)
+            if xa is None:
+                assert xb is None
+                continue
+            np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb),
+                                          err_msg=field)
+        if hasattr(la, "xi"):
+            np.testing.assert_allclose(np.asarray(la.xi), np.asarray(lb.xi),
+                                       rtol=0, atol=1e-6)
+
+
+def test_bucketed_bit_identical_to_per_leaf_loop():
+    """bucketed=True groups the three same-shape attention projections into
+    one vmapped trace; updates and all trajectory-relevant state must be
+    bit-identical to the sequential per-leaf loop."""
+    params = _bucket_params()
+    gkey = jax.random.PRNGKey(16)
+    kw = dict(lr=1e-3, weight_decay=0.0, k_init=4, k_max=16, mode="paper",
+              xi_thresh=0.05, delta_s=2, min_dim_factor=64)
+    p_seq, s_seq = _run_steps(make_optimizer("adapprox", **kw),
+                              params, 4, gkey)
+    p_bkt, s_bkt = _run_steps(make_optimizer("adapprox", bucketed=True, **kw),
+                              params, 4, gkey)
+    _assert_same_adapprox_run(p_seq, s_seq, p_bkt, s_bkt)
+
+
+def test_bucketed_bit_identical_with_refresh_and_warm_start():
+    """Bucketing composes with the amortized-refresh knobs: still
+    bit-identical when refresh_every/warm_start drive the cond+fold path."""
+    params = _bucket_params()
+    gkey = jax.random.PRNGKey(17)
+    kw = dict(lr=1e-3, weight_decay=0.0, k_init=6, mode="static",
+              min_dim_factor=64, refresh_every=3, warm_start=True,
+              n_iter_warm=1)
+    p_seq, s_seq = _run_steps(make_optimizer("adapprox", **kw),
+                              params, 5, gkey)
+    p_bkt, s_bkt = _run_steps(make_optimizer("adapprox", bucketed=True, **kw),
+                              params, 5, gkey)
+    _assert_same_adapprox_run(p_seq, s_seq, p_bkt, s_bkt)
+
+
+def test_warm_start_trajectory_stays_close_to_cold():
+    """End-to-end guardrail: warm-started amortized refresh follows the
+    exact-refresh parameter trajectory closely on a short run."""
+    params = {"w": jax.random.normal(jax.random.PRNGKey(18), (160, 144)) * 0.02}
+    gkey = jax.random.PRNGKey(19)
+    kw = dict(lr=1e-2, weight_decay=0.0, k_init=8, mode="static",
+              min_dim_factor=64)
+    p_cold, _ = _run_steps(make_optimizer("adapprox", **kw), params, 10, gkey)
+    p_fast, _ = _run_steps(
+        make_optimizer("adapprox", refresh_every=5, warm_start=True,
+                       n_iter_warm=1, **kw), params, 10, gkey)
+    ref_step = float(jnp.sqrt(jnp.mean(jnp.square(p_cold["w"] - params["w"]))))
+    dev = float(jnp.sqrt(jnp.mean(jnp.square(p_cold["w"] - p_fast["w"]))))
+    # trajectories deviate by well under the distance travelled
+    assert dev < 0.35 * ref_step, (dev, ref_step)
