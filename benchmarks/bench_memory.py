@@ -1,18 +1,37 @@
-"""Table 2 reproduction: optimizer-state memory (MB) for GPT-2 117M/345M
-under AdamW / Adafactor / CAME / Adapprox(k_init) / Adapprox(k_max),
-at beta1 = 0.9 and beta1 = 0.
+"""Optimizer-state memory accounting -> ``BENCH_memory.json``.
 
-Numbers come from the ACTUAL state pytrees of our implementations
-(tree_nbytes over opt.init(params)), not an analytic formula — i.e. this
-validates the memory layout the paper's Table 2 measures.
+Two sections, both measured from the ACTUAL state pytrees of our
+implementations (``tree_nbytes`` over ``jax.eval_shape(opt.init, params)``
+— abstract, so full-size configs cost nothing), not analytic formulas:
+
+  * ``table2`` — the paper's Table 2: optimizer-state MB for GPT-2
+    117M/345M under AdamW / Adafactor / CAME / Adapprox(k_init/k_max), at
+    beta1 = 0.9 and 0, as a percentage of AdamW.
+  * ``sharded`` — per-DEVICE optimizer-state bytes for the production
+    mixed partition chain (dense Adam on 1-D/small leaves, Adapprox on
+    matrices) across FSDP mesh sizes 1/2/4/8, including the per-group
+    split.  Specs come from the same ``state_sharding_spec`` protocol the
+    live training path uses (``distributed/sharding.py``), evaluated
+    against ``{axis: size}`` mesh shapes — no devices needed, so the
+    full-size accounting runs in CI.
+
+JSON shape follows ``BENCH_step_time.json`` conventions:
+``{"benchmark": ..., "results": [...], "derived": {...}}``.
+
+CLI:  python benchmarks/bench_memory.py [--quick] [--out PATH.json]
 """
 from __future__ import annotations
 
+import argparse
+import json
+
 import jax
 
-from repro.config import OptimizerConfig
+from repro.config import OptimizerConfig, default_mixed_groups
 from repro.configs import get_config
 from repro.core import build_optimizer, tree_nbytes
+from repro.core.types import state_sharding_spec
+from repro.distributed import sharding as SH
 from repro.models import build_model
 
 # The paper reports 50.1% / 65.5% / 0.1% / 15.5% etc. relative to AdamW.
@@ -33,53 +52,248 @@ PAPER_TABLE2 = {  # (model, b1, method) -> percent of AdamW
     ("gpt2-345m", 0.0, "adapprox_kmax"): 16.2,
 }
 
+MESH_SIZES = (1, 2, 4, 8)        # FSDP data-axis sizes for the sharded rows
 
-def state_mb(arch: str, b1: float, method: str) -> float:
-    cfg = get_config(arch)
-    model = build_model(cfg)
-    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
 
+def _method_config(b1: float, method: str):
     base = dict(schedule="constant", lr=1e-3, weight_decay=0.0)
     if method == "adamw":
         # PyTorch AdamW allocates both moments regardless of beta1
-        ocfg = OptimizerConfig(name="adamw", b1=max(b1, 0.9), **base)
-    elif method == "adafactor":
-        ocfg = OptimizerConfig(name="adafactor", b1=b1, **base)
-    elif method == "came":
+        return OptimizerConfig(name="adamw", b1=max(b1, 0.9), **base)
+    if method == "adafactor":
+        return OptimizerConfig(name="adafactor", b1=b1, **base)
+    if method == "came":
         if b1 == 0.0:
-            return float("nan")          # non-viable (paper: "--")
-        ocfg = OptimizerConfig(name="came", b1=b1, **base)
-    elif method == "adapprox_kinit":
-        ocfg = OptimizerConfig(name="adapprox", b1=b1, k=1,
+            return None                  # non-viable (paper: "--")
+        return OptimizerConfig(name="came", b1=b1, **base)
+    if method == "adapprox_kinit":
+        return OptimizerConfig(name="adapprox", b1=b1, k=1,
                                rank_mode="static", **base)
-    elif method == "adapprox_kmax":
-        ocfg = OptimizerConfig(name="adapprox", b1=b1, k=1, k_max=10**9,
+    if method == "adapprox_kmax":
+        return OptimizerConfig(name="adapprox", b1=b1, k=1, k_max=10**9,
                                rank_mode="paper", **base)
-    elif method == "adapprox_kmax_int8":
+    if method == "adapprox_kmax_int8":
         # beyond-paper: paper Discussion names quantization compatibility
-        ocfg = OptimizerConfig(name="adapprox", b1=b1, k=1, k_max=10**9,
+        return OptimizerConfig(name="adapprox", b1=b1, k=1, k_max=10**9,
                                rank_mode="paper", factor_dtype="int8",
                                **base)
-    else:
-        raise ValueError(method)
-    state = jax.eval_shape(build_optimizer(ocfg).init, params)
+    if method == "mixed_groups":
+        # the launcher's production default: partition(dense adam, adapprox)
+        return OptimizerConfig(name="adapprox", b1=b1, k=1, k_max=10**9,
+                               rank_mode="paper",
+                               groups=default_mixed_groups(), **base)
+    raise ValueError(method)
+
+
+def _state_struct(arch: str, ocfg: OptimizerConfig):
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    opt = build_optimizer(ocfg)
+    return model, params, opt, jax.eval_shape(opt.init, params)
+
+
+def state_mb(arch: str, b1: float, method: str) -> float:
+    ocfg = _method_config(b1, method)
+    if ocfg is None:
+        return float("nan")
+    _, _, _, state = _state_struct(arch, ocfg)
     return tree_nbytes(state) / 1e6
 
 
-def run() -> list[str]:
-    rows = ["table2_model,b1,method,state_mb,pct_of_adamw,paper_pct"]
-    for arch in ("gpt2-117m", "gpt2-345m"):
-        for b1 in (0.9, 0.0):
-            base = state_mb(arch, b1, "adamw")
-            for method in ("adamw", "adafactor", "came", "adapprox_kinit",
-                           "adapprox_kmax", "adapprox_kmax_int8"):
-                mb = state_mb(arch, b1, method)
-                pct = 100.0 * mb / base
-                paper = PAPER_TABLE2.get((arch, b1, method), "")
-                rows.append(f"{arch},{b1},{method},{mb:.1f},{pct:.1f},"
-                            f"{paper}")
+# --------------------------------------------------------------------------
+# Sharded per-device accounting
+# --------------------------------------------------------------------------
+
+def _spec_axes_factor(spec, shape, mesh_shape: dict) -> int:
+    """Device-division factor a PartitionSpec gives one leaf: sanitize the
+    spec with the REAL placement rule (``sanitize_spec`` handles the
+    non-dividing / largest-dividing-subtuple / unknown-axis fallbacks),
+    then multiply the surviving axis sizes."""
+    factor = 1
+    for ax in tuple(SH.sanitize_spec(spec, shape, mesh_shape)):
+        if ax is None:
+            continue
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            factor *= mesh_shape[a]
+    return factor
+
+
+def sharded_state_bytes(struct, spec_tree, mesh_shape: dict) -> int:
+    """Per-device bytes of ``struct`` sharded as ``spec_tree`` on a mesh of
+    ``{axis: size}`` — sum over leaves of nbytes / division-factor."""
+    from jax.sharding import PartitionSpec as P
+    flat_s = jax.tree.leaves(struct)
+    flat_p = jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_s) == len(flat_p), (len(flat_s), len(flat_p))
+    total = 0
+    for leaf, spec in zip(flat_s, flat_p):
+        nbytes = tree_nbytes(leaf)
+        total += nbytes // _spec_axes_factor(spec, leaf.shape, mesh_shape)
+    return total
+
+
+def _find_partition(state):
+    """The (first) PartitionState inside an optimizer state, walking any
+    chain tuples around it."""
+    from repro.core import PartitionState
+    if isinstance(state, PartitionState):
+        return state
+    if isinstance(state, (tuple, list)):
+        for x in state:
+            found = _find_partition(x)
+            if found is not None:
+                return found
+    return None
+
+
+def per_group_bytes(state_struct, spec_tree=None,
+                    mesh_shape: "dict | None" = None) -> dict:
+    """{label: bytes} for a PartitionState-rooted optimizer state.  With
+    ``spec_tree``/``mesh_shape`` (the spec pytree mirrors the state, so
+    its PartitionState lines up label-for-label) the figure is per-DEVICE
+    sharded bytes; otherwise the global total."""
+    pstate = _find_partition(state_struct)
+    if pstate is None:
+        return {}
+    pspec = _find_partition(spec_tree) if spec_tree is not None else None
+    out = {}
+    for label, sub in pstate.inner.items():
+        if pspec is None:
+            out[label] = tree_nbytes(sub)
+        else:
+            out[label] = sharded_state_bytes(sub, pspec.inner[label],
+                                             mesh_shape)
+    return out
+
+
+def sharded_rows(arch: str, b1: float = 0.9) -> list[dict]:
+    """Per-device optimizer-state bytes vs FSDP mesh size for the mixed
+    partition chain (and AdamW as the reference)."""
+    rows = []
+    for method in ("adamw", "mixed_groups"):
+        ocfg = _method_config(b1, method)
+        model, params, opt, state = _state_struct(arch, ocfg)
+        for n_dev in MESH_SIZES:
+            mesh_shape = {"data": n_dev}
+            pspecs = SH.param_pspecs(model, mesh_shape, "train", fsdp=True)
+            spec_tree = state_sharding_spec(opt, state, pspecs)
+            per_dev = sharded_state_bytes(state, spec_tree, mesh_shape)
+            groups = (per_group_bytes(state, spec_tree, mesh_shape)
+                      if method == "mixed_groups" else {})
+            rows.append({
+                "arch": arch, "method": method, "b1": b1,
+                "mesh": mesh_shape, "devices": n_dev,
+                "opt_state_bytes_per_device": per_dev,
+                "opt_state_mb_per_device": round(per_dev / 1e6, 2),
+                "group_bytes_per_device": {k: int(v)
+                                           for k, v in groups.items()},
+            })
     return rows
 
 
+def table2_rows(archs) -> list[dict]:
+    rows = []
+    for arch in archs:
+        for b1 in (0.9, 0.0):
+            base = state_mb(arch, b1, "adamw")
+            for method in ("adamw", "adafactor", "came", "adapprox_kinit",
+                           "adapprox_kmax", "adapprox_kmax_int8",
+                           "mixed_groups"):
+                mb = state_mb(arch, b1, method)
+                viable = mb == mb            # NaN = non-viable (paper "--")
+                rows.append({
+                    "arch": arch, "b1": b1, "method": method,
+                    # None, not NaN: the artifact must stay strict JSON
+                    "state_mb": round(mb, 1) if viable else None,
+                    "pct_of_adamw": (round(100.0 * mb / base, 1)
+                                     if viable else None),
+                    "paper_pct": PAPER_TABLE2.get((arch, b1, method)),
+                })
+    return rows
+
+
+def collect(quick: bool = False) -> dict:
+    archs = ("gpt2-117m",) if quick else ("gpt2-117m", "gpt2-345m")
+    t2 = table2_rows(archs)
+    sharded = []
+    for arch in archs:
+        sharded += sharded_rows(arch)
+
+    def pct(arch, b1, method):
+        for r in t2:
+            if (r["arch"], r["b1"], r["method"]) == (arch, b1, method):
+                return r["pct_of_adamw"]
+        return None
+
+    mixed = [r for r in sharded if r["method"] == "mixed_groups"
+             and r["arch"] == archs[0]]
+    derived = {
+        # paper Table-2 anchor on one device
+        "adapprox_kmax_pct_of_adamw_117m": pct("gpt2-117m", 0.9,
+                                               "adapprox_kmax"),
+        "mixed_groups_pct_of_adamw_117m": pct("gpt2-117m", 0.9,
+                                              "mixed_groups"),
+        # per-device savings from sharding the mixed chain
+        "mixed_per_device_mb_by_mesh": {
+            str(r["devices"]): r["opt_state_mb_per_device"] for r in mixed},
+        "mixed_shrinks_with_mesh": all(
+            a["opt_state_bytes_per_device"] > b["opt_state_bytes_per_device"]
+            for a, b in zip(mixed, mixed[1:])),
+    }
+    return {
+        "benchmark": "optimizer_state_memory",
+        "backend": jax.default_backend(),
+        "mesh_sizes": list(MESH_SIZES),
+        "results": {"table2": t2, "sharded": sharded},
+        "derived": derived,
+    }
+
+
+def run() -> list[str]:
+    """benchmarks.run harness entry point: CSV rows."""
+    data = collect(quick=False)
+    rows = ["table2_model,b1,method,state_mb,pct_of_adamw,paper_pct"]
+    for r in data["results"]["table2"]:
+        mb = "" if r["state_mb"] is None else r["state_mb"]
+        pct = "" if r["pct_of_adamw"] is None else r["pct_of_adamw"]
+        rows.append(f"{r['arch']},{r['b1']},{r['method']},{mb},"
+                    f"{pct},{r['paper_pct'] or ''}")
+    rows.append("sharded_arch,method,devices,opt_state_mb_per_device")
+    for r in data["results"]["sharded"]:
+        rows.append(f"{r['arch']},{r['method']},{r['devices']},"
+                    f"{r['opt_state_mb_per_device']}")
+    rows += [f"{k},{v}" for k, v in data["derived"].items()
+             if not isinstance(v, dict)]
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="gpt2-117m only (CI smoke)")
+    ap.add_argument("--out", default=None,
+                    help="write machine-readable JSON here")
+    args = ap.parse_args()
+    data = collect(quick=args.quick)
+    for r in data["results"]["table2"]:
+        paper = f" (paper {r['paper_pct']}%)" if r["paper_pct"] else ""
+        if r["state_mb"] is None:
+            print(f"{r['arch']} b1={r['b1']} {r['method']}: non-viable (--)")
+            continue
+        print(f"{r['arch']} b1={r['b1']} {r['method']}: {r['state_mb']}MB "
+              f"= {r['pct_of_adamw']}% of adamw{paper}")
+    for r in data["results"]["sharded"]:
+        print(f"{r['arch']} {r['method']} mesh={r['devices']}: "
+              f"{r['opt_state_mb_per_device']}MB/device")
+    print("derived:", json.dumps(data["derived"]))
+    if args.out:
+        with open(args.out, "w") as f:
+            # allow_nan=False: the artifact must parse under strict
+            # RFC-8259 consumers (jq, JSON.parse, dashboards)
+            json.dump(data, f, indent=2, allow_nan=False)
+        print(f"wrote {args.out}")
+
+
 if __name__ == "__main__":
-    print("\n".join(run()))
+    main()

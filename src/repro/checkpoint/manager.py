@@ -9,7 +9,10 @@ Fault-tolerance contract:
   * retention keeps the last ``keep`` checkpoints (+ every ``keep_every``th
     permanently);
   * ``install_preemption_handler`` flushes a final checkpoint on
-    SIGTERM/SIGINT — the TPU-pod eviction path.
+    SIGTERM/SIGINT — the TPU-pod eviction path — then CHAINS to whatever
+    handler was installed before it (elastic-restart teardown and the
+    flush compose; originals are restored after the flush / on
+    ``uninstall_preemption_handler``).
 """
 from __future__ import annotations
 
@@ -43,6 +46,7 @@ class CheckpointManager:
         self.directory = Path(cfg.directory)
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        self._prev_handlers: Optional[dict] = None
 
     # -- save ------------------------------------------------------------
     def should_save(self, step: int) -> bool:
@@ -51,13 +55,17 @@ class CheckpointManager:
     def save(self, tree: Any, step: int, blocking: bool = False,
              extra_meta: Optional[dict] = None) -> None:
         self.wait()                     # one in-flight save at a time
+        # Capture per-leaf sharding specs BEFORE the host gather strips
+        # placement — the manifest records how the state was sharded.
+        leaf_specs, mesh_axes = SER.leaf_spec_meta(tree)
         # Device->host is synchronous (consistent snapshot); file IO is not.
         host_tree = jax.tree.map(lambda x: jax.device_get(x), tree)
 
         def work():
             try:
                 SER.save_pytree(host_tree, self.directory, step,
-                                extra_meta=extra_meta)
+                                extra_meta=extra_meta,
+                                leaf_specs=leaf_specs, mesh_axes=mesh_axes)
                 self._retain()
             except BaseException as e:  # noqa: BLE001 — surfaced on wait()
                 self._error = e
@@ -97,6 +105,10 @@ class CheckpointManager:
 
     def restore(self, like: Any, shardings: Any = None,
                 step: Optional[int] = None) -> tuple[Any, int]:
+        """Restore into the structure of ``like``, re-placed under
+        ``shardings`` — a pytree of NamedSharding for the CURRENT mesh,
+        which need not resemble the saving mesh (resharding happens at
+        load; save on (4, 2), restore on (2, 4), (8,) or one device)."""
         if step is None:
             p = SER.latest_checkpoint(self.directory)
             if p is None:
@@ -110,15 +122,48 @@ class CheckpointManager:
     # -- preemption -----------------------------------------------------------
     def install_preemption_handler(self, get_state: Callable[[], tuple]):
         """get_state() -> (tree, step). On SIGTERM/SIGINT: blocking save,
-        then re-raise default behaviour."""
+        then hand the signal on.
+
+        Previously-installed handlers are CHAINED, not replaced: after the
+        flush, a caller-installed Python handler (e.g. the elastic-restart
+        machinery's own teardown) runs with the same (signum, frame);
+        SIG_IGN is honoured; otherwise the default disposition is restored
+        and the signal re-raised.  The originals are put back once this
+        handler fires (one flush per preemption) or on
+        :meth:`uninstall_preemption_handler`.
+        """
+        prev = {}
 
         def handler(signum, frame):
             log.warning("signal %s: writing preemption checkpoint", signum)
-            tree, step = get_state()
-            self.save(tree, step, blocking=True,
-                      extra_meta={"preempted": True})
-            signal.signal(signum, signal.SIG_DFL)
-            signal.raise_signal(signum)
+            try:
+                tree, step = get_state()
+                self.save(tree, step, blocking=True,
+                          extra_meta={"preempted": True})
+            finally:
+                # Even a failed flush (disk full, dead ckpt dir) must hand
+                # the signal on: restore the originals and chain, or the
+                # elastic-restart teardown never runs and the process
+                # lingers until SIGKILL.
+                self.uninstall_preemption_handler()
+                chained = prev.get(signum)
+                if callable(chained):
+                    chained(signum, frame)
+                elif chained != signal.SIG_IGN:
+                    signal.signal(signum, signal.SIG_DFL)
+                    signal.raise_signal(signum)
 
-        signal.signal(signal.SIGTERM, handler)
-        signal.signal(signal.SIGINT, handler)
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            prev[sig] = signal.signal(sig, handler)
+        self._prev_handlers = prev
+
+    def uninstall_preemption_handler(self) -> None:
+        """Put back whatever SIGTERM/SIGINT handlers were installed before
+        :meth:`install_preemption_handler` (no-op if none is active)."""
+        prev = getattr(self, "_prev_handlers", None)
+        if not prev:
+            return
+        self._prev_handlers = None
+        for sig, old in prev.items():
+            # None = handler set outside Python (C level): leave default.
+            signal.signal(sig, old if old is not None else signal.SIG_DFL)

@@ -2,16 +2,28 @@
 
 Format (directory per checkpoint step):
     step_000000123/
-      manifest.json     — pytree structure, per-leaf shape/dtype, step, meta
+      manifest.json     — pytree structure, per-leaf shape/dtype/spec,
+                          saving-mesh axis sizes, step, meta
       leaf_00000.npy    — one file per leaf (host-gathered logical array)
       _COMMITTED        — atomic commit marker (written LAST)
 
 Restore never requires the saving mesh: arrays are stored as logical
 (global) values and re-placed under the restoring mesh's NamedShardings —
-this is what makes elastic re-scaling (checkpoint on N chips, resume on M)
-work.  For the single-host container this means a plain host gather; on a
-real multi-host cluster the same manifest format extends to per-shard files
-keyed by shard index (the writer below keeps that field in the manifest).
+this is what makes elastic re-scaling (checkpoint on a (4, 2) mesh, resume
+on (2, 4), (8,) or a single host) work, and it covers every optimizer
+state shape including ``PartitionState`` (whose group labels are *static*
+pytree metadata: they live in the restore target's treedef, not in any
+array file) and mid-``refresh_every`` factored Adapprox state (the step
+counter is an array leaf, so the refresh cadence resumes exactly where it
+left off).  Each manifest leaf records the ``PartitionSpec`` it was saved
+under plus the saving mesh's axis sizes — pure metadata today (restore
+reads the logical array), but it is what a multi-host writer keys
+per-shard files on, and it makes checkpoints self-describing for
+placement-debugging tools.
+
+For the single-host container the save is a plain host gather; on a real
+multi-host cluster the same manifest format extends to per-shard files
+keyed by shard index.
 """
 from __future__ import annotations
 
@@ -36,9 +48,31 @@ def _tree_paths(tree) -> list[str]:
     return paths
 
 
+def leaf_spec_meta(tree: Any) -> tuple[list, dict]:
+    """Per-leaf sharding-spec strings + saving-mesh axis sizes for ``tree``
+    (device arrays; call BEFORE any host gather strips the placement).
+    Host/numpy leaves record ``None``; the mesh dict is empty when nothing
+    is sharded."""
+    specs, mesh_axes = [], {}
+    for leaf in jax.tree.leaves(tree):
+        sharding = getattr(leaf, "sharding", None)
+        spec = getattr(sharding, "spec", None)
+        specs.append(str(spec) if spec is not None else None)
+        mesh = getattr(sharding, "mesh", None)
+        if mesh is not None and not mesh_axes:
+            mesh_axes = {str(k): int(v) for k, v in dict(mesh.shape).items()}
+    return specs, mesh_axes
+
+
 def save_pytree(tree: Any, directory: "str | Path", step: int,
-                extra_meta: Optional[dict] = None) -> Path:
-    """Write atomically: tmp dir -> files -> rename -> commit marker."""
+                extra_meta: Optional[dict] = None,
+                leaf_specs: Optional[list] = None,
+                mesh_axes: Optional[dict] = None) -> Path:
+    """Write atomically: tmp dir -> files -> rename -> commit marker.
+
+    ``leaf_specs`` / ``mesh_axes`` (from :func:`leaf_spec_meta`) record how
+    each leaf was sharded when saved — metadata only; the files always
+    hold the logical (global) array, so restore is mesh-independent."""
     directory = Path(directory)
     final = directory / f"step_{step:09d}"
     tmp = directory / f".tmp_step_{step:09d}"
@@ -47,20 +81,30 @@ def save_pytree(tree: Any, directory: "str | Path", step: int,
     tmp.mkdir(parents=True)
 
     leaves, treedef = jax.tree.flatten(tree)
+    if leaf_specs is None:
+        leaf_specs, inferred = leaf_spec_meta(tree)
+        mesh_axes = mesh_axes or inferred
+    if len(leaf_specs) != len(leaves):
+        # a silent zip truncation here would commit an incomplete
+        # checkpoint; fail at save time instead
+        raise ValueError(f"leaf_specs has {len(leaf_specs)} entries for "
+                         f"{len(leaves)} leaves")
     manifest = {
         "step": step,
         "treedef": str(treedef),
         "paths": _tree_paths(tree),
         "leaves": [],
         "meta": extra_meta or {},
-        "format": "single-host-v1",
+        "mesh_axes": mesh_axes or {},
+        "format": "sharded-v2",
     }
-    for i, leaf in enumerate(leaves):
+    for i, (leaf, spec) in enumerate(zip(leaves, leaf_specs)):
         arr = np.asarray(jax.device_get(leaf))
         fname = f"leaf_{i:05d}.npy"
         np.save(tmp / fname, arr)
         manifest["leaves"].append({
             "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "spec": spec,
         })
     (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
 

@@ -153,6 +153,40 @@ def applicable_cells(model: ModelConfig) -> list[str]:
 
 
 @dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    """One parameter group inside :attr:`OptimizerConfig.groups`.
+
+    ``select`` picks the leaves this group owns (first matching group in
+    declaration order wins):
+
+      * ``"factored"`` — >= 2-D leaves whose smaller trailing dim is at
+        least ``OptimizerConfig.min_dim_factor`` (the same policy the
+        factored second moments use);
+      * ``"matrices"`` — every >= 2-D leaf;
+      * ``"vectors"``  — < 2-D leaves (biases, norm scales, scalars);
+      * ``"rest"``     — catch-all (every groups tuple must end in one).
+
+    ``name`` is the optimizer family for the group (adapprox | adamw |
+    adafactor | came); ``None`` inherits the parent config's ``name``.
+    ``lr_scale`` is a per-group LR multiplier applied inside the group's
+    ``scale_by_schedule`` stage (shared warmup/decay shape, scaled peak).
+    """
+
+    select: str = "rest"
+    name: Optional[str] = None
+    lr_scale: float = 1.0
+
+
+def default_mixed_groups() -> tuple:
+    """The production mixed partition: bias-corrected dense Adam on 1-D /
+    small leaves, the factored family (Adapprox by default) on matrices.
+    Adafactor-style blanket factorization costs accuracy on the small
+    leaves it barely saves memory on; this chain keeps them dense."""
+    return (("factored", GroupSpec(select="factored")),
+            ("dense", GroupSpec(select="rest", name="adamw")))
+
+
+@dataclasses.dataclass(frozen=True)
 class OptimizerConfig:
     """Declarative optimizer spec — the single input to
     ``repro.core.build_optimizer``, which lowers it to a chain of
@@ -163,6 +197,13 @@ class OptimizerConfig:
     decay block controls decoupled weight decay and its parameter mask;
     the remaining groups are family-specific knobs (ignored by families
     that don't use them).
+
+    ``groups`` (optional) partitions the parameters into labeled groups,
+    each lowered to its own chain and routed through
+    ``repro.core.partition``: a tuple of ``(label, GroupSpec)`` pairs,
+    matched in order (first hit wins; the last group must be a ``"rest"``
+    catch-all).  ``default_mixed_groups()`` is the production default —
+    dense Adam on 1-D/small leaves, the parent family on matrices.
     """
 
     name: str = "adapprox"
@@ -209,6 +250,8 @@ class OptimizerConfig:
     relative_step: bool = False
     # came specifics
     b3: float = 0.9999              # instability-statistic decay
+    # parameter groups: (label, GroupSpec) pairs -> repro.core.partition
+    groups: tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)

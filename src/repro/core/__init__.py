@@ -30,7 +30,17 @@ Layers, bottom to top:
 
   Construction surface
       build_optimizer(OptimizerConfig)  — THE entry point for launchers /
-          benchmarks / examples: lowers the declarative config to a chain.
+          benchmarks / examples: lowers the declarative config to a chain,
+          or — with ``OptimizerConfig.groups`` — to a ``partition`` of
+          per-group chains.  Each ``(label, GroupSpec)`` pair owns the
+          leaves its ``select`` rule matches (first hit wins) and builds
+          its own full chain from its optimizer family; ``lr_scale`` is a
+          per-group LR multiplier via the labeled
+          ``scale_by_schedule(sched, lr_scale=)`` stage.
+          ``repro.config.default_mixed_groups()`` is the production
+          default the launcher uses for adapprox (``--mixed-groups``):
+          dense bias-corrected Adam on 1-D/small leaves, Adapprox on
+          matrices — per-layer sensitivity without blanket factorization.
       make_optimizer(name, **kw)        — kwargs-level registry for tests
           and ad-hoc experimentation; same chains underneath.
 
@@ -74,6 +84,12 @@ baseline):
 Sharding: every stateful transformation carries a ``state_sharding_spec``
 hook mapping param PartitionSpecs to state PartitionSpecs;
 ``distributed/sharding.py`` consumes it without knowing any state class.
+The production path runs through it end to end: ``launch/train.py --mesh``
+-> ``distributed.sharding.train_shardings`` (param + opt-state + batch
+shardings, ``partition`` chains included) -> the mesh-jitted step inside
+``train_loop.train`` -> sharded checkpoint save / resharding restore
+(``checkpoint/serialization.py`` keeps logical arrays + per-leaf spec
+metadata, so a run saved on one mesh resumes on any other).
 """
 import dataclasses as _dc
 

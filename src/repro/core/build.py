@@ -12,19 +12,35 @@ documented transformation chains in this package:
 ``cfg.decay_mask = "no_1d"`` swaps the decay stage's mask so 1-D leaves
 (biases, norm scales) are exempt from weight decay — the standard
 production configuration — without forking any optimizer.
+
+``cfg.groups`` lowers to :func:`repro.core.partition`: each ``(label,
+GroupSpec)`` pair becomes its own full chain (the group's family
+preconditioner, the shared decay mask, the shared schedule scaled by
+``lr_scale``, the descent sign), and a shape-based labeler routes every
+parameter leaf to the first group whose ``select`` rule matches.  The
+production default, :func:`repro.config.default_mixed_groups`, runs the
+parent family (Adapprox) on factorable matrices and dense bias-corrected
+Adam on 1-D/small leaves — per-layer sensitivity without blanket
+factorization.  ``PartitionState`` keeps the labels as static metadata, so
+the partitioned optimizer jits, checkpoints and shards like any chain.
 """
 from __future__ import annotations
 
 from typing import Callable, Optional
 
-from repro.config import OptimizerConfig
-from repro.core.adafactor import AdafactorConfig, adafactor
-from repro.core.adamw import AdamWConfig, adamw
-from repro.core.adapprox import AdapproxConfig, adapprox
-from repro.core.came import CAMEConfig, came
+import jax
+
+from repro.config import GroupSpec, OptimizerConfig
+from repro.core.adafactor import AdafactorConfig, scale_by_factored_rms
+from repro.core.adamw import AdamWConfig, scale_by_adam
+from repro.core.adapprox import AdapproxConfig, scale_by_adapprox
+from repro.core.came import CAMEConfig, scale_by_came
+from repro.core.factored import should_factor
 from repro.core.rank import RankConfig
-from repro.core.transform import resolve_decay_mask
-from repro.core.types import GradientTransformation, Schedule, \
+from repro.core.transform import (add_decayed_weights, partition,
+                                  resolve_decay_mask, scale,
+                                  scale_by_relative_step, scale_by_schedule)
+from repro.core.types import GradientTransformation, Schedule, chain, \
     constant_schedule
 
 
@@ -42,11 +58,11 @@ def _decay_mask_of(cfg: OptimizerConfig) -> Optional[Callable]:
     return resolve_decay_mask(cfg.decay_mask)
 
 
-def build_optimizer(cfg: OptimizerConfig) -> GradientTransformation:
-    """Build the configured optimizer chain.  See module docstring."""
-    sched = _schedule_of(cfg)
-    mask = _decay_mask_of(cfg)
-    if cfg.name == "adapprox":
+def _preconditioner(cfg: OptimizerConfig, name: str,
+                    sched: Callable) -> GradientTransformation:
+    """The pure ``scale_by_*`` stage for one optimizer family, configured
+    from the shared declarative config."""
+    if name == "adapprox":
         acfg = AdapproxConfig(
             lr=sched, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps, clip_d=cfg.clip_d,
             weight_decay=cfg.weight_decay,
@@ -60,24 +76,100 @@ def build_optimizer(cfg: OptimizerConfig) -> GradientTransformation:
             refresh_every=cfg.refresh_every, warm_start=cfg.warm_start,
             n_iter_warm=cfg.n_iter_warm, warm_drift_xi=cfg.warm_drift_xi,
             bucketed=cfg.bucketed)
-        return adapprox(acfg, decay_mask=mask)
-    if cfg.name == "adamw":
-        return adamw(AdamWConfig(lr=sched, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps,
-                                 weight_decay=cfg.weight_decay),
-                     decay_mask=mask)
-    if cfg.name == "adafactor":
-        return adafactor(
-            AdafactorConfig(lr=sched, b1=cfg.b1, b2=cfg.b2,
-                            b2_schedule=cfg.b2_schedule, clip_d=cfg.clip_d,
-                            weight_decay=cfg.weight_decay,
-                            relative_step=cfg.relative_step,
-                            min_dim_factor=cfg.min_dim_factor),
-            decay_mask=mask)
-    if cfg.name == "came":
-        return came(CAMEConfig(lr=sched, b1=cfg.b1, b2=cfg.b2, b3=cfg.b3,
-                               clip_d=cfg.clip_d,
-                               weight_decay=cfg.weight_decay,
-                               min_dim_factor=cfg.min_dim_factor),
-                    decay_mask=mask)
-    raise ValueError(f"unknown optimizer {cfg.name!r}; "
+        return scale_by_adapprox(acfg)
+    if name == "adamw":
+        return scale_by_adam(cfg.b1, cfg.b2, cfg.eps)
+    if name == "adafactor":
+        return scale_by_factored_rms(AdafactorConfig(
+            lr=sched, b1=cfg.b1, b2=cfg.b2, b2_schedule=cfg.b2_schedule,
+            clip_d=cfg.clip_d, weight_decay=cfg.weight_decay,
+            relative_step=cfg.relative_step,
+            min_dim_factor=cfg.min_dim_factor))
+    if name == "came":
+        return scale_by_came(CAMEConfig(
+            lr=sched, b1=cfg.b1, b2=cfg.b2, b3=cfg.b3, clip_d=cfg.clip_d,
+            weight_decay=cfg.weight_decay,
+            min_dim_factor=cfg.min_dim_factor))
+    raise ValueError(f"unknown optimizer {name!r}; "
                      f"available: adapprox, adamw, adafactor, came")
+
+
+def _chain_for(cfg: OptimizerConfig, name: str, sched: Callable,
+               mask, lr_scale: float = 1.0) -> GradientTransformation:
+    """One documented chain: preconditioner -> +wd*W -> *lr_t -> *(-1).
+    Identical to the named ``adapprox()`` / ``adamw()`` / ... factories
+    (``lr_scale=1.0`` compiles to the same HLO)."""
+    if name == "adafactor" and cfg.relative_step:
+        step_stage = scale_by_relative_step(lr_scale=lr_scale)
+    else:
+        step_stage = scale_by_schedule(sched, lr_scale=lr_scale)
+    return chain(
+        _preconditioner(cfg, name, sched),
+        add_decayed_weights(cfg.weight_decay, mask),
+        step_stage,
+        scale(-1.0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter groups -> partition
+# ---------------------------------------------------------------------------
+
+def _select_matches(select: str, shape: tuple, min_dim_factor: int) -> bool:
+    if select == "factored":
+        return should_factor(tuple(shape), min_dim_factor)
+    if select == "matrices":
+        return len(shape) >= 2
+    if select == "vectors":
+        return len(shape) < 2
+    if select == "rest":
+        return True
+    raise ValueError(f"unknown GroupSpec.select {select!r} (expected "
+                     f"'factored', 'matrices', 'vectors' or 'rest')")
+
+
+def group_labeler(groups: tuple, min_dim_factor: int) -> Callable:
+    """params -> label pytree, first matching group (declaration order)
+    wins.  Only inspects leaf shapes, so it is safe under tracing."""
+
+    def label_of(p):
+        for label, g in groups:
+            if _select_matches(g.select, p.shape, min_dim_factor):
+                return label
+        raise ValueError(
+            f"no group matches leaf of shape {tuple(p.shape)}; add a "
+            f"catch-all (label, GroupSpec(select='rest')) group")
+
+    return lambda params: jax.tree.map(label_of, params)
+
+
+def _build_partitioned(cfg: OptimizerConfig, sched: Callable,
+                       mask) -> GradientTransformation:
+    groups = tuple(cfg.groups)
+    if not groups:
+        raise ValueError("cfg.groups is empty")
+    seen = set()
+    for label, g in groups:
+        if not isinstance(g, GroupSpec):
+            raise TypeError(f"group {label!r}: expected GroupSpec, got "
+                            f"{type(g).__name__}")
+        if label in seen:
+            raise ValueError(f"duplicate group label {label!r}")
+        seen.add(label)
+    if groups[-1][1].select != "rest":
+        raise ValueError("the last group must be a catch-all "
+                         "GroupSpec(select='rest') so every leaf is owned")
+    transforms = {
+        label: _chain_for(cfg, g.name or cfg.name, sched, mask, g.lr_scale)
+        for label, g in groups}
+    return partition(group_labeler(groups, cfg.min_dim_factor), transforms)
+
+
+def build_optimizer(cfg: OptimizerConfig) -> GradientTransformation:
+    """Build the configured optimizer chain (or, with ``cfg.groups``, the
+    partitioned per-group chains).  See module docstring."""
+    sched = _schedule_of(cfg)
+    mask = _decay_mask_of(cfg)
+    if cfg.groups:
+        return _build_partitioned(cfg, sched, mask)
+    return _chain_for(cfg, cfg.name, sched, mask)

@@ -144,32 +144,48 @@ def clip_update_rms(d: float) -> GradientTransformation:
 # Schedule stages
 # ---------------------------------------------------------------------------
 
-def scale_by_schedule(schedule: "float | Callable") -> GradientTransformation:
+def scale_by_schedule(schedule: "float | Callable",
+                      lr_scale: float = 1.0) -> GradientTransformation:
     """Multiply updates by ``schedule(t)`` with ``t`` counting from 1 (the
     paper's convention; every seed optimizer evaluated its LR at
-    ``state.step + 1``)."""
+    ``state.step + 1``).
+
+    ``lr_scale`` is a static per-group multiplier on top of the shared
+    schedule — the "labeled schedule" used inside :func:`partition`
+    chains, where every group follows the same warmup/decay shape but at
+    a scaled peak (``OptimizerConfig.groups[label].lr_scale``).  The
+    default 1.0 compiles to the identical HLO as the unscaled stage, so
+    existing chains stay bit-exact.
+    """
     sched = resolve_schedule(schedule)
 
     def update(updates, state, params):
         del params
         count = state.count + 1
         lr = sched(count)
+        if lr_scale != 1.0:
+            lr = lr * lr_scale
         return (jax.tree.map(lambda u: u * lr, updates),
                 CountState(count=count))
 
     return GradientTransformation(_count_init, update)
 
 
-def scale_by_relative_step(eps2: float = 1e-3) -> GradientTransformation:
+def scale_by_relative_step(eps2: float = 1e-3,
+                           lr_scale: float = 1.0) -> GradientTransformation:
     """Adafactor's relative step size: per-leaf
     ``alpha_t = max(eps2, RMS(W)) * min(1e-2, 1/sqrt(t))`` — replaces
     :func:`scale_by_schedule` in the adafactor chain when
-    ``relative_step=True``."""
+    ``relative_step=True``.  ``lr_scale`` plays the same per-group
+    multiplier role as in :func:`scale_by_schedule` (1.0 is bit-exact
+    with the unscaled stage)."""
 
     def update(updates, state, params):
         count = state.count + 1
         t = count.astype(jnp.float32)
         rho = jnp.minimum(1e-2, 1.0 / jnp.sqrt(t))
+        if lr_scale != 1.0:
+            rho = rho * lr_scale
 
         def one(u, w):
             w32 = w.astype(jnp.float32)

@@ -14,8 +14,27 @@ Rule tables below map each *logical* axis name used by the model zoo to a
 mesh axis per cell kind.  Optimizer-state shardings are derived from the
 param specs through each transformation's ``state_sharding_spec`` protocol
 hook (factored Q inherits the row spec, U the column spec — the factors of
-a sharded matrix shard along the same axes); this module knows nothing
-about any optimizer's state classes.
+a sharded matrix shard along the same axes; a ``partition`` of transforms
+recurses per group through ``PartitionState``'s static labels); this module
+knows nothing about any optimizer's state classes.
+
+This module is the middle of the sharded training path::
+
+    launch/train.py --mesh D,M [--fsdp] [--mixed-groups]
+        -> launch.mesh (build the device mesh)
+        -> param_pspecs / param_shardings          (this module)
+        -> opt_state_shardings / train_shardings   (this module, via the
+           state_sharding_spec protocol hook)
+        -> train_loop.train(jit(step, in_shardings=..., out_shardings=...,
+                            donate_argnums=...), batch_shardings)
+        -> checkpoint/serialization.py (saves logical arrays + per-leaf
+           spec metadata; restore re-places under ANY mesh's shardings —
+           elastic re-scaling and single-host debugging use the same path)
+
+Every ``*_pspecs`` function works from mesh *axis sizes* alone (pass a
+``Mesh`` or a plain ``{axis: size}`` mapping), so memory accounting and
+planning tools can reason about shardings without real (or virtual)
+devices; the ``*_shardings`` variants bind the specs to a live ``Mesh``.
 """
 from __future__ import annotations
 
@@ -31,18 +50,26 @@ from repro.config import ModelConfig
 from repro.core import types as T
 
 
-def dp_axes(mesh: Mesh) -> tuple:
-    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+def mesh_axis_sizes(mesh) -> dict:
+    """``{axis: size}`` for a ``Mesh`` — or pass a mapping straight through
+    (the spec-only entry points accept either)."""
+    if isinstance(mesh, dict):
+        return mesh
+    return dict(mesh.shape)
+
+
+def dp_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh_axis_sizes(mesh))
 
 
 # --------------------------------------------------------------------------
 # Logical -> mesh rules
 # --------------------------------------------------------------------------
 
-def rules_for(cfg: ModelConfig, kind: str, mesh: Mesh,
+def rules_for(cfg: ModelConfig, kind: str, mesh,
               fsdp: bool = True) -> dict:
     """kind: train | prefill | decode."""
-    has_data = "data" in mesh.shape
+    has_data = "data" in mesh_axis_sizes(mesh)
     fsdp_axis = "data" if (fsdp and has_data and kind == "train") else None
     # MoE expert stacks always keep FSDP storage (1T-param models don't fit
     # otherwise); dense weights drop it at decode (latency path).
@@ -72,17 +99,23 @@ def spec_from_axes(axes: tuple, rules: dict) -> P:
     return P(*parts)
 
 
-def sanitize_spec(spec: P, shape: tuple, mesh: Mesh) -> P:
+def sanitize_spec(spec: P, shape: tuple, mesh) -> P:
     """Adjust mesh axes whose size does not divide the dim (jit argument
     shardings require exact divisibility).  Single axes fall back to
     replicated; tuple axes reduce to the largest-product contiguous
     subtuple that divides (e.g. batch 256 over (pod, data, model) = 512
-    devices -> (data, model) = 256, replicated over the pod axis)."""
+    devices -> (data, model) = 256, replicated over the pod axis).  Axes
+    the mesh does not have at all (e.g. ``model`` on a data-only FSDP
+    mesh) are dropped the same way — the rule tables can stay
+    mesh-agnostic."""
+    sizes = mesh_axis_sizes(mesh)
 
     def axsize(axes):
         n = 1
         for a in axes:
-            n *= mesh.shape[a]
+            if a not in sizes:
+                return 0               # unknown axis: never divides
+            n *= sizes[a]
         return n
 
     parts = []
@@ -91,7 +124,8 @@ def sanitize_spec(spec: P, shape: tuple, mesh: Mesh) -> P:
             parts.append(None)
             continue
         axes = ax if isinstance(ax, tuple) else (ax,)
-        if dim % axsize(axes) == 0:
+        n_all = axsize(axes)
+        if n_all and dim % n_all == 0:
             parts.append(ax)
             continue
         best, best_n = None, 1
@@ -99,21 +133,25 @@ def sanitize_spec(spec: P, shape: tuple, mesh: Mesh) -> P:
             for j in range(i + 1, len(axes) + 1):
                 sub = axes[i:j]
                 n = axsize(sub)
-                if dim % n == 0 and n > best_n:
+                if n and dim % n == 0 and n > best_n:
                     best, best_n = sub, n
         parts.append(best if best else None)
     return P(*parts)
 
 
-def param_shardings(model, mesh: Mesh, kind: str, fsdp: bool = True):
-    """Tree of NamedSharding mirroring params (divisibility-sanitized)."""
+def param_pspecs(model, mesh, kind: str, fsdp: bool = True):
+    """Tree of PartitionSpec mirroring params (divisibility-sanitized).
+
+    ``mesh`` may be a ``Mesh`` or a ``{axis: size}`` mapping — specs only
+    depend on axis names and sizes, so planning/accounting tools can call
+    this without any devices."""
     cfg = model.cfg
     if getattr(cfg, "parallel_strategy", "tp") == "fsdp":
-        return _fsdp_param_shardings(model, mesh)
+        return _fsdp_param_pspecs(model, mesh)
     rules = rules_for(cfg, kind, mesh, fsdp)
     # expert-stack d_model dim keeps FSDP storage even outside train
     moe_rules = dict(rules)
-    if "data" in mesh.shape:
+    if "data" in mesh_axis_sizes(mesh):
         if kind == "decode":
             # weights-stationary EP-TP layout (moe_apply_ep_tp): experts
             # over model, FFN dim over data — zero weight movement/step
@@ -128,8 +166,7 @@ def param_shardings(model, mesh: Mesh, kind: str, fsdp: bool = True):
     def one(axes, leaf):
         table = moe_rules if "experts" in axes or "expert_mlp" in axes \
             else rules
-        spec = sanitize_spec(spec_from_axes(axes, table), leaf.shape, mesh)
-        return NamedSharding(mesh, spec)
+        return sanitize_spec(spec_from_axes(axes, table), leaf.shape, mesh)
 
     flat_axes = jax.tree.leaves(spec_tree,
                                 is_leaf=lambda x: isinstance(x, tuple))
@@ -138,12 +175,12 @@ def param_shardings(model, mesh: Mesh, kind: str, fsdp: bool = True):
         treedef, [one(a, l) for a, l in zip(flat_axes, flat_leaves)])
 
 
-def _fsdp_param_shardings(model, mesh: Mesh):
+def _fsdp_param_pspecs(model, mesh):
     """Pure ZeRO-3: every >=2D leaf shards its -2 dim over ALL mesh axes
     (flattened); 1D leaves shard over the same when divisible.  No tensor
     parallelism — activations stay fully local, the per-layer weight
     all-gather is the only collective in the forward."""
-    all_axes = tuple(mesh.shape.keys())
+    all_axes = tuple(mesh_axis_sizes(mesh).keys())
     params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
 
     def one(leaf):
@@ -156,15 +193,17 @@ def _fsdp_param_shardings(model, mesh: Mesh):
             spec = P(all_axes)
         else:
             spec = P()
-        return NamedSharding(mesh, sanitize_spec(spec, leaf.shape, mesh))
+        return sanitize_spec(spec, leaf.shape, mesh)
 
     return jax.tree.map(one, params_struct)
 
 
-def param_pspecs(model, mesh: Mesh, kind: str, fsdp: bool = True):
-    shardings = param_shardings(model, mesh, kind, fsdp)
-    return jax.tree.map(lambda s: s.spec, shardings,
-                        is_leaf=lambda s: isinstance(s, NamedSharding))
+def param_shardings(model, mesh: Mesh, kind: str, fsdp: bool = True):
+    """Tree of NamedSharding mirroring params: :func:`param_pspecs` bound
+    to a live mesh."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(model, mesh, kind, fsdp),
+                        is_leaf=lambda x: isinstance(x, P))
 
 
 # --------------------------------------------------------------------------
@@ -181,6 +220,35 @@ def opt_state_shardings(opt: T.GradientTransformation, state_struct,
     spec_tree = T.state_sharding_spec(opt, state_struct, pspecs_tree)
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def train_shardings(model, opt: T.GradientTransformation, mesh: Mesh,
+                    batch_struct: Optional[dict] = None, *,
+                    kind: str = "train", fsdp: bool = True):
+    """One-call derivation of the sharded training run's placement:
+    returns ``(state_shardings, batch_shardings)`` where
+    ``state_shardings`` is a ``TrainState``-shaped tree of NamedSharding
+    (params by the rule tables, optimizer state through the
+    ``state_sharding_spec`` protocol — including ``partition`` chains —
+    and a replicated step counter) and ``batch_shardings`` places
+    ``DataIterator`` batches over the data-parallel axes (``None`` when no
+    ``batch_struct`` is given).  This is what ``launch/train.py`` feeds to
+    ``train_loop.train``'s ``jax.jit(step, in_shardings=...,
+    out_shardings=..., donate_argnums=...)``."""
+    from repro.train.steps import TrainState  # lazy: avoid import cycle
+
+    pspecs = param_pspecs(model, mesh, kind, fsdp)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    state_struct = jax.eval_shape(
+        lambda p: TrainState.create(p, opt), params_struct)
+    oshard = opt_state_shardings(opt, state_struct.opt_state, pspecs, mesh)
+    state_shardings = TrainState(params=pshard, opt_state=oshard,
+                                 step=NamedSharding(mesh, P()))
+    bshard = (batch_shardings(model.cfg, kind, mesh, batch_struct)
+              if batch_struct is not None else None)
+    return state_shardings, bshard
 
 
 # --------------------------------------------------------------------------

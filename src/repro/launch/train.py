@@ -7,34 +7,64 @@
 built (requires real accelerators + the production mesh).  All the
 fault-tolerance machinery (atomic async checkpoints, preemption flush,
 restart-resume, straggler monitor) is active either way.
+
+Sharded runs: ``--mesh 4,2`` builds a (data=4, model=2) device mesh (three
+numbers add a leading DCN ``pod`` axis, one number is pure data
+parallelism) and derives param / optimizer-state / batch shardings through
+``distributed.sharding.train_shardings`` — optimizer state is sharded
+alongside FSDP params (``--fsdp``, default on), which is where Adapprox's
+factored-state memory savings actually materialise per device.  On a CPU
+host, set ``REPRO_TRAIN_DEVICES=8`` (or export the matching ``XLA_FLAGS``)
+to get virtual devices for the mesh.
+
+``--mixed-groups`` (default for adapprox) makes the optimizer a
+``partition`` chain: dense bias-corrected Adam on 1-D/small leaves,
+Adapprox on matrices — per-layer sensitivity without blanket
+factorization (Kalra et al., 2025 / Shazeer & Stern, 2018).
 """
 from __future__ import annotations
+
+import os
+
+if os.environ.get("REPRO_TRAIN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_TRAIN_DEVICES"]
+                               + " " + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede the jax import: jax locks the device count on first init.
 
 import argparse
 import logging
 
 import jax
+import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointConfig
-from repro.config import OptimizerConfig
+from repro.config import OptimizerConfig, default_mixed_groups
 from repro.configs import get_config, get_smoke_config
 from repro.core import build_optimizer
 from repro.data import DataConfig
+from repro.distributed import sharding as SH
 from repro.models import build_model
 from repro.train import LoopConfig, train
+
+log = logging.getLogger(__name__)
 
 
 def optimizer_config(name: str, steps: int, lr: float,
                      refresh_every: int = 1, warm_start: bool = False,
-                     bucketed: bool = False) -> OptimizerConfig:
+                     bucketed: bool = False,
+                     mixed_groups: bool = False) -> OptimizerConfig:
     """The launcher's OptimizerConfig: cosine schedule derived from the run
     length, paper-faithful Adapprox adaptive-rank settings.  The amortized-
     refresh knobs (refresh_every / warm_start / bucketed, adapprox only)
     trade a bounded amount of factorization freshness for step time — see
-    repro.core's module docstring for the measured curve."""
+    repro.core's module docstring for the measured curve.  With
+    ``mixed_groups`` the adapprox config becomes the production partition
+    chain (dense Adam on 1-D/small leaves, Adapprox on matrices)."""
     common = dict(name=name, lr=lr, schedule="cosine",
                   warmup_steps=max(steps // 20, 5), total_steps=steps,
-                  min_lr=lr / 6, weight_decay=0.1)
+                  min_lr=lr / 6, weight_decay=0.1,
+                  groups=default_mixed_groups() if mixed_groups else ())
     if name == "adapprox":
         return OptimizerConfig(**common, rank_mode="paper", k=1, k_max=128,
                                xi_thresh=0.01, delta_s=10,
@@ -42,8 +72,32 @@ def optimizer_config(name: str, steps: int, lr: float,
                                refresh_every=refresh_every,
                                warm_start=warm_start, bucketed=bucketed)
     if name in ("adamw", "adafactor", "came"):
+        # the factored group inherits the family, so --mixed-groups is a
+        # matrices/rest split of the SAME optimizer here (dense Adam on
+        # the rest group either way)
         return OptimizerConfig(**common)
     raise ValueError(name)
+
+
+def parse_mesh(spec: str):
+    """``"4,2"`` -> (data=4, model=2) mesh; one number -> pure DP
+    ``(data,)``; three -> ``(pod, data, model)``."""
+    shape = tuple(int(s) for s in spec.split(",") if s)
+    axes = {1: ("data",), 2: ("data", "model"),
+            3: ("pod", "data", "model")}.get(len(shape))
+    if axes is None:
+        raise ValueError(f"--mesh takes 1-3 comma-separated sizes, "
+                         f"got {spec!r}")
+    n_dev = len(jax.devices())
+    need = 1
+    for s in shape:
+        need *= s
+    if need > n_dev:
+        raise ValueError(
+            f"--mesh {spec} needs {need} devices but only {n_dev} are "
+            f"visible; set REPRO_TRAIN_DEVICES={need} for virtual CPU "
+            f"devices")
+    return jax.make_mesh(shape, axes)
 
 
 def main(argv=None):
@@ -62,6 +116,22 @@ def main(argv=None):
                     help="adapprox: warm-start S-RSI from the stored U")
     ap.add_argument("--bucketed", action="store_true",
                     help="adapprox: one vmapped trace per same-shape bucket")
+    ap.add_argument("--mesh", default=None,
+                    help="device mesh sizes, e.g. '4,2' = (data=4, model=2);"
+                         " omit for the single-device path")
+    fsdp = ap.add_mutually_exclusive_group()
+    fsdp.add_argument("--fsdp", dest="fsdp", action="store_true",
+                      default=True,
+                      help="shard params + optimizer state over the data "
+                           "axis (default)")
+    fsdp.add_argument("--no-fsdp", dest="fsdp", action="store_false")
+    mg = ap.add_mutually_exclusive_group()
+    mg.add_argument("--mixed-groups", dest="mixed_groups",
+                    action="store_true", default=None,
+                    help="partition chain: dense Adam on 1-D/small leaves, "
+                         "adapprox on matrices (default for adapprox)")
+    mg.add_argument("--no-mixed-groups", dest="mixed_groups",
+                    action="store_false")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--log-every", type=int, default=20)
@@ -69,15 +139,29 @@ def main(argv=None):
 
     logging.basicConfig(level=logging.INFO,
                         format="%(asctime)s %(levelname)s %(message)s")
+    mixed = (args.optimizer == "adapprox" if args.mixed_groups is None
+             else args.mixed_groups)
     cfg = (get_smoke_config(args.arch, max_seq_len=args.seq)
            if args.smoke else get_config(args.arch))
-    model = build_model(cfg)
+    mesh = parse_mesh(args.mesh) if args.mesh else None
+    model = build_model(cfg, mesh)
     opt = build_optimizer(optimizer_config(
         args.optimizer, args.steps, args.lr,
         refresh_every=args.refresh_every, warm_start=args.warm_start,
-        bucketed=args.bucketed))
+        bucketed=args.bucketed, mixed_groups=mixed))
     data_cfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
                           global_batch=args.batch)
+
+    state_shardings = batch_shardings = None
+    if mesh is not None:
+        model.constrain = SH.make_act_constrainer(mesh, "train")
+        batch_struct = {"tokens": jax.ShapeDtypeStruct(
+            (args.batch, args.seq), jnp.int32)}
+        state_shardings, batch_shardings = SH.train_shardings(
+            model, opt, mesh, batch_struct, fsdp=args.fsdp)
+        log.info("mesh %s, fsdp=%s, mixed_groups=%s",
+                 dict(mesh.shape), args.fsdp, mixed)
+
     ckpt = (CheckpointConfig(directory=args.ckpt_dir,
                              save_every=args.ckpt_every)
             if args.ckpt_dir else None)
@@ -85,6 +169,7 @@ def main(argv=None):
         model, opt, data_cfg,
         LoopConfig(total_steps=args.steps, log_every=args.log_every,
                    ckpt=ckpt),
+        state_shardings=state_shardings, batch_shardings=batch_shardings,
         install_signal_handler=ckpt is not None)
     if history:
         print(f"final loss: {history[-1]['loss']:.4f} "

@@ -1,4 +1,4 @@
-"""Fault-tolerant training loop.
+"""Fault-tolerant training loop, single-device or mesh-sharded.
 
 Wires together: deterministic data pipeline, jitted train step, async
 atomic checkpointing (+ preemption flush), straggler monitoring, metric
@@ -6,6 +6,19 @@ logging.  Restart-safe by construction: on startup it restores the latest
 committed checkpoint (if any) and fast-forwards the data stream to the
 restored step — a killed job resumes bit-exact (validated in
 tests/test_train_integration.py).
+
+Sharded path: pass ``state_shardings`` (a ``TrainState``-shaped tree of
+``NamedSharding``, e.g. from ``distributed.sharding.train_shardings``) and
+optionally ``batch_shardings``.  The step function is then jitted with
+``in_shardings`` / ``out_shardings`` (and donated state buffers when no
+preemption handler needs to keep a host-reachable copy), fresh state is
+initialised eagerly and re-placed under the shardings (jit-init with
+``out_shardings`` — state born sharded, never resident on one device — is
+planned for when partitioned RNG is mesh-invariant on our jax version;
+see the inline note), host batches are placed under ``batch_shardings``,
+and checkpoint restore re-places saved logical arrays under the current
+shardings — which is exactly what makes save-on-mesh-A / resume-on-mesh-B
+elastic restarts work (tests/test_sharded_train.py).
 """
 from __future__ import annotations
 
@@ -39,6 +52,7 @@ def train(model, opt: GradientTransformation, data_cfg: DataConfig,
           loop_cfg: LoopConfig, *,
           state: Optional[TrainState] = None,
           state_shardings=None,
+          batch_shardings=None,
           metric_hook: Optional[Callable[[int, dict], None]] = None,
           install_signal_handler: bool = False) -> tuple[TrainState, list]:
     """Returns (final_state, history of metric dicts)."""
@@ -47,15 +61,40 @@ def train(model, opt: GradientTransformation, data_cfg: DataConfig,
     if state is None:
         params = model.init(jax.random.PRNGKey(0))
         state = TrainState.create(params, opt)
+        if state_shardings is not None:
+            # Init eagerly, then re-place under the shardings.  (Jitting
+            # the init with out_shardings would avoid materialising the
+            # full state on one device, but on this jax version partitioned
+            # RNG draws different init values per mesh — breaking the
+            # any-mesh bitwise-continuation contract the resharding tests
+            # pin down.  Flip to jit-init once jax_threefry_partitionable
+            # is the default.)
+            state = jax.device_put(state, state_shardings)
 
-    start_step = 0
+    # A caller-provided mid-run state resumes at its own step counter
+    # (elastic_restore hands back exactly such a state); fresh states
+    # carry step 0.  A committed checkpoint below overrides both.
+    start_step = int(np.asarray(state.step))
     if ckpt is not None and ckpt.latest_step() is not None:
+        # restore reshards: saved logical arrays re-placed under the
+        # CURRENT shardings, whatever mesh the checkpoint was written on
         state, start_step = ckpt.restore(state, state_shardings)
         log.info("restored checkpoint at step %d", start_step)
 
-    step_fn = jax.jit(build_train_step(
-        model, opt, microbatches=loop_cfg.microbatches,
-        grad_clip_norm=loop_cfg.grad_clip_norm))
+    step_fn = build_train_step(model, opt, microbatches=loop_cfg.microbatches,
+                               grad_clip_norm=loop_cfg.grad_clip_norm)
+    if state_shardings is not None:
+        # Donating the input state halves optimizer-state residency, but a
+        # preemption flush must be able to device_get the PRE-step state at
+        # any instant — donation would leave it pointing at freed buffers —
+        # so the flush path trades the alias away.
+        donate = () if install_signal_handler else (0,)
+        step_fn = jax.jit(step_fn,
+                          in_shardings=(state_shardings, batch_shardings),
+                          out_shardings=(state_shardings, None),
+                          donate_argnums=donate)
+    else:
+        step_fn = jax.jit(step_fn)
 
     data = DataIterator(data_cfg, start_step=start_step)
     monitor = StragglerMonitor()
@@ -70,6 +109,8 @@ def train(model, opt: GradientTransformation, data_cfg: DataConfig,
         for step in range(start_step, loop_cfg.total_steps):
             batch = next(data)
             batch.pop("step", None)
+            if batch_shardings is not None:
+                batch = jax.device_put(batch, batch_shardings)
             monitor.start()
             state, metrics = step_fn(state, batch)
             jax.block_until_ready(metrics["loss"])
@@ -93,6 +134,10 @@ def train(model, opt: GradientTransformation, data_cfg: DataConfig,
     finally:
         data.close()
         if ckpt is not None:
+            if install_signal_handler:
+                # before wait(): a failed async save re-raises there, and
+                # the handler must not outlive this loop's state capture
+                ckpt.uninstall_preemption_handler()
             ckpt.wait()
 
     if ckpt is not None:

@@ -1,0 +1,234 @@
+"""OptimizerConfig.groups lowering, per-group LR multipliers, preemption
+handler chaining, and the sharded memory accounting (all single-device)."""
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import GroupSpec, OptimizerConfig, default_mixed_groups
+from repro.core import (CountState, PartitionState, build_optimizer,
+                        scale_by_schedule)
+from repro.core.adamw import AdamWState
+from repro.core.adapprox import AdapproxState, adapprox_state
+from repro.core import factored as F
+
+
+def _params():
+    return {"w": jnp.full((64, 96), 0.5), "b": jnp.full((64,), 0.5),
+            "tiny": jnp.full((8, 8), 0.5)}
+
+
+def _grads(params):
+    return jax.tree.map(lambda p: jnp.full_like(p, 0.1), params)
+
+
+BASE = dict(schedule="constant", lr=1e-3, weight_decay=0.0,
+            min_dim_factor=32, k=4, rank_mode="static", implicit=False)
+
+
+# ---------------------------------------------------------------------------
+# groups lowering
+# ---------------------------------------------------------------------------
+
+def test_mixed_groups_routes_by_shape():
+    """The production default: matrices >= min_dim_factor under Adapprox
+    (factored), 1-D and small leaves under dense bias-corrected Adam."""
+    opt = build_optimizer(OptimizerConfig(
+        name="adapprox", groups=default_mixed_groups(), **BASE))
+    params = _params()
+    state = opt.init(params)
+    # chain state -> (partition,) is not wrapped: partition IS the top level
+    assert isinstance(state, PartitionState)
+    # flatten order of the params dict: b, tiny, w
+    assert state.labels == ("dense", "dense", "factored")
+    ad = adapprox_state(state.inner["factored"])
+    factored = [l for l in ad.leaves if isinstance(l, F.FactoredLeaf)]
+    assert len(factored) == 1           # only w is factored
+    assert any(isinstance(s, AdamWState)
+               for s in state.inner["dense"])
+
+    upd, state2 = jax.jit(opt.update)(_grads(params), state, params)
+    assert jax.tree.structure(upd) == jax.tree.structure(params)
+    for leaf in jax.tree.leaves(upd):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+
+
+def test_mixed_groups_matches_per_family_chains():
+    """Each group's update is bit-identical to running its family's chain
+    alone on the leaves it owns."""
+    params = _params()
+    grads = _grads(params)
+    mixed = build_optimizer(OptimizerConfig(
+        name="adapprox", groups=default_mixed_groups(), **BASE))
+    u_mix, _ = mixed.update(grads, mixed.init(params), params)
+
+    adam = build_optimizer(OptimizerConfig(name="adamw", **BASE))
+    u_adam, _ = adam.update(grads, adam.init(params), params)
+    ada = build_optimizer(OptimizerConfig(name="adapprox", **BASE))
+    u_ada, _ = ada.update(grads, ada.init(params), params)
+
+    np.testing.assert_array_equal(np.asarray(u_mix["b"]),
+                                  np.asarray(u_adam["b"]))
+    np.testing.assert_array_equal(np.asarray(u_mix["tiny"]),
+                                  np.asarray(u_adam["tiny"]))
+    np.testing.assert_array_equal(np.asarray(u_mix["w"]),
+                                  np.asarray(u_ada["w"]))
+
+
+def test_groups_require_catchall():
+    cfg = OptimizerConfig(name="adamw", groups=(
+        ("m", GroupSpec(select="matrices")),), **BASE)
+    with pytest.raises(ValueError, match="catch-all"):
+        build_optimizer(cfg)
+
+
+def test_groups_duplicate_label_rejected():
+    cfg = OptimizerConfig(name="adamw", groups=(
+        ("g", GroupSpec(select="matrices")),
+        ("g", GroupSpec(select="rest"))), **BASE)
+    with pytest.raises(ValueError, match="duplicate"):
+        build_optimizer(cfg)
+
+
+# ---------------------------------------------------------------------------
+# per-group LR multipliers
+# ---------------------------------------------------------------------------
+
+def test_scale_by_schedule_lr_scale():
+    """The labeled schedule stage: same schedule shape, scaled peak."""
+    base = scale_by_schedule(lambda t: 2.0 * t, lr_scale=1.0)
+    hot = scale_by_schedule(lambda t: 2.0 * t, lr_scale=0.25)
+    u = {"x": jnp.ones((3,))}
+    s0 = CountState(count=jnp.zeros((), jnp.int32))
+    ub, _ = base.update(u, s0, None)
+    uh, _ = hot.update(u, s0, None)
+    np.testing.assert_allclose(np.asarray(uh["x"]),
+                               0.25 * np.asarray(ub["x"]), rtol=1e-7)
+
+
+def test_group_lr_scale_scales_only_that_group():
+    """OptimizerConfig.groups[label].lr_scale multiplies that group's
+    update and leaves the others untouched (exactly)."""
+    params = _params()
+    grads = _grads(params)
+    plain = build_optimizer(OptimizerConfig(name="adamw", **BASE))
+    u0, _ = plain.update(grads, plain.init(params), params)
+
+    scaled = build_optimizer(OptimizerConfig(name="adamw", groups=(
+        ("mat", GroupSpec(select="matrices", lr_scale=0.5)),
+        ("rest", GroupSpec(select="rest"))), **BASE))
+    u1, _ = scaled.update(grads, scaled.init(params), params)
+
+    np.testing.assert_allclose(np.asarray(u1["w"]),
+                               0.5 * np.asarray(u0["w"]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(u1["tiny"]),
+                               0.5 * np.asarray(u0["tiny"]), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(u1["b"]), np.asarray(u0["b"]))
+
+
+def test_lr_scale_one_is_bit_exact():
+    params = _params()
+    grads = _grads(params)
+    plain = build_optimizer(OptimizerConfig(name="adamw", **BASE))
+    grouped = build_optimizer(OptimizerConfig(name="adamw", groups=(
+        ("all", GroupSpec(select="rest", lr_scale=1.0)),), **BASE))
+    u0, _ = plain.update(grads, plain.init(params), params)
+    u1, _ = grouped.update(grads, grouped.init(params), params)
+    for a, b in zip(jax.tree.leaves(u0), jax.tree.leaves(u1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# preemption handler chaining
+# ---------------------------------------------------------------------------
+
+def test_preemption_handler_chains_and_restores(tmp_path):
+    """install_preemption_handler must run a previously-installed handler
+    after the flush (elastic-restart teardown composes with it) and put
+    the original handlers back afterwards."""
+    from repro.checkpoint import CheckpointConfig, CheckpointManager
+
+    calls = []
+
+    def prior(signum, frame):
+        calls.append(("prior", signum))
+
+    old = signal.signal(signal.SIGTERM, prior)
+    try:
+        mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path),
+                                                 async_save=False))
+        tree = {"x": jnp.arange(4.0)}
+        mgr.install_preemption_handler(lambda: (tree, 7))
+        signal.raise_signal(signal.SIGTERM)     # delivered synchronously
+
+        assert calls == [("prior", signal.SIGTERM)]     # chained
+        assert mgr.latest_step() == 7                   # flushed first
+        # originals restored after the flush
+        assert signal.getsignal(signal.SIGTERM) is prior
+    finally:
+        signal.signal(signal.SIGTERM, old)
+
+
+def test_preemption_uninstall_restores(tmp_path):
+    from repro.checkpoint import CheckpointConfig, CheckpointManager
+
+    def prior(signum, frame):
+        pass
+
+    old_term = signal.signal(signal.SIGTERM, prior)
+    old_int = signal.getsignal(signal.SIGINT)
+    try:
+        mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path)))
+        mgr.install_preemption_handler(lambda: ({}, 0))
+        assert signal.getsignal(signal.SIGTERM) is not prior
+        mgr.uninstall_preemption_handler()
+        assert signal.getsignal(signal.SIGTERM) is prior
+        assert signal.getsignal(signal.SIGINT) == old_int
+        mgr.uninstall_preemption_handler()      # idempotent
+    finally:
+        signal.signal(signal.SIGTERM, old_term)
+        signal.signal(signal.SIGINT, old_int)
+
+
+# ---------------------------------------------------------------------------
+# sharded memory accounting (spec-only, no devices needed)
+# ---------------------------------------------------------------------------
+
+def test_bench_memory_per_device_shrinks():
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks.bench_memory import sharded_rows
+
+    rows = [r for r in sharded_rows("gpt2-117m") if
+            r["method"] == "mixed_groups"]
+    sizes = [r["opt_state_bytes_per_device"] for r in rows]
+    assert sizes == sorted(sizes, reverse=True) and sizes[0] > sizes[-1]
+    for r in rows:
+        g = r["group_bytes_per_device"]
+        assert set(g) == {"dense", "factored"}
+        assert g["dense"] > 0 and g["factored"] > 0
+        # per-group split adds up to the per-device total
+        assert g["dense"] + g["factored"] == r["opt_state_bytes_per_device"]
+    # the per-group figures are per-device too: they shrink with the mesh
+    dense = [r["group_bytes_per_device"]["dense"] for r in rows]
+    assert dense == sorted(dense, reverse=True) and dense[0] > dense[-1]
+
+
+def test_checkpoint_manifest_records_specs(tmp_path):
+    """Sharded-v2 manifests carry per-leaf spec metadata (replicated here:
+    single device -> spec is recorded for jax arrays, None for host)."""
+    import json
+    from repro.checkpoint import serialization as SER
+
+    tree = {"a": jnp.ones((4, 4)), "b": np.ones((2,))}
+    path = SER.save_pytree(tree, tmp_path, step=3)
+    manifest = json.loads((path / "manifest.json").read_text())
+    assert manifest["format"] == "sharded-v2"
+    assert len(manifest["leaves"]) == 2
+    assert all("spec" in l for l in manifest["leaves"])
+    restored = SER.restore_pytree(path, tree)
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))

@@ -1,0 +1,207 @@
+"""Sharded training path on 8 virtual CPU devices (subprocess — needs its
+own XLA device count): mesh-jitted train step with the mixed
+dense/factored partition chain, live opt-state NamedShardings, and the
+checkpoint resharding round trip.
+
+Contracts pinned down (see the scripts for the assertions):
+
+  * resharding is LOSSLESS: a checkpoint saved on a (4, 2) mesh restores
+    bitwise-identically onto (2, 4), (8,) and a single device —
+    ``PartitionState`` static labels and mid-``refresh_every`` factored
+    state included;
+  * same-mesh restart is bitwise-deterministic: save at step 3 of 5
+    (mid-refresh-interval), restore on the same mesh, continue — losses
+    and final params equal the uninterrupted run exactly;
+  * checkpoint restore is equivalent to live resharding: a single-device
+    continuation from the checkpoint matches a single-device continuation
+    from the directly re-placed live state bitwise (serialization adds no
+    error beyond placement);
+  * continuation across DIFFERENT meshes matches to float-reassociation
+    tolerance (GSPMD partitions matmul/grad reductions differently per
+    mesh, so cross-mesh equality is ~1e-3 relative, not bitwise — the
+    bitwise claims above are exactly the ones partitioning cannot touch).
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+COMMON = r"""
+import os, shutil, tempfile
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np, jax.numpy as jnp
+from repro.configs import get_smoke_config
+from repro.config import OptimizerConfig, default_mixed_groups
+from repro.core import build_optimizer
+from repro.models import build_model
+from repro.data import DataConfig
+from repro.train import LoopConfig, train
+from repro.distributed import sharding as SH
+from repro.checkpoint import CheckpointConfig, CheckpointManager
+
+VOCAB, SEQ, BATCH = 128, 32, 8
+
+def make_opt():
+    # refresh_every=2 so the step-3 checkpoint lands MID-interval: step 4
+    # folds under the frozen basis, step 5 refreshes — the continuation
+    # only stays exact if the factored state and step counter round-trip.
+    return build_optimizer(OptimizerConfig(
+        name="adapprox", schedule="constant", lr=1e-3, weight_decay=0.1,
+        decay_mask="no_1d", min_dim_factor=32, k=4, rank_mode="static",
+        implicit=False, refresh_every=2, groups=default_mixed_groups()))
+
+def setup(mesh_spec):
+    cfg = get_smoke_config("gpt2-117m", vocab=VOCAB, max_seq_len=SEQ)
+    mesh = None
+    if mesh_spec:
+        axes = {1: ("data",), 2: ("data", "model")}[len(mesh_spec)]
+        mesh = jax.make_mesh(mesh_spec, axes)
+    model = build_model(cfg, mesh)
+    opt = make_opt()
+    ssh = bsh = None
+    if mesh is not None:
+        model.constrain = SH.make_act_constrainer(mesh, "train")
+        bstruct = {"tokens": jax.ShapeDtypeStruct((BATCH, SEQ), jnp.int32)}
+        ssh, bsh = SH.train_shardings(model, opt, mesh, bstruct)
+    return model, opt, ssh, bsh
+
+def run(mesh_spec, total, ckpt_dir=None, state=None):
+    model, opt, ssh, bsh = setup(mesh_spec)
+    ck = CheckpointConfig(directory=ckpt_dir, save_every=10**9,
+                          async_save=False) if ckpt_dir else None
+    st, hist = train(model, opt,
+                     DataConfig(vocab=VOCAB, seq_len=SEQ, global_batch=BATCH),
+                     LoopConfig(total_steps=total, log_every=1, ckpt=ck),
+                     state=state, state_shardings=ssh, batch_shardings=bsh)
+    return st, [h["loss"] for h in hist]
+
+def leaves_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+"""
+
+ROUNDTRIP = COMMON + r"""
+base = tempfile.mkdtemp()
+
+# --- uninterrupted sharded reference: 5 steps on (4, 2) -------------------
+state5, l5 = run((4, 2), 5)
+
+# --- 3 steps on (4, 2), blocking save (mid-refresh-interval) --------------
+d0 = os.path.join(base, "save42"); os.makedirs(d0)
+state3, l3 = run((4, 2), 3, ckpt_dir=d0)
+assert l3 == l5[:3], (l3, l5)
+
+# --- resharding is lossless: restore bitwise on every target mesh ---------
+restored = {}
+for tag, mesh_spec in [("24", (2, 4)), ("8", (8,)), ("1", None)]:
+    model, opt, ssh, _ = setup(mesh_spec)
+    mgr = CheckpointManager(CheckpointConfig(directory=d0))
+    like = jax.tree.map(np.asarray, state3)     # host template
+    st, step = mgr.restore(like, ssh)
+    assert step == 3, step
+    assert leaves_equal(st, state3), f"restore on {tag} not bitwise"
+    restored[tag] = st
+print("RESTORE_BITWISE_OK")
+
+# spot-check the resharded placement really is sharded on (2, 4)
+st24 = restored["24"]
+specs = {tuple(l.sharding.spec) for l in jax.tree.leaves(st24.params)
+         if hasattr(l, "sharding") and l.ndim >= 2}
+assert any(any(ax is not None for ax in s) for s in specs), specs
+print("RESHARD_PLACED_OK")
+
+# --- same-mesh restart is bitwise-deterministic ---------------------------
+d1 = os.path.join(base, "cont42"); shutil.copytree(d0, d1)
+state5b, l45 = run((4, 2), 5, ckpt_dir=d1)
+assert l45 == l5[3:], (l45, l5[3:])
+assert leaves_equal(state5b.params, state5.params), "same-mesh params diverged"
+print("SAME_MESH_BITWISE_OK")
+
+# --- checkpoint restore == live resharding (single-device continuation) ---
+live1 = jax.device_put(jax.tree.map(np.asarray, state3), None)
+_, l_live = run(None, 5, state=live1)
+d2 = os.path.join(base, "cont1"); shutil.copytree(d0, d2)
+_, l_ckpt = run(None, 5, ckpt_dir=d2)
+assert l_ckpt == l_live, (l_ckpt, l_live)
+print("CKPT_EQ_LIVE_OK")
+
+# --- cross-mesh continuation: fp-reassociation tolerance only ------------
+for tag, mesh_spec in [("24", (2, 4)), ("8", (8,))]:
+    d = os.path.join(base, "cont" + tag); shutil.copytree(d0, d)
+    _, lc = run(mesh_spec, 5, ckpt_dir=d)
+    np.testing.assert_allclose(lc, l5[3:], rtol=1e-3, atol=0,
+                               err_msg=f"cross-mesh {tag}")
+    np.testing.assert_allclose(lc, l_ckpt, rtol=1e-3, atol=0)
+print("CROSS_MESH_TOL_OK")
+print("ROUNDTRIP_OK")
+"""
+
+LAUNCHER = r"""
+import os
+os.environ["REPRO_TRAIN_DEVICES"] = "8"
+from repro.launch import train as LT
+import jax, numpy as np
+from jax.sharding import NamedSharding
+from repro.core import PartitionState, adapprox_state
+from repro.core.adamw import AdamWState
+from repro.core import factored as F
+
+state = LT.main(["--smoke", "--steps", "2", "--log-every", "1",
+                 "--batch", "8", "--seq", "32",
+                 "--mesh", "4,2", "--mixed-groups"])
+
+# partition state with static labels survived the mesh-jitted step
+pstate = state.opt_state
+assert isinstance(pstate, PartitionState), type(pstate)
+assert set(pstate.inner) == {"dense", "factored"}, pstate.inner.keys()
+assert set(pstate.labels) == {"dense", "factored"}
+
+# every live opt-state leaf carries a NamedSharding from the mesh jit
+for leaf in jax.tree.leaves(state.opt_state):
+    assert isinstance(leaf.sharding, NamedSharding), leaf.sharding
+print("OPT_STATE_NAMED_SHARDINGS_OK")
+
+# matrices ride the factored Adapprox group (sharded q/u factors), 1-D
+# leaves the dense Adam group
+ad = adapprox_state(pstate.inner["factored"])
+fls = [l for l in ad.leaves if isinstance(l, F.FactoredLeaf)]
+assert fls, "no factored leaves under the adapprox group"
+assert any(any(ax is not None for ax in l.q.sharding.spec) for l in fls), \
+    "no factored q factor is actually sharded"
+adam = [s for s in pstate.inner["dense"] if isinstance(s, AdamWState)]
+assert adam and all(x.ndim <= 1 or min(x.shape[-2:]) < 64
+                    for x in jax.tree.leaves(adam[0].m)), \
+    "dense Adam group should hold only 1-D/small leaves"
+# params sharded too (FSDP default on)
+assert any(any(ax is not None for ax in l.sharding.spec)
+           for l in jax.tree.leaves(state.params) if l.ndim >= 2)
+print("LAUNCHER_MESH_OK")
+"""
+
+
+def _run(script: str, name: str, timeout=1800):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, \
+        f"{name} failed:\nSTDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_resharding_round_trip():
+    out = _run(ROUNDTRIP, "resharding round trip")
+    for marker in ("RESTORE_BITWISE_OK", "RESHARD_PLACED_OK",
+                   "SAME_MESH_BITWISE_OK", "CKPT_EQ_LIVE_OK",
+                   "CROSS_MESH_TOL_OK", "ROUNDTRIP_OK"):
+        assert marker in out, out
+
+
+def test_launcher_mesh_smoke():
+    out = _run(LAUNCHER, "launcher mesh smoke")
+    assert "OPT_STATE_NAMED_SHARDINGS_OK" in out, out
+    assert "LAUNCHER_MESH_OK" in out, out
