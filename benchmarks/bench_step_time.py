@@ -63,6 +63,10 @@ CASES = [
     ("adapprox_refresh5_warm1_bucketed", "adapprox",
      {"refresh_every": 5, "warm_start": True, "n_iter_warm": 1,
       "bucketed": True}),
+    ("adapprox_fused", "adapprox", {"fused_update": True}),
+    ("adapprox_refresh5_warm1_fused", "adapprox",
+     {"refresh_every": 5, "warm_start": True, "n_iter_warm": 1,
+      "fused_update": True}),
 ]
 
 
@@ -98,6 +102,86 @@ def time_opt(family: str, overrides: dict, stack: str, reps: int,
     return (time.perf_counter() - t0) / reps * 1e3
 
 
+def time_elementwise_stage(stack: str, r: int = 64,
+                           rounds: int = 4, reps: int = 5) -> dict:
+    """Isolated measurement of the optimizer's elementwise tail — the
+    stage the fused two-pass pipeline rewrites — over the bench's factored
+    shapes: reconstruct-V -> divide -> RMS clip -> first-moment EMA,
+    unfused (the exact jnp expressions of the unfused optimizer path) vs
+    fused (ops.fused_precond + host combine + ops.fused_apply, vfro
+    included as on the real fold step).  Reports wall ms (min over
+    interleaved rounds, robust to machine noise) and compiled HLO
+    bytes-accessed, so the pass-count claim of the roofline model is
+    measured on this backend, not asserted.
+    """
+    import time as _time
+
+    from repro.kernels import ops, ref
+
+    b2, eps, b1, clip_d = 0.999, 1e-8, 0.9, 1.0
+    shapes = [s for s in STACKS[stack].values() if len(s) == 3]
+    key = jax.random.PRNGKey(0)
+    qs = [jax.random.normal(jax.random.fold_in(key, i), (L, m, r))
+          for i, (L, m, n) in enumerate(shapes)]
+    us = [jax.random.normal(jax.random.fold_in(key, 10 + i), (L, n, r))
+          for i, (L, m, n) in enumerate(shapes)]
+    gs = [jax.random.normal(jax.random.fold_in(key, 20 + i), s)
+          for i, s in enumerate(shapes)]
+    m1s = [jnp.zeros(s) for s in shapes]
+
+    def unfused(qs, us, gs, m1s):
+        outs = []
+        for q, u, g, m1 in zip(qs, us, gs, m1s):
+            def one(q, u, g, m1):
+                b2f = jnp.asarray(b2, jnp.float32)
+                v = b2f * jnp.maximum(q @ u.T, 0.0) + (1.0 - b2f) * g * g
+                u_hat = g / (jnp.sqrt(v) + eps)
+                u_hat = u_hat / jnp.maximum(
+                    1.0, jnp.sqrt(jnp.mean(jnp.square(u_hat)) + 1e-30)
+                    / clip_d)
+                m1n = b1 * m1 + (1.0 - b1) * u_hat
+                return m1n
+            outs.append(jax.vmap(one)(q, u, g, m1))
+        return outs
+
+    def fused(qs, us, gs, m1s):
+        outs = []
+        for q, u, g, m1 in zip(qs, us, gs, m1s):
+            def one(q, u, g, m1):
+                u_hat, _, usq, _, _ = ref.fused_precond(q, u, g, b2, eps)
+                denom = jnp.maximum(
+                    1.0, jnp.sqrt(usq / u_hat.size + 1e-30) / clip_d)
+                _, m1n = ops.fused_apply(u_hat, m1, denom, b1,
+                                         jnp.float32(1.0), jnp.float32(1.0),
+                                         shared_out=True)
+                return m1n
+            outs.append(jax.vmap(one)(q, u, g, m1))
+        return outs
+
+    out = {}
+    jits = {"unfused": jax.jit(unfused), "fused": jax.jit(fused)}
+    best = {name: float("inf") for name in jits}
+    for name, jf in jits.items():                     # compile + bytes
+        o = jf(qs, us, gs, m1s)
+        jax.block_until_ready(o)
+        ca = jf.lower(qs, us, gs, m1s).compile().cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        out[f"hlo_bytes_{name}"] = int(ca.get("bytes accessed", 0))
+    for _ in range(rounds):                           # interleaved timing
+        for name, jf in jits.items():
+            t0 = _time.perf_counter()
+            for _ in range(reps):
+                o = jf(qs, us, gs, m1s)
+            jax.block_until_ready(o)
+            best[name] = min(best[name],
+                             (_time.perf_counter() - t0) / reps * 1e3)
+    out["unfused_ms"] = round(best["unfused"], 3)
+    out["fused_ms"] = round(best["fused"], 3)
+    out["speedup_fused"] = round(best["unfused"] / best["fused"], 2)
+    return out
+
+
 def collect(quick: bool = False) -> dict:
     stack = "quick" if quick else "full"
     reps = 5 if quick else 10          # multiple of refresh_every=5
@@ -114,14 +198,27 @@ def collect(quick: bool = False) -> dict:
         for n in by_name if n.startswith("adapprox_") and
         n != "adapprox_default"
     }
+    derived["speedup_fused_vs_refresh5_warm1"] = round(
+        by_name["adapprox_refresh5_warm1"]
+        / by_name["adapprox_refresh5_warm1_fused"], 2)
+    from repro.kernels import ops
     return {
         "benchmark": "optimizer_step_time",
         "stack": stack,
         "shapes": {k: list(v) for k, v in STACKS[stack].items()},
         "backend": jax.default_backend(),
+        # which kernel implementation the adapprox configs dispatched to:
+        # "pallas" (compiled TPU), "interpret" (forced-pallas on CPU) or
+        # "ref" (jnp oracles) — so CPU and TPU JSONs are distinguishable
+        "kernel_mode": ops.resolved_mode(),
         "reps": reps,
         "results": results,
         "derived": derived,
+        # the stage the fused pipeline rewrites, measured in isolation
+        # (full-row CPU wall time is GEMM-flop-bound — reconstruct + fold +
+        # S-RSI — so the tail's pass-count win only moves the whole row on
+        # backends where the Pallas kernels dispatch; see ROADMAP)
+        "elementwise_stage": time_elementwise_stage(stack),
     }
 
 

@@ -63,6 +63,75 @@ def analyze(rec: dict) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# Optimizer elementwise-stage HBM traffic model (fused two-pass pipeline)
+# ---------------------------------------------------------------------------
+#
+# Per-stage byte counts for the Adapprox elementwise tail on ONE factored
+# (m, n) leaf with rank-r factors, f32 throughout.  Stages are the
+# materialisation boundaries of the written implementation (each reduction
+# forces a barrier, each named buffer is written once and read by its
+# consumers); this is the model the "~7 passes -> ~3 passes" claim of the
+# fused pipeline (kernels/fused_update.py) is checked against —
+# tests/test_fused.py asserts the >= 2x ratio for every mode combination.
+
+F32 = 4
+
+
+def optimizer_update_traffic(m: int, n: int, r: int, b1: float = 0.9,
+                             guidance: bool = False, fused: bool = False,
+                             bm: int = 256, bn: int = 256) -> dict:
+    """HBM bytes per stage of the elementwise update tail of one factored
+    Adapprox leaf (from reconstructed-V to final update direction +
+    first-moment store).  Returns {"stages": {name: bytes}, "total": int}.
+    """
+    mn = m * n * F32
+    skinny = (m * r + n * r) * F32
+    stages: dict = {}
+    if not fused:
+        # the unfused jnp path materialises V, u_hat, the clipped u_hat
+        # and the first-moment EMA as separate buffers
+        stages["reconstruct_v"] = mn + skinny + mn        # read G, write V
+        stages["divide"] = 3 * mn                         # read G, V; write
+        stages["rms_reduce"] = mn                         # read u_hat
+        stages["clip"] = 2 * mn                           # rmw u_hat
+        if b1 > 0:
+            stages["m1_ema"] = 3 * mn                     # read u_c, m1; write
+            if guidance:
+                stages["guidance_reduce"] = 2 * mn        # read u_c, acc
+                stages["guidance_apply"] = 2 * mn         # read acc, write out
+    else:
+        import math
+        tiles = math.ceil(m / bm) * math.ceil(n / bn)
+        partials = (4 if guidance else 2) * tiles * F32   # per-tile sums
+        # pass 1: read G (+ m1 when guidance), write u_hat; reductions ride
+        # along in VMEM
+        stages["pass1"] = (3 if guidance else 2) * mn + skinny + partials
+        if b1 > 0:
+            # pass 2: read u_hat + m1; guidance "update" writes m_out and
+            # m1_new separately, otherwise the shared-output kernel writes
+            # the step direction == new first moment once
+            stages["pass2"] = (4 if guidance else 3) * mn
+        else:
+            stages["pass2"] = 2 * mn                      # read, write
+    return {"stages": stages, "total": sum(stages.values())}
+
+
+def optimizer_traffic_table(shapes=((768, 2304, 128), (768, 768, 128),
+                                    (768, 3072, 128), (3072, 768, 128)),
+                            b1: float = 0.9) -> list[str]:
+    rows = ["opt_traffic_m,n,r,mode,unfused_bytes,fused_bytes,ratio"]
+    for m, n, r in shapes:
+        for guidance in (False, True):
+            unf = optimizer_update_traffic(m, n, r, b1, guidance,
+                                           fused=False)["total"]
+            fus = optimizer_update_traffic(m, n, r, b1, guidance,
+                                           fused=True)["total"]
+            mode = "guided" if guidance else "plain"
+            rows.append(f"{m},{n},{r},{mode},{unf},{fus},{unf / fus:.2f}")
+    return rows
+
+
 def load_records(mesh: str = "pod") -> list[dict]:
     recs = []
     for p in sorted(DRYRUN_DIR.glob(f"*__{mesh}.json")):
@@ -85,4 +154,7 @@ def run(mesh: str = "pod") -> list[str]:
 
 if __name__ == "__main__":
     import sys
-    print("\n".join(run(sys.argv[1] if len(sys.argv) > 1 else "pod")))
+    if len(sys.argv) > 1 and sys.argv[1] == "--optimizer":
+        print("\n".join(optimizer_traffic_table()))
+    else:
+        print("\n".join(run(sys.argv[1] if len(sys.argv) > 1 else "pod")))

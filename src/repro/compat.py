@@ -23,3 +23,32 @@ def shard_map(fn, *, mesh, in_specs, out_specs, check_vma: bool = False):
     from jax.experimental.shard_map import shard_map as _sm
     return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                check_rep=check_vma)
+
+
+def pallas_load(ref, idx: tuple):
+    """``pl.load`` with integer indexers across jax versions.
+
+    On jax 0.4.3x the interpret-mode state-discharge rule for ``load_p``
+    assumes every non-``Slice`` indexer is an array (it probes ``.shape``),
+    so a plain Python ``int`` in the index tuple raises
+    ``AttributeError: 'int' object has no attribute 'shape'`` — but only
+    when the kernel is *interpreted* (CPU tests), not when it is compiled
+    for TPU.  Normalising each int ``i`` to the size-1 slice
+    ``pl.dslice(i, 1)`` and squeezing the resulting unit axes afterwards is
+    bit-identical on every version and lowers to the same DMA on TPU, so we
+    do it unconditionally rather than sniffing the broken rule.
+    """
+    from jax.experimental import pallas as pl
+
+    squeeze_axes = []
+    norm = []
+    for ax, s in enumerate(idx):
+        if isinstance(s, int):
+            norm.append(pl.dslice(s, 1))
+            squeeze_axes.append(ax)
+        else:
+            norm.append(s)
+    out = pl.load(ref, tuple(norm))
+    if squeeze_axes:
+        out = out.squeeze(axis=tuple(squeeze_axes))
+    return out

@@ -242,6 +242,11 @@ class OptimizerConfig:
     n_iter_warm: int = 1
     warm_drift_xi: float = 0.5
     bucketed: bool = False
+    # fused_update runs the elementwise tail (V-reconstruct, RMS clip,
+    # update-EMA first moment, guidance) as the two-pass fused pipeline
+    # (kernels/fused_update.py); bit-exact vs the unfused path when
+    # guidance="off", fp-tolerance otherwise.
+    fused_update: bool = False
     min_dim_factor: int = 128       # factor leaves with min(m, n) >= this
     factor_dtype: str = "float32"   # "int8": quantized factors
     seed: int = 0

@@ -29,6 +29,14 @@ faithful baseline):
     elementwise update remains exact w.r.t. the implicit operator.
   * ``bucketed=True``: same-shape factored leaves run as ONE vmapped
     trace per shape bucket instead of N sequential per-leaf traces.
+  * ``fused_update=True``: the whole elementwise tail (V-reconstruct ->
+    divide -> RMS clip -> update-EMA first moment -> guidance) runs as a
+    two-pass pipeline: pass 1 emits the raw update direction plus every
+    reduction the tail needs (V never stored); the clip/guidance scalars
+    combine on-host; pass 2 applies them in one read-modify-write
+    (kernels/fused_update.py on TPU, the ref oracles elsewhere).
+    Bit-exact vs the unfused path for ``guidance="off"``; guidance modes
+    agree to fp tolerance (reassociated reductions).
 
 Composition: :func:`scale_by_adapprox` is the pure preconditioner — it maps
 gradients to the (positive) update direction ``m_out`` and owns only the
@@ -92,6 +100,15 @@ class AdapproxConfig:
                                            # sketch when stored xi exceeds this
     bucketed: bool = False                 # group same-shape leaves into one
                                            # vmapped S-RSI + update per bucket
+    fused_update: bool = False             # two-pass fused elementwise tail:
+                                           # pass 1 emits u_hat + the clip /
+                                           # guidance reductions with V never
+                                           # stored; pass 2 applies clip +
+                                           # first-moment EMA + guidance in
+                                           # one read-modify-write (bit-exact
+                                           # vs the unfused path for
+                                           # guidance="off"; see
+                                           # tests/test_fused.py)
 
 
 @jax.tree_util.register_dataclass
@@ -105,6 +122,47 @@ class AdapproxState:
 
 def _rms(x: jnp.ndarray) -> jnp.ndarray:
     return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)
+
+
+def _fused_scalars(usq, m1dot, m1sq, size: int, cfg: AdapproxConfig,
+                   guidance: bool):
+    """Host-side combine of the pass-1 reductions into the three scalars
+    pass 2 needs: ``(denom, out_scale, store_scale)``.
+
+    ``denom = max(1, rms/d)`` reproduces the unfused clip bit-for-bit
+    (``sqrt(usq/size + 1e-30)`` lowers to the same HLO as
+    ``sqrt(mean(square(u)) + 1e-30)``).  The guidance scalars are recovered
+    algebraically from the UNclipped pass-1 partials — with ``c = 1/denom``
+    and ``acc = b1*m1 + (1-b1)*c*u_hat``:
+
+        sum(u_c^2)   = usq / denom^2
+        dot(u_c, m1) = m1dot / denom
+        num          = b1*dot(u_c, m1) + (1-b1)*sum(u_c^2)
+        sum(acc^2)   = b1^2*m1sq + 2*b1*(1-b1)*dot(u_c, m1)
+                       + (1-b1)^2*sum(u_c^2)
+
+    — the same quantities the unfused path reduces from the clipped
+    arrays, reassociated, so guidance modes agree to fp tolerance (~1e-6
+    rel) rather than bitwise; guidance="off" stays bitwise.
+    """
+    rms = jnp.sqrt(usq / size + 1e-30)
+    denom = jnp.maximum(1.0, rms / cfg.clip_d)
+    one = jnp.ones_like(denom)
+    if not guidance:
+        return denom, one, one
+    su = usq / (denom * denom)
+    du = m1dot / denom
+    b1 = cfg.b1
+    num = b1 * du + (1.0 - b1) * su
+    accsq = (b1 * b1) * m1sq + 2.0 * b1 * (1.0 - b1) * du \
+        + (1.0 - b1) ** 2 * su
+    den = jnp.sqrt(su) * jnp.sqrt(accsq)
+    theta = num / (den + 1e-30)
+    gscale = jnp.clip(1.0 / (1.0 - theta + cfg.eps), 0.0,
+                      cfg.guidance_max_scale)
+    if cfg.guidance == "stored":
+        return denom, gscale, gscale     # Eq. (18): the stored m1 is scaled
+    return denom, gscale, one            # "update": step direction only
 
 
 # Lazy module handles: repro.kernels.ops / repro.core.quantized are only
@@ -181,17 +239,37 @@ def _factored_update_2d(g, q, u, k, xi_prev, m1, key, step,
     v_op = S.make_implicit_v(q, u, g32, cfg.b2)
 
     # V_t is needed every step for the elementwise update unless the fused
-    # kernel reconstructs it tile-wise; the dense-S-RSI refresh reuses it.
+    # pipeline (or the lowrank_update kernel) reconstructs it tile-wise;
+    # the dense-S-RSI refresh reuses it.
     vmat = None
-    if not cfg.use_kernels:
+    if not cfg.fused_update and not cfg.use_kernels:
         vmat = v_op.materialize()          # paper-faithful: V_t formed
+
+    # --- fused pass 1: u_hat + every tail reduction in one read of G, V
+    # never stored (the dense-S-RSI refresh, if any, re-forms it inside
+    # its lax.cond branch, so fold steps skip the materialisation).
+    # ||V||_F^2 rides along only when the implicit S-RSI will consume it.
+    # NOTE pass 1 must stay OUTSIDE the refresh/fold cond: XLA's fusion of
+    # the V expression is not bit-stable across program contexts (fma
+    # contraction differs), and the bitwise contract compares against the
+    # unfused path, which forms V outside the cond.
+    vfro = None
+    if cfg.fused_update:
+        need_guid = cfg.b1 > 0 and cfg.guidance != "off"
+        u_hat_raw, vfro, usq, m1dot, m1sq = _kernel_ops().fused_precond(
+            q, u, g32, cfg.b2, cfg.eps, m1=m1 if need_guid else None,
+            with_vfro=cfg.implicit)
 
     def _run_srsi(n_it: int, u0, use_warm):
         if cfg.implicit:
             # ||V||_F^2 from the already-materialised V when we have one
-            # (use_kernels=False) — rebuilding it via the streaming
-            # frob_sq would duplicate the O(mnr) reconstruct.
-            fs = None if vmat is None else jnp.sum(jnp.square(vmat))
+            # (use_kernels=False), or from the fused pass-1 partials —
+            # rebuilding it via the streaming frob_sq would duplicate the
+            # O(mnr) reconstruct.
+            if vfro is not None:
+                fs = vfro
+            else:
+                fs = None if vmat is None else jnp.sum(jnp.square(vmat))
             return S.srsi_implicit(v_op, r_store, p_eff, n_it, key,
                                    frob_sq=fs, u0=u0, use_warm=use_warm)
         vm = vmat if vmat is not None else v_op.materialize()
@@ -250,7 +328,25 @@ def _factored_update_2d(g, q, u, k, xi_prev, m1, key, step,
     else:
         q_new, u_new, k_new, xi = _refresh()
 
-    # --- elementwise update from V_t (prev factors + fresh G^2)
+    # --- elementwise tail, fused: host-combine the pass-1 reductions into
+    # the clip / guidance scalars, then one read-modify-write (pass 2)
+    # applies clip + first-moment EMA + guidance together.
+    if cfg.fused_update:
+        denom, out_scale, store_scale = _fused_scalars(
+            usq, m1dot, m1sq, g32.size, cfg, need_guid)
+        if cfg.b1 > 0:
+            # guidance "off"/"stored": out_scale == store_scale, so the
+            # step direction IS the new first moment (same as unfused) —
+            # the shared-output kernel writes it once.
+            m_out, m1_new = _kernel_ops().fused_apply(
+                u_hat_raw, m1, denom, cfg.b1, out_scale, store_scale,
+                shared_out=cfg.guidance != "update")
+        else:
+            m_out, m1_new = _kernel_ops().fused_apply(
+                u_hat_raw, None, denom, cfg.b1, out_scale, store_scale)
+        return m_out, q_new, u_new, k_new, xi, m1_new
+
+    # --- elementwise update from V_t (prev factors + fresh G^2), unfused
     if cfg.use_kernels:
         u_hat = _kernel_ops().lowrank_update(q, u, g32, cfg.b2, cfg.eps)
     else:
@@ -373,6 +469,23 @@ def _update_dense(g, leaf: F.DenseLeaf, cfg: AdapproxConfig):
     g32 = g.astype(jnp.float32)
     v = cfg.b2 * leaf.v + (1.0 - cfg.b2) * jnp.square(g32)
     u_hat = g32 / (jnp.sqrt(v) + cfg.eps)
+    if cfg.fused_update:
+        # Same pass-2 fusion as the factored leaves (dense leaves have no
+        # guidance): the leaf is viewed as one (1, size) row so the pass-2
+        # kernel / oracle applies clip + EMA in a single read-modify-write.
+        denom, out_scale, store_scale = _fused_scalars(
+            jnp.sum(jnp.square(u_hat)), None, None, u_hat.size, cfg,
+            guidance=False)
+        u2 = u_hat.reshape(1, -1)
+        if leaf.m1 is not None:
+            m_out2, m1_new2 = _kernel_ops().fused_apply(
+                u2, leaf.m1.reshape(1, -1), denom, cfg.b1,
+                out_scale, store_scale, shared_out=True)
+            return (m_out2.reshape(u_hat.shape),
+                    F.DenseLeaf(v=v, m1=m1_new2.reshape(u_hat.shape)))
+        m_out2, _ = _kernel_ops().fused_apply(u2, None, denom, cfg.b1,
+                                              out_scale, store_scale)
+        return m_out2.reshape(u_hat.shape), F.DenseLeaf(v=v, m1=None)
     u_hat = u_hat / jnp.maximum(1.0, _rms(u_hat) / cfg.clip_d)
     if leaf.m1 is not None:
         m1 = cfg.b1 * leaf.m1 + (1.0 - cfg.b1) * u_hat

@@ -1,11 +1,44 @@
-"""Pallas TPU kernels for the perf-critical compute layers.
+"""Pallas TPU kernel family for the perf-critical compute layers.
 
-  lowrank_update — fused Adapprox V-reconstruct + elementwise update
-  srsi_matmul    — fused (G*G) @ X sketch matmul
-  flash_attention— causal/GQA online-softmax attention
-  ssd_chunk      — Mamba2 SSD intra-chunk fusion
+Every kernel is one member of a three-part contract:
 
-Use via repro.kernels.ops (wrappers with padding/batching/platform
-dispatch); every kernel has a pure-jnp oracle in ref.py or the model zoo.
+  1. an **oracle** — a pure-jnp function defining the exact semantics
+     (``ref.py`` for the optimizer kernels; the model zoo for attention /
+     SSD).  Oracles are the ground truth for kernel tests AND the fast CPU
+     execution path — they are written to be bitwise-compatible with the
+     unfused optimizer arithmetic where the config contract requires it;
+  2. a **Pallas kernel** — the TPU implementation in its own module,
+     taking pre-padded block-aligned operands and raw scalars;
+  3. a **dispatch wrapper** in ``ops.py`` — the only entry point callers
+     use: it pads to block multiples, batches via vmap, and picks the
+     backend per the mode ("auto" = compiled Pallas on TPU / oracle
+     elsewhere; "pallas" = forced, interpret off-TPU — used by
+     tests/test_kernels.py and the CI kernel job via REPRO_KERNEL_MODE;
+     "ref" = forced oracle).
+
+Family index (oracle <-> kernel module <-> ops wrapper):
+
+  lowrank_update   ref.lowrank_update   <-> lowrank_update.py
+      fused V-reconstruct + elementwise update (+ ||V||_F^2), the
+      single-pass legacy path (``use_kernels`` without ``fused_update``)
+  fused_precond    ref.fused_precond    <-> fused_update.py
+      pass 1 of the two-pass fused pipeline: u_hat + per-tile partial
+      reductions (sum V^2, sum u_hat^2, and with guidance dot(m1, u_hat),
+      sum m1^2); V is never materialised in HBM
+  fused_apply      ref.fused_apply      <-> fused_update.py
+      pass 2: RMS clip + update-EMA first moment + guidance scales in one
+      read-modify-write; m1 aliased in place (input_output_aliases);
+      shared-output variant when the step direction IS the new moment
+  sq_matmul(_t)    ref.sq_matmul(_t)    <-> srsi_matmul.py
+      (G*G) @ X / (G*G)^T @ Y with the square fused — the S-RSI sketch
+      matvecs of the implicit second-moment operator
+  one_sided_fold   ref.one_sided_fold   <-> (composes sq_matmul_t)
+      amortized-refresh factor fold U <- mask*(b2*U + (1-b2)(G^2)^T Q)
+  flash_attention  ops fallback softmax <-> flash_attention.py
+      causal/GQA online-softmax attention forward
+  ssd_chunk        models zoo reference <-> ssd_chunk.py
+      Mamba2 SSD intra-chunk fusion
+
+Use via ``repro.kernels.ops`` — never call kernel modules directly.
 """
 from repro.kernels import ops

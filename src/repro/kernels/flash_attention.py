@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.compat import pallas_load
+
 NEG_INF = -1e30
 
 
@@ -47,10 +49,10 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int, sk: int,
 
     def body(ki, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, pl.dslice(ki * bk, bk), slice(None))
-                    ).astype(jnp.float32)             # (bk, dh)
-        v = pl.load(v_ref, (0, pl.dslice(ki * bk, bk), slice(None))
-                    ).astype(jnp.float32)
+        k = pallas_load(k_ref, (0, pl.dslice(ki * bk, bk), slice(None))
+                        ).astype(jnp.float32)         # (bk, dh)
+        v = pallas_load(v_ref, (0, pl.dslice(ki * bk, bk), slice(None))
+                        ).astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         if causal:

@@ -1,0 +1,236 @@
+"""Pallas TPU kernels: the fused two-pass Adapprox update pipeline.
+
+The elementwise tail of the optimizer — reconstruct V, divide, RMS-clip,
+first-moment EMA, cosine guidance — is memory-bound, and the plain jnp
+path makes ~7 full (m, n) HBM passes per factored leaf.  These kernels cut
+it to ~3:
+
+  pass 1 (``fused_precond_pallas``): per (bm, bn) tile, reconstruct
+      V = b2 * max(Q @ U^T, 0) + (1 - b2) * G^2 in VMEM, write the raw
+      update direction u_hat = G / (sqrt(V) + eps) ONCE, and emit per-tile
+      partial reductions alongside it: sum(V^2) (adaptive rank / implicit
+      S-RSI), sum(u_hat^2) (RMS clip) and, when guidance is on,
+      dot(m1, u_hat) + sum(m1^2).  The (gm, gn) partial grids are summed on
+      the host — O(tiles) scalars, negligible traffic.
+
+  pass 2 (``fused_apply_pallas``): one read-modify-write applying the
+      host-combined scalars: u_c = u_hat / denom (RMS clip),
+      acc = b1 * m1 + (1 - b1) * u_c (update-EMA first moment),
+      m_out = acc * out_scale, m1_new = acc * store_scale (guidance).
+      ``m1`` is aliased to ``m1_new`` via ``input_output_aliases`` so the
+      first moment is updated in place — no extra HBM allocation.
+
+Traffic per factored leaf (f32 words, b1 > 0, guidance off, skinny
+factor reads shared by both sides): unfused = reconstruct (read G, write
+V) + divide (read G, V; write u_hat) + rms reduce (read u_hat) + clip
+(rmw u_hat) + EMA (read u_c, m1; write m1) ~ 11 m*n; fused = pass 1
+(read G, write u_hat) + pass 2 (read u_hat, m1; write m1 == m_out)
+~ 5 m*n — 2.1-2.5x fewer bytes across modes; see
+benchmarks/roofline.py::optimizer_update_traffic for the full per-stage
+model and tests/test_fused.py for the pinned >= 2x ratio.
+
+VMEM tiling matches lowrank_update.py: blocks (bm, r) of Q, (bn, r) of U,
+(bm, bn) of G / m1 with r padded to the 128-lane quantum by ops.py;
+bm = bn = 256 keeps the footprint ~2 MiB, well inside the ~16 MiB budget.
+Scalars ride in a single small ANY-space vector, indexed inside the body.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _precond_tile(q_ref, u_ref, g_ref, s_ref):
+    """Shared pass-1 tile math -> (u_hat_tile, v_tile)."""
+    q = q_ref[...].astype(jnp.float32)          # (bm, r)
+    u = u_ref[...].astype(jnp.float32)          # (bn, r)
+    g = g_ref[...].astype(jnp.float32)          # (bm, bn)
+    b2 = s_ref[0]
+    eps = s_ref[1]
+    low = jax.lax.dot_general(q, u, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    v = b2 * jnp.maximum(low, 0.0) + (1.0 - b2) * g * g
+    return g / (jnp.sqrt(v) + eps), v
+
+
+def _precond_kernel(q_ref, u_ref, g_ref, s_ref,
+                    out_ref, vfro_ref, usq_ref):
+    out, v = _precond_tile(q_ref, u_ref, g_ref, s_ref)
+    out_ref[...] = out
+    vfro_ref[0, 0] = jnp.sum(v * v)
+    usq_ref[0, 0] = jnp.sum(out * out)
+
+
+def _precond_guided_kernel(q_ref, u_ref, g_ref, m1_ref, s_ref,
+                           out_ref, vfro_ref, usq_ref, m1dot_ref, m1sq_ref):
+    out, v = _precond_tile(q_ref, u_ref, g_ref, s_ref)
+    m1 = m1_ref[...].astype(jnp.float32)
+    out_ref[...] = out
+    vfro_ref[0, 0] = jnp.sum(v * v)
+    usq_ref[0, 0] = jnp.sum(out * out)
+    m1dot_ref[0, 0] = jnp.sum(m1 * out)
+    m1sq_ref[0, 0] = jnp.sum(m1 * m1)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def fused_precond_pallas(q: jnp.ndarray, u: jnp.ndarray, g: jnp.ndarray,
+                         b2: jnp.ndarray, eps: jnp.ndarray,
+                         bm: int = 256, bn: int = 256,
+                         interpret: bool = False):
+    """q: (m, r) f32, u: (n, r) f32, g: (m, n).  m % bm == 0, n % bn == 0,
+    r % 128 == 0 (ops.py pads; zero padding leaves every reduction
+    untouched).  Returns (u_hat (m, n) f32, vfro (), usq ()) with the
+    per-tile partial grids already summed."""
+    m, r = q.shape
+    n = u.shape[0]
+    gm, gn = m // bm, n // bn
+    scalars = jnp.stack([jnp.asarray(b2, jnp.float32),
+                         jnp.asarray(eps, jnp.float32)])
+    tile = jax.ShapeDtypeStruct((gm, gn), jnp.float32)
+    out, vfro, usq = pl.pallas_call(
+        _precond_kernel,
+        grid=(gm, gn),
+        in_specs=[
+            pl.BlockSpec((bm, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, r), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec(memory_space=pl.ANY),       # scalars (2,)
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            tile, tile,
+        ],
+        interpret=interpret,
+    )(q, u, g, scalars)
+    return out, jnp.sum(vfro), jnp.sum(usq)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def fused_precond_guided_pallas(q: jnp.ndarray, u: jnp.ndarray,
+                                g: jnp.ndarray, m1: jnp.ndarray,
+                                b2: jnp.ndarray, eps: jnp.ndarray,
+                                bm: int = 256, bn: int = 256,
+                                interpret: bool = False):
+    """Guidance variant of :func:`fused_precond_pallas`: also streams the
+    stored first moment through the tile and emits dot(m1, u_hat) and
+    sum(m1^2) partials.  Returns (u_hat, vfro, usq, m1dot, m1sq)."""
+    m, r = q.shape
+    n = u.shape[0]
+    gm, gn = m // bm, n // bn
+    scalars = jnp.stack([jnp.asarray(b2, jnp.float32),
+                         jnp.asarray(eps, jnp.float32)])
+    tile = jax.ShapeDtypeStruct((gm, gn), jnp.float32)
+    out, vfro, usq, m1dot, m1sq = pl.pallas_call(
+        _precond_guided_kernel,
+        grid=(gm, gn),
+        in_specs=[
+            pl.BlockSpec((bm, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, r), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec(memory_space=pl.ANY),       # scalars (2,)
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            tile, tile, tile, tile,
+        ],
+        interpret=interpret,
+    )(q, u, g, m1, scalars)
+    return (out, jnp.sum(vfro), jnp.sum(usq),
+            jnp.sum(m1dot), jnp.sum(m1sq))
+
+
+def _apply_kernel(u_ref, m1_ref, s_ref, out_ref, m1_new_ref):
+    # s_ref: (5,) = [denom, b1, 1 - b1, out_scale, store_scale].  (1 - b1)
+    # is precomputed by the wrapper in python-f64-then-round — the same
+    # coefficient the jnp paths use — rather than re-derived in f32 here.
+    u = u_ref[...].astype(jnp.float32)
+    m1 = m1_ref[...].astype(jnp.float32)
+    u_c = u / s_ref[0]
+    acc = s_ref[1] * m1 + s_ref[2] * u_c
+    out_ref[...] = acc * s_ref[3]
+    m1_new_ref[...] = acc * s_ref[4]
+
+
+def _apply_shared_kernel(u_ref, m1_ref, s_ref, m1_new_ref):
+    # Shared-output variant: when out_scale == store_scale (guidance "off"
+    # or "stored") the step direction IS the new first moment, exactly as
+    # in the unfused path — write it once and let the caller alias.
+    u = u_ref[...].astype(jnp.float32)
+    m1 = m1_ref[...].astype(jnp.float32)
+    u_c = u / s_ref[0]
+    acc = s_ref[1] * m1 + s_ref[2] * u_c
+    m1_new_ref[...] = acc * s_ref[4]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def fused_apply_shared_pallas(u_hat: jnp.ndarray, m1: jnp.ndarray,
+                              scalars: jnp.ndarray,
+                              bm: int = 256, bn: int = 256,
+                              interpret: bool = False):
+    """Single-output :func:`fused_apply_pallas` for out_scale ==
+    store_scale: returns m1_new (= m_out), saving one full (m, n) HBM
+    write.  ``m1`` is aliased to the output."""
+    m, n = u_hat.shape
+    gm, gn = m // bm, n // bn
+    return pl.pallas_call(
+        _apply_shared_kernel,
+        grid=(gm, gn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec(memory_space=pl.ANY),       # scalars (5,)
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        input_output_aliases={1: 0},                 # m1 -> m1_new
+        interpret=interpret,
+    )(u_hat, m1, scalars)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def fused_apply_pallas(u_hat: jnp.ndarray, m1: jnp.ndarray,
+                       scalars: jnp.ndarray,
+                       bm: int = 256, bn: int = 256,
+                       interpret: bool = False):
+    """u_hat/m1: (m, n) f32, scalars: (5,) f32 = [denom, b1, 1 - b1,
+    out_scale, store_scale].  m % bm == 0, n % bn == 0 (ops.py pads).  ``m1`` is
+    aliased to the ``m1_new`` output (updated in place — the EMA buffer
+    never exists twice in HBM).  Returns (m_out, m1_new), both (m, n) f32.
+    """
+    m, n = u_hat.shape
+    gm, gn = m // bm, n // bn
+    return pl.pallas_call(
+        _apply_kernel,
+        grid=(gm, gn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec(memory_space=pl.ANY),       # scalars (4,)
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+        ],
+        input_output_aliases={1: 1},                 # m1 -> m1_new
+        interpret=interpret,
+    )(u_hat, m1, scalars)

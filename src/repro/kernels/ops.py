@@ -7,24 +7,42 @@ pure-jnp reference for speed), and batching via vmap.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.fused_update import (fused_apply_pallas,
+                                        fused_apply_shared_pallas,
+                                        fused_precond_guided_pallas,
+                                        fused_precond_pallas)
 from repro.kernels.lowrank_update import lowrank_update_pallas
 from repro.kernels.srsi_matmul import sq_matmul_pallas
 
 # Mode: "auto" (pallas on TPU, ref elsewhere), "pallas" (force, interpret on
-# CPU — used by kernel tests), "ref" (force reference).
-_MODE = "auto"
+# CPU — used by kernel tests and the CI pallas-interpret job via the
+# REPRO_KERNEL_MODE env var), "ref" (force reference).
+_MODE = os.environ.get("REPRO_KERNEL_MODE", "auto")
+if _MODE not in ("auto", "pallas", "ref"):
+    raise ValueError(
+        f"REPRO_KERNEL_MODE={_MODE!r} (expected auto|pallas|ref)")
 
 
 def set_mode(mode: str) -> None:
     global _MODE
     assert mode in ("auto", "pallas", "ref")
     _MODE = mode
+
+
+def resolved_mode() -> str:
+    """The mode actually in effect: "pallas" | "interpret" | "ref".
+    Benchmarks record this so TPU and CPU runs are distinguishable."""
+    use, interp = _use_pallas()
+    if not use:
+        return "ref"
+    return "interpret" if interp else "pallas"
 
 
 def _use_pallas() -> tuple[bool, bool]:
@@ -83,6 +101,127 @@ def lowrank_update(q: jnp.ndarray, u: jnp.ndarray, g: jnp.ndarray,
         fn = jax.vmap(fn)
     out, fro = fn(q, u, g)
     return (out, fro) if with_frob else out
+
+
+def fused_precond(q: jnp.ndarray, u: jnp.ndarray, g: jnp.ndarray,
+                  b2: float, eps: float,
+                  m1: jnp.ndarray | None = None,
+                  with_vfro: bool = True):
+    """Pass 1 of the fused two-pass update pipeline (see ref.fused_precond):
+    raw update direction + whole-matrix reductions in one read of G, with V
+    reconstructed tile-wise and never stored.  Pass ``m1`` to additionally
+    get the guidance partials streamed in the same pass.
+
+    Accepts arbitrary leading batch dims on (q, u, g, m1) jointly.
+    Returns (u_hat, vfro, usq, m1dot, m1sq); the last two are None when
+    ``m1`` is None.  ``with_vfro=False`` returns None for vfro on the ref
+    path (the reduction is skipped — fold steps never consume it); the
+    Pallas kernels always emit the per-tile partial since it rides the
+    update loop for free, and the wrapper simply drops it.
+    """
+    use, interp = _use_pallas()
+
+    def pads(q2, u2, g2, bm, bn):
+        qp = _pad_to(_pad_to(q2.astype(jnp.float32), bm, 0), 128, 1)
+        up = _pad_to(_pad_to(u2.astype(jnp.float32), bn, 0), 128, 1)
+        gp = _pad_to(_pad_to(g2, bm, 0), bn, 1)
+        return qp, up, gp
+
+    if m1 is None:
+        def one(q2, u2, g2):
+            if not use:
+                out, vfro, usq, _, _ = ref.fused_precond(
+                    q2, u2, g2, b2, eps, with_vfro=with_vfro)
+                return out, vfro, usq
+            m_, n_ = g2.shape
+            bm, bn = _pick_block(m_), _pick_block(n_)
+            qp, up, gp = pads(q2, u2, g2, bm, bn)
+            out, vfro, usq = fused_precond_pallas(
+                qp, up, gp, jnp.asarray(b2), jnp.asarray(eps),
+                bm=bm, bn=bn, interpret=interp)
+            # the kernel always emits the per-tile partial (it rides the
+            # update loop for free); drop it here so the return contract
+            # matches the ref path backend-independently
+            return out[:m_, :n_], vfro if with_vfro else None, usq
+
+        fn = one
+        for _ in range(g.ndim - 2):
+            fn = jax.vmap(fn)
+        out, vfro, usq = fn(q, u, g)
+        return out, vfro, usq, None, None
+
+    def one(q2, u2, g2, m12):
+        if not use:
+            return ref.fused_precond(q2, u2, g2, b2, eps, m1=m12,
+                                     with_vfro=with_vfro)
+        m_, n_ = g2.shape
+        bm, bn = _pick_block(m_), _pick_block(n_)
+        qp, up, gp = pads(q2, u2, g2, bm, bn)
+        mp = _pad_to(_pad_to(m12.astype(jnp.float32), bm, 0), bn, 1)
+        out, vfro, usq, m1dot, m1sq = fused_precond_guided_pallas(
+            qp, up, gp, mp, jnp.asarray(b2), jnp.asarray(eps),
+            bm=bm, bn=bn, interpret=interp)
+        return (out[:m_, :n_], vfro if with_vfro else None, usq,
+                m1dot, m1sq)
+
+    fn = one
+    for _ in range(g.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(q, u, g, m1)
+
+
+def fused_apply(u_hat: jnp.ndarray, m1: jnp.ndarray | None,
+                denom: jnp.ndarray, b1: float,
+                out_scale: jnp.ndarray, store_scale: jnp.ndarray,
+                shared_out: bool = False):
+    """Pass 2 of the fused pipeline (see ref.fused_apply): clip + first-
+    moment EMA + guidance scales in one read-modify-write; on the Pallas
+    path ``m1`` is donated to its output (updated in place).
+
+    ``u_hat``/``m1``: (*batch, m, n); ``denom``/``out_scale``/
+    ``store_scale``: (*batch,) scalars from the host combine.  With ``m1``
+    None (b1 = 0) the EMA collapses to a single scaled copy, which is one
+    fused elementwise op on every backend — no kernel needed.
+    ``shared_out=True`` (valid when out_scale == store_scale, i.e.
+    guidance "off" or "stored") returns the SAME array as m_out and
+    m1_new — exactly the unfused aliasing — saving one (m, n) HBM write
+    on the kernel path.  Returns (m_out, m1_new); ``m1_new`` is None when
+    ``m1`` is None.
+    """
+    use, interp = _use_pallas()
+
+    if m1 is None:
+        dn = jnp.asarray(denom).reshape(jnp.shape(denom) + (1, 1))
+        os_ = jnp.asarray(out_scale).reshape(jnp.shape(out_scale) + (1, 1))
+        return (u_hat / dn) * os_, None
+
+    def one(u2, m12, d, os_, ss):
+        if not use:
+            out, m1n = ref.fused_apply(u2, m12, d, b1, os_, ss)
+            return (m1n, m1n) if shared_out else (out, m1n)
+        m_, n_ = u2.shape
+        bm, bn = _pick_block(m_), _pick_block(n_)
+        up = _pad_to(_pad_to(u2.astype(jnp.float32), bm, 0), bn, 1)
+        mp = _pad_to(_pad_to(m12.astype(jnp.float32), bm, 0), bn, 1)
+        scalars = jnp.stack([d.astype(jnp.float32),
+                             jnp.asarray(b1, jnp.float32),
+                             jnp.asarray(1.0 - b1, jnp.float32),
+                             os_.astype(jnp.float32),
+                             ss.astype(jnp.float32)])
+        if shared_out:
+            m1n = fused_apply_shared_pallas(up, mp, scalars, bm=bm, bn=bn,
+                                            interpret=interp)
+            m1n = m1n[:m_, :n_]
+            return m1n, m1n
+        out, m1n = fused_apply_pallas(up, mp, scalars, bm=bm, bn=bn,
+                                      interpret=interp)
+        return out[:m_, :n_], m1n[:m_, :n_]
+
+    fn = one
+    for _ in range(u_hat.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(u_hat, m1, jnp.asarray(denom), jnp.asarray(out_scale),
+              jnp.asarray(store_scale))
 
 
 def sq_matmul(g: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:

@@ -27,6 +27,72 @@ def lowrank_update(q: jnp.ndarray, u: jnp.ndarray, g: jnp.ndarray,
     return out, jnp.sum(v * v)
 
 
+def fused_precond(q: jnp.ndarray, u: jnp.ndarray, g: jnp.ndarray,
+                  b2: float, eps: float, m1: jnp.ndarray | None = None,
+                  with_vfro: bool = True):
+    """Pass 1 of the fused two-pass update pipeline.
+
+    Reconstructs V tile-wise (never stored), emits the raw update direction
+    and every whole-matrix reduction the elementwise tail needs, so the
+    clip / first-moment / guidance scalars can be combined on-host without
+    re-reading the (m, n) operands:
+
+        V     = b2 * max(Q @ U^T, 0) + (1 - b2) * G^2
+        u_hat = G / (sqrt(V) + eps)              (UNclipped)
+        vfro  = ||V||_F^2                        (adaptive rank / implicit
+                                                  S-RSI frob_sq)
+        usq   = sum(u_hat^2)                     (RMS clip)
+        m1dot = sum(m1 * u_hat)   [m1 given]     (cosine guidance)
+        m1sq  = sum(m1^2)         [m1 given]     (cosine guidance)
+
+    q: (m, r) f32, u: (n, r) f32, g: (m, n), m1: (m, n) f32 | None.
+    Returns (u_hat, vfro, usq, m1dot, m1sq); the last two are None when
+    ``m1`` is None (guidance off or b1 = 0).  ``with_vfro=False`` skips the
+    ||V||_F^2 reduction and returns None for it — the optimizer's fold
+    steps never consume it, and skipping saves a full pass over V's values
+    on backends where the reduction doesn't ride the update loop.
+    """
+    g32 = g.astype(jnp.float32)
+    # (1 - b2) must be computed in f32 (not python f64 then rounded) to stay
+    # bitwise-identical to ImplicitV.materialize, which subtracts an f32 b2.
+    b2f = jnp.asarray(b2, jnp.float32)
+    v = (b2f * jnp.maximum(q.astype(jnp.float32) @ u.astype(jnp.float32).T,
+                           0.0)
+         + (1.0 - b2f) * g32 * g32)
+    out = g32 / (jnp.sqrt(v) + eps)
+    vfro = jnp.sum(v * v) if with_vfro else None
+    usq = jnp.sum(jnp.square(out))
+    if m1 is None:
+        return out, vfro, usq, None, None
+    m1f = m1.astype(jnp.float32)
+    return out, vfro, usq, jnp.sum(m1f * out), jnp.sum(jnp.square(m1f))
+
+
+def fused_apply(u_hat: jnp.ndarray, m1: jnp.ndarray | None,
+                denom: jnp.ndarray, b1: float,
+                out_scale: jnp.ndarray, store_scale: jnp.ndarray):
+    """Pass 2 of the fused pipeline: one read-modify-write applying the RMS
+    clip (division by the host-combined ``denom = max(1, rms/d)`` — division,
+    not reciprocal-multiply, for bitwise parity with the unfused path), the
+    update-EMA first moment, and the guidance scales:
+
+        u_c    = u_hat / denom
+        acc    = b1 * m1 + (1 - b1) * u_c
+        m_out  = acc * out_scale
+        m1_new = acc * store_scale
+
+    ``out_scale``/``store_scale`` encode the guidance mode: (1, 1) = off,
+    (s, 1) = "update", (s, s) = "stored".  With ``m1`` None (b1 = 0) the
+    EMA collapses to ``m_out = u_c * out_scale`` and m1_new is None.
+    Returns (m_out, m1_new).
+    """
+    u_c = u_hat / denom
+    if m1 is None:
+        return u_c * out_scale, None
+    acc = b1 * m1 + (1.0 - b1) * u_c
+    return acc * out_scale, acc * store_scale
+
+
 def sq_matmul(g: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
     """Y = (G * G) @ X without materialising G^2.
 

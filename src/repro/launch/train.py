@@ -52,7 +52,7 @@ log = logging.getLogger(__name__)
 
 def optimizer_config(name: str, steps: int, lr: float,
                      refresh_every: int = 1, warm_start: bool = False,
-                     bucketed: bool = False,
+                     bucketed: bool = False, fused_update: bool = False,
                      mixed_groups: bool = False) -> OptimizerConfig:
     """The launcher's OptimizerConfig: cosine schedule derived from the run
     length, paper-faithful Adapprox adaptive-rank settings.  The amortized-
@@ -70,7 +70,8 @@ def optimizer_config(name: str, steps: int, lr: float,
                                xi_thresh=0.01, delta_s=10,
                                min_dim_factor=64, implicit=False,
                                refresh_every=refresh_every,
-                               warm_start=warm_start, bucketed=bucketed)
+                               warm_start=warm_start, bucketed=bucketed,
+                               fused_update=fused_update)
     if name in ("adamw", "adafactor", "came"):
         # the factored group inherits the family, so --mixed-groups is a
         # matrices/rest split of the SAME optimizer here (dense Adam on
@@ -116,6 +117,9 @@ def main(argv=None):
                     help="adapprox: warm-start S-RSI from the stored U")
     ap.add_argument("--bucketed", action="store_true",
                     help="adapprox: one vmapped trace per same-shape bucket")
+    ap.add_argument("--fused-update", action="store_true",
+                    help="adapprox: two-pass fused elementwise tail "
+                         "(kernels/fused_update.py on TPU)")
     ap.add_argument("--mesh", default=None,
                     help="device mesh sizes, e.g. '4,2' = (data=4, model=2);"
                          " omit for the single-device path")
@@ -148,7 +152,8 @@ def main(argv=None):
     opt = build_optimizer(optimizer_config(
         args.optimizer, args.steps, args.lr,
         refresh_every=args.refresh_every, warm_start=args.warm_start,
-        bucketed=args.bucketed, mixed_groups=mixed))
+        bucketed=args.bucketed, fused_update=args.fused_update,
+        mixed_groups=mixed))
     data_cfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
                           global_batch=args.batch)
 

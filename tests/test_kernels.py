@@ -86,6 +86,84 @@ def test_update_zero_grad_is_zero():
     np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-7)
 
 
+@pytest.mark.parametrize("m,n,r", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fused_precond_matches_ref(m, n, r, dtype):
+    q, u, g = _mk(m, n, r, dtype)
+    out_k, vfro_k, usq_k, _, _ = ops.fused_precond(q, u, g, 0.999, 1e-8)
+    out_r, vfro_r, usq_r, _, _ = ref.fused_precond(q, u, g, 0.999, 1e-8)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(vfro_k), float(vfro_r), rtol=1e-3)
+    np.testing.assert_allclose(float(usq_k), float(usq_r), rtol=1e-3)
+
+
+@pytest.mark.parametrize("m,n,r", SHAPES[:3])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fused_precond_guided_matches_ref(m, n, r, dtype):
+    q, u, g = _mk(m, n, r, dtype)
+    m1 = jax.random.normal(jax.random.PRNGKey(7), (m, n), jnp.float32)
+    got = ops.fused_precond(q, u, g, 0.999, 1e-8, m1=m1)
+    want = ref.fused_precond(q, u, g, 0.999, 1e-8, m1=m1)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               rtol=2e-4, atol=2e-4)
+    for k, w in zip(got[1:], want[1:]):          # vfro, usq, m1dot, m1sq
+        np.testing.assert_allclose(float(k), float(w), rtol=1e-3)
+
+
+@pytest.mark.parametrize("m,n,r", SHAPES[:3])
+def test_fused_precond_batched(m, n, r):
+    qs = jnp.stack([_mk(m, n, r, jnp.float32, s)[0] for s in range(3)])
+    us = jnp.stack([_mk(m, n, r, jnp.float32, s)[1] for s in range(3)])
+    gs = jnp.stack([_mk(m, n, r, jnp.float32, s)[2] for s in range(3)])
+    out, vfro, usq, _, _ = ops.fused_precond(qs, us, gs, 0.99, 1e-8)
+    assert out.shape == (3, m, n) and vfro.shape == (3,) and usq.shape == (3,)
+    for i in range(3):
+        eo, ev, eu, _, _ = ref.fused_precond(qs[i], us[i], gs[i], 0.99, 1e-8)
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(eo),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(float(usq[i]), float(eu), rtol=1e-3)
+
+
+@pytest.mark.parametrize("m,n", [(128, 128), (100, 130), (64, 512)])
+@pytest.mark.parametrize("shared", [False, True])
+def test_fused_apply_matches_ref(m, n, shared):
+    key = jax.random.PRNGKey(11)
+    u_hat = jax.random.normal(key, (m, n), jnp.float32)
+    m1 = jax.random.normal(jax.random.fold_in(key, 1), (m, n), jnp.float32)
+    d = jnp.float32(1.7)
+    os_, ss = jnp.float32(2.5), jnp.float32(2.5 if shared else 1.0)
+    got_out, got_m1 = ops.fused_apply(u_hat, m1, d, 0.9, os_, ss,
+                                      shared_out=shared)
+    want_out, want_m1 = ref.fused_apply(u_hat, m1, d, 0.9, os_, ss)
+    np.testing.assert_allclose(np.asarray(got_out), np.asarray(want_out),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_m1), np.asarray(want_m1),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fused_apply_batched_and_b1_zero():
+    key = jax.random.PRNGKey(12)
+    u_hat = jax.random.normal(key, (3, 96, 80), jnp.float32)
+    m1 = jax.random.normal(jax.random.fold_in(key, 1), (3, 96, 80),
+                           jnp.float32)
+    d = jnp.asarray([1.0, 2.0, 0.5], jnp.float32)
+    s = jnp.ones((3,), jnp.float32)
+    out, m1n = ops.fused_apply(u_hat, m1, d, 0.9, s, s)
+    for i in range(3):
+        eo, em = ref.fused_apply(u_hat[i], m1[i], d[i], 0.9, s[i], s[i])
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(eo),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(m1n[i]), np.asarray(em),
+                                   rtol=1e-5, atol=1e-6)
+    # b1 = 0: no first moment, pure scaled copy
+    out0, none = ops.fused_apply(u_hat, None, d, 0.0, s, s)
+    assert none is None
+    np.testing.assert_allclose(np.asarray(out0),
+                               np.asarray(u_hat / d[:, None, None]),
+                               rtol=1e-6)
+
+
 def test_kernel_path_in_optimizer_matches_ref_path():
     """AdapproxConfig(use_kernels=True) must produce the same update as the
     reference path (kernels run in interpret mode here)."""
