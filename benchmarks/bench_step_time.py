@@ -60,6 +60,13 @@ CASES = [
      {"warm_start": True, "n_iter_warm": 1}),
     ("adapprox_refresh5_warm1", "adapprox",
      {"refresh_every": 5, "warm_start": True, "n_iter_warm": 1}),
+    # telemetry collection overhead row: identical config to
+    # adapprox_refresh5_warm1 plus the in-jit snapshot (+ traced cadence,
+    # as --auto-refresh runs it).  Pinned <= 3% wall vs the row above by
+    # tests/test_telemetry.py against the committed JSON.
+    ("adapprox_refresh5_warm1_telemetry", "adapprox",
+     {"refresh_every": 5, "warm_start": True, "n_iter_warm": 1,
+      "telemetry": True, "dynamic_refresh": True}),
     ("adapprox_refresh5_warm1_bucketed", "adapprox",
      {"refresh_every": 5, "warm_start": True, "n_iter_warm": 1,
       "bucketed": True}),
@@ -201,6 +208,11 @@ def collect(quick: bool = False) -> dict:
     derived["speedup_fused_vs_refresh5_warm1"] = round(
         by_name["adapprox_refresh5_warm1"]
         / by_name["adapprox_refresh5_warm1_fused"], 2)
+    # telemetry collection overhead (>= 1.0 means slower than the
+    # telemetry-off row; acceptance: <= 1.03)
+    derived["telemetry_overhead_vs_refresh5_warm1"] = round(
+        by_name["adapprox_refresh5_warm1_telemetry"]
+        / by_name["adapprox_refresh5_warm1"], 3)
     from repro.kernels import ops
     return {
         "benchmark": "optimizer_step_time",

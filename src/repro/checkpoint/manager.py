@@ -103,6 +103,18 @@ class CheckpointManager:
         p = SER.latest_checkpoint(self.directory)
         return SER.checkpoint_step(p) if p else None
 
+    def read_meta(self, step: Optional[int] = None) -> dict:
+        """The ``extra_meta`` dict a checkpoint was saved with (empty when
+        none / no checkpoint exists).  Telemetry uses it to restore the
+        closed-loop controller's accumulators alongside the state."""
+        if step is None:
+            p = SER.latest_checkpoint(self.directory)
+        else:
+            p = self.directory / f"step_{step:09d}"
+            if not (p / "manifest.json").exists():
+                p = None               # never saved, or pruned by retention
+        return SER.read_meta(p) if p is not None else {}
+
     def restore(self, like: Any, shardings: Any = None,
                 step: Optional[int] = None) -> tuple[Any, int]:
         """Restore into the structure of ``like``, re-placed under
@@ -121,8 +133,12 @@ class CheckpointManager:
 
     # -- preemption -----------------------------------------------------------
     def install_preemption_handler(self, get_state: Callable[[], tuple]):
-        """get_state() -> (tree, step). On SIGTERM/SIGINT: blocking save,
-        then hand the signal on.
+        """get_state() -> (tree, step) or (tree, step, extra_meta).  On
+        SIGTERM/SIGINT: blocking save, then hand the signal on.  The
+        optional third element is merged into the checkpoint manifest's
+        meta (the train loop uses it for telemetry controller state); the
+        callable is also where callers flush side channels — it runs
+        BEFORE the save, inside the handler chain.
 
         Previously-installed handlers are CHAINED, not replaced: after the
         flush, a caller-installed Python handler (e.g. the elastic-restart
@@ -137,9 +153,11 @@ class CheckpointManager:
         def handler(signum, frame):
             log.warning("signal %s: writing preemption checkpoint", signum)
             try:
-                tree, step = get_state()
-                self.save(tree, step, blocking=True,
-                          extra_meta={"preempted": True})
+                res = get_state()
+                tree, step = res[0], res[1]
+                extra = dict(res[2]) if len(res) > 2 and res[2] else {}
+                extra["preempted"] = True
+                self.save(tree, step, blocking=True, extra_meta=extra)
             finally:
                 # Even a failed flush (disk full, dead ckpt dir) must hand
                 # the signal on: restore the originals and chain, or the

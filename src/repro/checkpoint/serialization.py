@@ -169,3 +169,9 @@ def restore_pytree(ckpt_dir: "str | Path", like: Any,
 def checkpoint_step(ckpt_dir: "str | Path") -> int:
     manifest = json.loads((Path(ckpt_dir) / "manifest.json").read_text())
     return int(manifest["step"])
+
+
+def read_meta(ckpt_dir: "str | Path") -> dict:
+    """The ``extra_meta`` dict recorded in the manifest (empty if none)."""
+    manifest = json.loads((Path(ckpt_dir) / "manifest.json").read_text())
+    return dict(manifest.get("meta") or {})

@@ -247,6 +247,15 @@ class OptimizerConfig:
     # (kernels/fused_update.py); bit-exact vs the unfused path when
     # guidance="off", fp-tolerance otherwise.
     fused_update: bool = False
+    # telemetry subsystem (repro.telemetry; both default-off => the state
+    # pytree and the update arithmetic are unchanged vs pre-telemetry):
+    # telemetry carries a fixed-shape per-step TelemetrySnapshot (per-leaf
+    # xi / rank / clip activation + refresh-vs-fold counters) inside the
+    # adapprox state; dynamic_refresh promotes refresh_every to a traced
+    # int32 state scalar so the closed-loop controller can retune the
+    # cadence at runtime with zero recompilation.
+    telemetry: bool = False
+    dynamic_refresh: bool = False
     min_dim_factor: int = 128       # factor leaves with min(m, n) >= this
     factor_dtype: str = "float32"   # "int8": quantized factors
     seed: int = 0
@@ -257,6 +266,51 @@ class OptimizerConfig:
     b3: float = 0.9999              # instability-statistic decay
     # parameter groups: (label, GroupSpec) pairs -> repro.core.partition
     groups: tuple = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Host-side telemetry + closed-loop refresh control
+    (``repro.telemetry``; see that package's docstring for the JSONL event
+    schema).
+
+    ``enabled`` turns on in-jit collection (``OptimizerConfig.telemetry``)
+    and the per-step host fetch; ``dir`` adds the async JSONL sink
+    (``None`` = collect + control without writing events);
+    ``auto_refresh`` adds the feedback controller, which adapts
+    ``refresh_every`` per parameter group from observed xi drift — it
+    requires the cadence to be traced (``OptimizerConfig.dynamic_refresh``)
+    so retuning never recompiles.  Controller policy: at every
+    ``interval``-step boundary, the interval-mean xi per group is compared
+    against a hysteresis band — ``>= xi_high`` divides the cadence by
+    ``tighten_div`` (refresh more often; xi is regressing toward the
+    warm-start drift guard), ``<= xi_low`` for ``relax_patience``
+    consecutive intervals adds ``relax_add`` (refresh less often; the
+    basis is tracking well), in between nothing moves.  Cadences are
+    clamped to [t_min, t_max].
+    """
+
+    enabled: bool = False
+    dir: Optional[str] = None            # JSONL sink directory (None = off)
+    emit_every: int = 1                  # emit events every N steps
+    rotate_bytes: int = 32 * 1024 * 1024
+    auto_refresh: bool = False           # closed-loop cadence controller
+    interval: int = 25                   # steps between cadence decisions
+    t_min: int = 1
+    t_max: int = 50
+    xi_high: float = 0.25                # tighten when interval-mean xi >=
+    xi_low: float = 0.10                 # relax when <= (with patience)
+    relax_patience: int = 2
+    tighten_div: int = 2
+    relax_add: int = 1
+
+    def __post_init__(self):
+        if self.emit_every < 1:
+            raise ValueError(f"emit_every must be >= 1, "
+                             f"got {self.emit_every}")
+        if self.rotate_bytes < 1:
+            raise ValueError(f"rotate_bytes must be >= 1, "
+                             f"got {self.rotate_bytes}")
 
 
 @dataclasses.dataclass(frozen=True)

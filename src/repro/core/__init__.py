@@ -81,6 +81,25 @@ baseline):
   Bucketing's win is HLO size / launch count, which CPU wall-time barely
   sees (~1.05x there); it targets many-leaf TPU stacks.
 
+Telemetry & closed-loop refresh control (repro.telemetry; AdapproxConfig /
+OptimizerConfig knobs, default-off => the default chain stays bitwise
+identical):
+
+  * ``telemetry=True`` — ``scale_by_adapprox`` assembles a fixed-shape
+    ``TelemetrySnapshot`` (per-leaf xi / rank / occupancy, clip activation
+    rate, refresh-vs-fold counters) inside the jitted update, from values
+    it already computes: updates stay BITWISE identical to telemetry-off.
+    The snapshot is optimizer state — replicated under sharding,
+    checkpointed, fetched host-side by ``telemetry.TelemetryRuntime``
+    (JSONL sink, per-group metric aggregates in the train-step metrics).
+  * ``dynamic_refresh=True`` — ``refresh_every`` becomes a TRACED int32
+    state scalar: ``telemetry.set_refresh_every`` (or the closed-loop
+    controller, ``--auto-refresh``) retunes the S-RSI cadence per
+    parameter group at runtime with zero recompilation.  The controller
+    tightens the cadence when observed xi drifts toward ``warm_drift_xi``
+    and relaxes it after sustained calm (hysteresis; deterministic and
+    checkpointable, so restarts replay the same decisions).
+
 Sharding: every stateful transformation carries a ``state_sharding_spec``
 hook mapping param PartitionSpecs to state PartitionSpecs;
 ``distributed/sharding.py`` consumes it without knowing any state class.

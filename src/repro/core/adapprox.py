@@ -67,6 +67,8 @@ from repro.core import srsi as S
 from repro.core.transform import (add_decayed_weights, scale,
                                   scale_by_schedule)
 from repro.core.types import GradientTransformation, chain
+from repro.telemetry.snapshot import (TelemetrySnapshot, init_snapshot,
+                                      snapshot_spec)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,6 +111,22 @@ class AdapproxConfig:
                                            # vs the unfused path for
                                            # guidance="off"; see
                                            # tests/test_fused.py)
+    # --- telemetry subsystem (repro.telemetry; both default-off => the
+    # state pytree and the update arithmetic are unchanged)
+    telemetry: bool = False                # carry a fixed-shape
+                                           # TelemetrySnapshot (per-leaf xi /
+                                           # rank / clip activation,
+                                           # refresh-vs-fold counters) in the
+                                           # state; collection reuses values
+                                           # the update already computes, so
+                                           # updates stay BITWISE identical
+                                           # to telemetry=False
+    dynamic_refresh: bool = False          # carry refresh_every as a traced
+                                           # int32 scalar in the state so the
+                                           # closed-loop controller
+                                           # (telemetry/controller.py) can
+                                           # retune the cadence at runtime
+                                           # with ZERO recompilation
 
 
 @jax.tree_util.register_dataclass
@@ -118,10 +136,27 @@ class AdapproxState:
     key: jax.Array                    # base PRNG key
     leaves: tuple                     # per-param FactoredLeaf | DenseLeaf,
                                       # in jax.tree.flatten(params) order
+    telemetry: Optional[TelemetrySnapshot] = None
+                                      # cfg.telemetry: per-step fixed-shape
+                                      # snapshot (None => absent, the state
+                                      # pytree is unchanged vs pre-telemetry)
+    refresh_every: Optional[jnp.ndarray] = None
+                                      # cfg.dynamic_refresh: the S-RSI
+                                      # refresh cadence as a TRACED int32
+                                      # scalar — the controller retunes it
+                                      # without retriggering compilation
 
 
 def _rms(x: jnp.ndarray) -> jnp.ndarray:
     return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)
+
+
+def _refresh_pred(step, refresh_t):
+    """THE refresh-vs-fold predicate: full S-RSI at t = 1, 1+T, 1+2T, ...
+    ``refresh_t`` may be a Python int or a traced int32 scalar
+    (``dynamic_refresh``).  Single definition shared by the update branch
+    dispatch and the telemetry counters, so they can never desynchronize."""
+    return (step % refresh_t) == (1 % refresh_t)
 
 
 def _fused_scalars(usq, m1dot, m1sq, size: int, cfg: AdapproxConfig,
@@ -234,8 +269,17 @@ def _init_leaf(p: jnp.ndarray, cfg: AdapproxConfig):
 
 def _factored_update_2d(g, q, u, k, xi_prev, m1, key, step,
                         cfg: AdapproxConfig,
-                        r_store: int, p_eff: int, k_max_leaf: int):
+                        r_store: int, p_eff: int, k_max_leaf: int,
+                        refresh_t=None):
+    """``refresh_t``: the refresh cadence as a traced int32 scalar
+    (``cfg.dynamic_refresh``) or ``None`` (the compile-time
+    ``cfg.refresh_every`` applies).  Returns one extra trailing output vs
+    the pre-telemetry signature — ``clip_active`` (f32 scalar, 1.0 when
+    the RMS clip engaged) — which is free to compute and dead-code
+    eliminated when the caller drops it (telemetry off)."""
     g32 = g.astype(jnp.float32)
+    dynamic = cfg.dynamic_refresh and refresh_t is not None
+    r_every = refresh_t if dynamic else cfg.refresh_every
     v_op = S.make_implicit_v(q, u, g32, cfg.b2)
 
     # V_t is needed every step for the elementwise update unless the fused
@@ -301,7 +345,7 @@ def _factored_update_2d(g, q, u, k, xi_prev, m1, key, step,
         # --- adaptive rank (Algorithm 2 over the captured-energy CDF)
         k_new = R.select_rank(res.cum_energy, res.frob_sq, cfg.rank,
                               k_max_leaf, step, jnp.minimum(k, k_max_leaf),
-                              refresh_every=cfg.refresh_every)
+                              refresh_every=r_every)
         xi = R.xi_of_k(res.cum_energy, res.frob_sq, k_new)
         mask = S.col_mask(r_store, k_new)
         return res.q * mask[None, :], res.u * mask[None, :], k_new, xi
@@ -319,12 +363,20 @@ def _factored_update_2d(g, q, u, k, xi_prev, m1, key, step,
                      + (1.0 - cfg.b2) * ((g32 * g32).T @ q)) * mask[None, :]
         return q, u_new, k, xi_prev
 
-    if cfg.refresh_every > 1:
+    if dynamic:
+        # Traced cadence: the refresh/fold cond is always present in the
+        # program and the predicate depends only on traced scalars, so a
+        # host-side cadence change re-uses the compiled executable (zero
+        # recompilation — tests/test_telemetry.py).  T = 1 refreshes every
+        # step through the cond (same arithmetic as the direct call).
+        q_new, u_new, k_new, xi = jax.lax.cond(
+            _refresh_pred(step, refresh_t), _refresh, _fold)
+    elif cfg.refresh_every > 1:
         # step counts from 1; refresh at t = 1, 1+T, 1+2T, ...  The scalar
         # predicate is unbatched under vmap, so lax.cond stays a real
         # branch (fold steps never pay for the S-RSI HLO).
-        do_refresh = (step % cfg.refresh_every) == (1 % cfg.refresh_every)
-        q_new, u_new, k_new, xi = jax.lax.cond(do_refresh, _refresh, _fold)
+        q_new, u_new, k_new, xi = jax.lax.cond(
+            _refresh_pred(step, cfg.refresh_every), _refresh, _fold)
     else:
         q_new, u_new, k_new, xi = _refresh()
 
@@ -334,6 +386,7 @@ def _factored_update_2d(g, q, u, k, xi_prev, m1, key, step,
     if cfg.fused_update:
         denom, out_scale, store_scale = _fused_scalars(
             usq, m1dot, m1sq, g32.size, cfg, need_guid)
+        clip_active = (denom > 1.0).astype(jnp.float32)
         if cfg.b1 > 0:
             # guidance "off"/"stored": out_scale == store_scale, so the
             # step direction IS the new first moment (same as unfused) —
@@ -344,7 +397,7 @@ def _factored_update_2d(g, q, u, k, xi_prev, m1, key, step,
         else:
             m_out, m1_new = _kernel_ops().fused_apply(
                 u_hat_raw, None, denom, cfg.b1, out_scale, store_scale)
-        return m_out, q_new, u_new, k_new, xi, m1_new
+        return m_out, q_new, u_new, k_new, xi, m1_new, clip_active
 
     # --- elementwise update from V_t (prev factors + fresh G^2), unfused
     if cfg.use_kernels:
@@ -352,7 +405,9 @@ def _factored_update_2d(g, q, u, k, xi_prev, m1, key, step,
     else:
         u_hat = g32 / (jnp.sqrt(vmat) + cfg.eps)
 
-    u_hat = u_hat / jnp.maximum(1.0, _rms(u_hat) / cfg.clip_d)
+    clip_denom = jnp.maximum(1.0, _rms(u_hat) / cfg.clip_d)
+    clip_active = (clip_denom > 1.0).astype(jnp.float32)
+    u_hat = u_hat / clip_denom
 
     # --- first moment over updates + optional cosine guidance
     if cfg.b1 > 0:
@@ -374,7 +429,7 @@ def _factored_update_2d(g, q, u, k, xi_prev, m1, key, step,
     else:
         m_out, m1_new = u_hat, None
 
-    return m_out, q_new, u_new, k_new, xi, m1_new
+    return m_out, q_new, u_new, k_new, xi, m1_new, clip_active
 
 
 def _leaf_meta(w_shape, r_store: int, cfg: AdapproxConfig):
@@ -393,37 +448,41 @@ def _dequant_factors(leaf: F.FactoredLeaf, cfg: AdapproxConfig):
 
 def _run_factored_core(g, q32, u32, k, xi, m1, keys, step,
                        cfg: AdapproxConfig, r_store: int, p_eff: int,
-                       k_max_leaf: int, n_batch: int):
+                       k_max_leaf: int, n_batch: int, refresh_t=None):
     """vmap ``_factored_update_2d`` over ``n_batch`` leading axes — the
     shared engine of the per-leaf path (n_batch = len(batch_dims)) and the
-    bucketed path (one extra stacking axis)."""
+    bucketed path (one extra stacking axis).  ``step`` and ``refresh_t``
+    ride in via closure, so they stay UNbatched scalars under vmap and the
+    refresh/fold ``lax.cond`` remains a real branch."""
     fn = functools.partial(_factored_update_2d, cfg=cfg, r_store=r_store,
                            p_eff=p_eff, k_max_leaf=k_max_leaf)
     # ``m1`` may be None (b1 = 0); None is an empty pytree so it passes
     # through vmap untouched.
-    core = lambda g, q, u, k, xi, m1, key: fn(g, q, u, k, xi, m1, key, step)
+    core = lambda g, q, u, k, xi, m1, key: fn(g, q, u, k, xi, m1, key, step,
+                                              refresh_t=refresh_t)
     mapped = F.vmap_over_batch(core, n_batch)
     return mapped(g, q32, u32, k, xi, m1, keys)
 
 
 def _update_factored(g, leaf: F.FactoredLeaf, w, key, step,
-                     cfg: AdapproxConfig):
+                     cfg: AdapproxConfig, refresh_t=None):
     bd = F.batch_dims(w.shape)
     leaf_q, leaf_u = _dequant_factors(leaf, cfg)
     r_store = leaf_q.shape[-1]
     p_eff, k_max_leaf = _leaf_meta(w.shape, r_store, cfg)
     keys = F.batched_keys(key, bd)
-    m_out, q, u, k, xi, m1 = _run_factored_core(
+    m_out, q, u, k, xi, m1, clip = _run_factored_core(
         g, leaf_q, leaf_u, leaf.k, leaf.xi, leaf.m1, keys, step, cfg,
-        r_store, p_eff, k_max_leaf, len(bd))
+        r_store, p_eff, k_max_leaf, len(bd), refresh_t)
     if cfg.factor_dtype == "int8":
         QZ = _quantized()
         q, u = QZ.quantize(q), QZ.quantize(u)
-    return m_out, F.FactoredLeaf(q=q, u=u, k=k, xi=xi, m1=m1)
+    return (m_out, F.FactoredLeaf(q=q, u=u, k=k, xi=xi, m1=m1),
+            (clip, k_max_leaf))
 
 
 def _update_factored_bucket(gs, leaves, ws, idxs, step_key, step,
-                            cfg: AdapproxConfig):
+                            cfg: AdapproxConfig, refresh_t=None):
     """One vmapped S-RSI + update for a bucket of same-signature leaves.
 
     All leaves share ``(batch_dims, m, n, r_store)`` (see
@@ -450,9 +509,9 @@ def _update_factored_bucket(gs, leaves, ws, idxs, step_key, step,
               if leaves[0].m1 is not None else None)
     keys = jnp.stack([
         F.batched_keys(jax.random.fold_in(step_key, i), bd) for i in idxs])
-    m_out, q, u, k, xi, m1 = _run_factored_core(
+    m_out, q, u, k, xi, m1, clip = _run_factored_core(
         g_stk, q_stk, u_stk, k_stk, xi_stk, m1_stk, keys, step, cfg,
-        r_store, p_eff, k_max_leaf, len(bd) + 1)
+        r_store, p_eff, k_max_leaf, len(bd) + 1, refresh_t)
     results = []
     for j in range(len(idxs)):
         qj, uj = q[j], u[j]
@@ -461,7 +520,8 @@ def _update_factored_bucket(gs, leaves, ws, idxs, step_key, step,
             qj, uj = QZ.quantize(qj), QZ.quantize(uj)
         m1j = m1[j] if m1 is not None else None
         results.append((m_out[j],
-                        F.FactoredLeaf(q=qj, u=uj, k=k[j], xi=xi[j], m1=m1j)))
+                        F.FactoredLeaf(q=qj, u=uj, k=k[j], xi=xi[j], m1=m1j),
+                        (clip[j], k_max_leaf)))
     return results
 
 
@@ -476,23 +536,80 @@ def _update_dense(g, leaf: F.DenseLeaf, cfg: AdapproxConfig):
         denom, out_scale, store_scale = _fused_scalars(
             jnp.sum(jnp.square(u_hat)), None, None, u_hat.size, cfg,
             guidance=False)
+        clip_active = (denom > 1.0).astype(jnp.float32)
         u2 = u_hat.reshape(1, -1)
         if leaf.m1 is not None:
             m_out2, m1_new2 = _kernel_ops().fused_apply(
                 u2, leaf.m1.reshape(1, -1), denom, cfg.b1,
                 out_scale, store_scale, shared_out=True)
             return (m_out2.reshape(u_hat.shape),
-                    F.DenseLeaf(v=v, m1=m1_new2.reshape(u_hat.shape)))
+                    F.DenseLeaf(v=v, m1=m1_new2.reshape(u_hat.shape)),
+                    clip_active)
         m_out2, _ = _kernel_ops().fused_apply(u2, None, denom, cfg.b1,
                                               out_scale, store_scale)
-        return m_out2.reshape(u_hat.shape), F.DenseLeaf(v=v, m1=None)
-    u_hat = u_hat / jnp.maximum(1.0, _rms(u_hat) / cfg.clip_d)
+        return m_out2.reshape(u_hat.shape), F.DenseLeaf(v=v, m1=None), \
+            clip_active
+    clip_denom = jnp.maximum(1.0, _rms(u_hat) / cfg.clip_d)
+    clip_active = (clip_denom > 1.0).astype(jnp.float32)
+    u_hat = u_hat / clip_denom
     if leaf.m1 is not None:
         m1 = cfg.b1 * leaf.m1 + (1.0 - cfg.b1) * u_hat
         m_out = m1
     else:
         m1, m_out = None, u_hat
-    return m_out, F.DenseLeaf(v=v, m1=m1)
+    return m_out, F.DenseLeaf(v=v, m1=m1), clip_active
+
+
+# ---------------------------------------------------------------------------
+# Telemetry assembly (cfg.telemetry; repro.telemetry.snapshot)
+# ---------------------------------------------------------------------------
+
+def _assemble_snapshot(prev: TelemetrySnapshot, step, new_leaves, taps,
+                       refresh_t, cfg: AdapproxConfig) -> TelemetrySnapshot:
+    """Fold this step's per-leaf taps into the fixed-shape snapshot.
+
+    Everything here is a scalar mean over values the update already
+    produced (xi / k live in the new leaves, clip flags in ``taps``) —
+    collection adds no reductions over parameter-sized arrays, which is
+    what keeps its overhead in the noise (see
+    ``adapprox_refresh5_warm1_telemetry`` in BENCH_step_time.json).
+    """
+    f32 = jnp.float32
+    xi, k, k_frac = [], [], []
+    for leaf, tap in zip(new_leaves, taps):
+        if not isinstance(leaf, F.FactoredLeaf):
+            continue
+        _, k_max_leaf = tap
+        xi.append(jnp.mean(leaf.xi))
+        kf = jnp.minimum(leaf.k, k_max_leaf).astype(f32)
+        k.append(jnp.mean(kf))
+        k_frac.append(jnp.mean(kf / k_max_leaf))
+    clip_rate = [jnp.mean(tap[0] if isinstance(tap, tuple) else tap)
+                 for tap in taps]
+
+    def stack(xs, n):
+        return jnp.stack(xs) if xs else jnp.zeros((n,), f32)
+
+    if cfg.dynamic_refresh and refresh_t is not None:
+        t_now = refresh_t
+        did = _refresh_pred(step, t_now).astype(f32)
+    else:
+        t_now = jnp.asarray(cfg.refresh_every, jnp.int32)
+        if cfg.refresh_every > 1:
+            did = _refresh_pred(step, cfg.refresh_every).astype(f32)
+        else:
+            did = jnp.ones((), f32)    # refresh_every=1: every step refreshes
+    return TelemetrySnapshot(
+        step=step,
+        xi=stack(xi, 0), k=stack(k, 0), k_frac=stack(k_frac, 0),
+        clip_rate=stack(clip_rate, len(taps)),
+        did_refresh=did,
+        refresh_steps=prev.refresh_steps + did.astype(jnp.int32),
+        fold_steps=prev.fold_steps + (1 - did).astype(jnp.int32),
+        refresh_every=t_now,
+        leaf_indices=prev.leaf_indices,
+        dense_indices=prev.dense_indices,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -522,7 +639,14 @@ def _state_spec(state: AdapproxState, param_specs) -> AdapproxState:
             leaves.append(_factored_leaf_spec(pspec, has_m1))
         else:
             leaves.append(F.DenseLeaf(v=pspec, m1=pspec if has_m1 else None))
-    return AdapproxState(step=P(), key=P(), leaves=tuple(leaves))
+    # telemetry scalars / per-leaf vectors and the dynamic cadence scalar
+    # are replicated on every device — nothing to shard, no host sync
+    # beyond the existing metric fetch.
+    tel = (snapshot_spec(state.telemetry)
+           if state.telemetry is not None else None)
+    re_spec = P() if state.refresh_every is not None else None
+    return AdapproxState(step=P(), key=P(), leaves=tuple(leaves),
+                         telemetry=tel, refresh_every=re_spec)
 
 
 # ---------------------------------------------------------------------------
@@ -543,30 +667,48 @@ def scale_by_adapprox(cfg: AdapproxConfig) -> GradientTransformation:
     def init(params):
         flat, _ = jax.tree.flatten(params)
         leaves = tuple(_init_leaf(p, cfg) for p in flat)
+        tel = None
+        if cfg.telemetry:
+            fidx = tuple(i for i, l in enumerate(leaves)
+                         if isinstance(l, F.FactoredLeaf))
+            didx = tuple(i for i, l in enumerate(leaves)
+                         if not isinstance(l, F.FactoredLeaf))
+            tel = init_snapshot(len(fidx), len(leaves), cfg.refresh_every,
+                                leaf_indices=fidx, dense_indices=didx)
+        r_every = (jnp.asarray(cfg.refresh_every, jnp.int32)
+                   if cfg.dynamic_refresh else None)
         return AdapproxState(step=jnp.zeros((), jnp.int32),
                              key=jax.random.PRNGKey(cfg.seed),
-                             leaves=leaves)
+                             leaves=leaves, telemetry=tel,
+                             refresh_every=r_every)
 
     def update(grads, state: AdapproxState, params):
         step = state.step + 1              # paper counts from t = 1
         flat_p, treedef = jax.tree.flatten(params)
         flat_g = treedef.flatten_up_to(grads)
         step_key = jax.random.fold_in(state.key, step)
+        refresh_t = state.refresh_every if cfg.dynamic_refresh else None
 
         n_leaves = len(flat_p)
         outs = [None] * n_leaves
         new_leaves = [None] * n_leaves
+        # per-leaf telemetry taps: (clip_active, k_max_leaf | None).  The
+        # clip flag is an output the update computes anyway; when
+        # cfg.telemetry is off nothing consumes it and XLA dead-code
+        # eliminates it, so the off path stays bitwise-identical.
+        taps = [None] * n_leaves
 
         if not cfg.bucketed:
             for i, (g, leaf, w) in enumerate(
                     zip(flat_g, state.leaves, flat_p)):
                 if isinstance(leaf, F.FactoredLeaf):
-                    d, nl = _update_factored(
+                    d, nl, tap = _update_factored(
                         g, leaf, w, jax.random.fold_in(step_key, i),
-                        step, cfg)
+                        step, cfg, refresh_t)
                 else:
-                    d, nl = _update_dense(g, leaf, cfg)
-                outs[i], new_leaves[i] = d, nl
+                    d, nl, clip = _update_dense(g, leaf, cfg)
+                    tap = (clip, None)
+                outs[i], new_leaves[i], taps[i] = d, nl, tap
         else:
             # Bucketed execution: dense leaves update inline; factored
             # leaves group by (batch_dims, m, n, dtype) signature and run
@@ -579,25 +721,33 @@ def scale_by_adapprox(cfg: AdapproxConfig) -> GradientTransformation:
                     buckets.setdefault(
                         F.leaf_signature(w.shape, g.dtype), []).append(i)
                 else:
-                    outs[i], new_leaves[i] = _update_dense(g, leaf, cfg)
+                    d, nl, clip = _update_dense(g, leaf, cfg)
+                    outs[i], new_leaves[i], taps[i] = d, nl, (clip, None)
             for idxs in buckets.values():
                 if len(idxs) == 1:          # singleton: skip stack/unstack
                     i = idxs[0]
-                    outs[i], new_leaves[i] = _update_factored(
+                    outs[i], new_leaves[i], taps[i] = _update_factored(
                         flat_g[i], state.leaves[i], flat_p[i],
-                        jax.random.fold_in(step_key, i), step, cfg)
+                        jax.random.fold_in(step_key, i), step, cfg,
+                        refresh_t)
                     continue
                 res = _update_factored_bucket(
                     [flat_g[i] for i in idxs],
                     [state.leaves[i] for i in idxs],
                     [flat_p[i] for i in idxs],
-                    idxs, step_key, step, cfg)
-                for i, (d, nl) in zip(idxs, res):
-                    outs[i], new_leaves[i] = d, nl
+                    idxs, step_key, step, cfg, refresh_t)
+                for i, (d, nl, tap) in zip(idxs, res):
+                    outs[i], new_leaves[i], taps[i] = d, nl, tap
 
+        tel = None
+        if cfg.telemetry:
+            tel = _assemble_snapshot(state.telemetry, step, new_leaves,
+                                     taps, refresh_t, cfg)
         updates = jax.tree.unflatten(treedef, outs)
         return updates, AdapproxState(step=step, key=state.key,
-                                      leaves=tuple(new_leaves))
+                                      leaves=tuple(new_leaves),
+                                      telemetry=tel,
+                                      refresh_every=state.refresh_every)
 
     return GradientTransformation(init, update, _state_spec)
 

@@ -75,7 +75,8 @@ def _preconditioner(cfg: OptimizerConfig, name: str,
             factor_dtype=cfg.factor_dtype, seed=cfg.seed,
             refresh_every=cfg.refresh_every, warm_start=cfg.warm_start,
             n_iter_warm=cfg.n_iter_warm, warm_drift_xi=cfg.warm_drift_xi,
-            bucketed=cfg.bucketed, fused_update=cfg.fused_update)
+            bucketed=cfg.bucketed, fused_update=cfg.fused_update,
+            telemetry=cfg.telemetry, dynamic_refresh=cfg.dynamic_refresh)
         return scale_by_adapprox(acfg)
     if name == "adamw":
         return scale_by_adam(cfg.b1, cfg.b2, cfg.eps)

@@ -99,7 +99,7 @@ def select_rank_exact(cum_energy: jnp.ndarray, frob_sq: jnp.ndarray,
 def select_rank(cum_energy: jnp.ndarray, frob_sq: jnp.ndarray,
                 cfg: RankConfig, k_max: int, step: jnp.ndarray,
                 k_prev: jnp.ndarray,
-                refresh_every: int = 1) -> jnp.ndarray:
+                refresh_every: "int | jnp.ndarray" = 1) -> jnp.ndarray:
     """Dispatch on mode; only re-selects when ``step % delta_s == 1``
     (paper: "if (t mod Delta_s) = 1"), otherwise keeps ``k_prev``.
 
@@ -111,6 +111,11 @@ def select_rank(cum_energy: jnp.ndarray, frob_sq: jnp.ndarray,
     *refresh indices*: re-select every ceil(delta_s / T)-th refresh, which
     preserves delta_s's wall-step meaning.  ``refresh_every = 1`` is
     bit-identical to the paper rule.
+
+    May be a TRACED int32 scalar (adapprox's ``dynamic_refresh`` mode,
+    where the closed-loop controller retunes the cadence at runtime): the
+    Python two-way dispatch then becomes a ``jnp.where`` select over the
+    same two rules, so cadence changes never retrigger compilation.
     """
     if cfg.mode == "static":
         return k_prev
@@ -118,14 +123,25 @@ def select_rank(cum_energy: jnp.ndarray, frob_sq: jnp.ndarray,
         k_new = select_rank_exact(cum_energy, frob_sq, cfg, k_max)
     else:
         k_new = select_rank_paper_iteration(cum_energy, frob_sq, cfg, k_max)
-    if refresh_every <= 1:
-        # Paper: refresh when (t mod Delta_s) = 1; the modulo keeps
-        # delta_s = 1 meaning "every step".
-        refresh = (step % cfg.delta_s) == (1 % cfg.delta_s)
+    if isinstance(refresh_every, int):
+        if refresh_every <= 1:
+            # Paper: refresh when (t mod Delta_s) = 1; the modulo keeps
+            # delta_s = 1 meaning "every step".
+            refresh = (step % cfg.delta_s) == (1 % cfg.delta_s)
+        else:
+            period = max(1, -(-cfg.delta_s // refresh_every))   # ceil
+            ridx = (step - 1) // refresh_every                   # 0 at t = 1
+            refresh = (ridx % period) == 0
     else:
-        period = max(1, -(-cfg.delta_s // refresh_every))   # ceil
-        ridx = (step - 1) // refresh_every                   # 0 at t = 1
-        refresh = (ridx % period) == 0
+        t = refresh_every
+        # ceil(delta_s / T) with traced T; clamp T >= 1 so the amortized
+        # rule's divisions stay defined on the (never-taken) T <= 1 side.
+        t_safe = jnp.maximum(t, 1)
+        period = jnp.maximum(1, -(-cfg.delta_s // t_safe))
+        ridx = (step - 1) // t_safe
+        refresh = jnp.where(t <= 1,
+                            (step % cfg.delta_s) == (1 % cfg.delta_s),
+                            (ridx % period) == 0)
     return jnp.where(refresh, k_new, k_prev)
 
 

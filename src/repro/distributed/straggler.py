@@ -11,6 +11,12 @@ Detection: robust z-score (median / MAD) over a sliding window of per-step
   2. re-shuffle data assignment away from the slow host (cheap),
   3. request replacement + checkpoint-restart (the elastic path,
      distributed/elastic.py) when slowness persists.
+
+Observability: pass a ``repro.telemetry.TelemetrySink`` and every flag /
+escalation is emitted as a ``kind="straggler"`` event on the SAME stream
+(and schema) the optimizer telemetry uses — one event log per run instead
+of a private side channel.  The ``escalations`` list keeps working either
+way (the elastic-restart policy layer consumes it).
 """
 from __future__ import annotations
 
@@ -31,13 +37,24 @@ class StragglerConfig:
 
 class StragglerMonitor:
     def __init__(self, cfg: StragglerConfig = StragglerConfig(),
-                 escalate: Optional[Callable[[str], None]] = None):
+                 escalate: Optional[Callable[[str], None]] = None,
+                 sink=None):
         self.cfg = cfg
         self.times: Deque[float] = collections.deque(maxlen=cfg.window)
         self.flags = 0
+        self.n_steps = 0
         self.escalations: list[str] = []
         self._escalate = escalate or self.escalations.append
+        self._sink = sink
         self._t0: Optional[float] = None
+
+    def _emit(self, event: str, step_time: float, z: float):
+        if self._sink is None:
+            return
+        self._sink.emit({
+            "kind": "straggler", "event": event, "n_steps": self.n_steps,
+            "step_time_s": float(step_time), "median_s": self.median,
+            "z": float(z), "flags": self.flags})
 
     # -- timing helpers -----------------------------------------------------
     def start(self):
@@ -52,19 +69,23 @@ class StragglerMonitor:
     def observe(self, step_time: float) -> bool:
         """Feed one step duration; returns True if this step is flagged."""
         flagged = False
+        z = 0.0
         if len(self.times) >= self.cfg.min_steps:
             med = statistics.median(self.times)
             mad = statistics.median(abs(t - med) for t in self.times) + 1e-9
             z = 0.6745 * (step_time - med) / mad
             flagged = z > self.cfg.z_thresh
         self.times.append(step_time)
+        self.n_steps += 1
         if flagged:
             self.flags += 1
+            self._emit("flagged", step_time, z)
             if self.flags >= self.cfg.persist:
                 self._escalate(
                     f"straggler persisted {self.flags} steps "
                     f"(last={step_time:.3f}s median="
                     f"{statistics.median(self.times):.3f}s)")
+                self._emit("escalated", step_time, z)
                 self.flags = 0
         else:
             self.flags = 0

@@ -21,6 +21,12 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --cell train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
   REPRO_DRYRUN_DEVICES=8 python -m repro.launch.dryrun --preset test
+
+``--telemetry-dir DIR`` additionally streams one ``kind="dryrun_cell"``
+JSONL event per compiled cell (plus a ``run_meta`` header) through the
+shared ``repro.telemetry`` sink — the same stream/schema the training
+telemetry uses, so CI can validate the event pipeline without running a
+training step (``python -m repro.telemetry.validate DIR``).
 """
 import argparse
 import collections
@@ -322,10 +328,20 @@ def main(argv=None):
     ap.add_argument("--out", default=str(DEFAULT_OUT))
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--preset", default=None, choices=[None, "test"])
+    ap.add_argument("--telemetry-dir", default=None,
+                    help="emit one dryrun_cell JSONL event per compiled "
+                         "cell (repro.telemetry schema)")
     args = ap.parse_args(argv)
 
     out_dir = Path(args.out)
     smoke = args.preset == "test"
+
+    sink = None
+    if args.telemetry_dir:
+        from repro.telemetry import SinkConfig, TelemetrySink
+        sink = TelemetrySink(SinkConfig(directory=args.telemetry_dir))
+        sink.emit({"kind": "run_meta", "source": "launch.dryrun",
+                   "argv": list(argv) if argv is not None else sys.argv[1:]})
 
     archs = ASSIGNED if args.arch == "all" else args.arch.split(",")
     cells = list(CELLS) if args.cell == "all" else args.cell.split(",")
@@ -347,6 +363,17 @@ def main(argv=None):
                                force=args.force,
                                mesh_override=mesh_override)
                 peak = rec["memory"]["peak_bytes"] or 0
+                if sink is not None:
+                    sink.emit({
+                        "kind": "dryrun_cell", "arch": rec["arch"],
+                        "cell": rec["cell"], "mesh": rec["mesh"],
+                        "devices": rec["devices"],
+                        "flops": float(rec["flops"]),
+                        "bytes_accessed": float(rec["bytes_accessed"]),
+                        "peak_bytes": float(peak),
+                        "collective_bytes": float(rec["collective_bytes"]),
+                        "compile_s": float(rec.get("compile_s", 0.0)),
+                        "params": float(rec["params"])})
                 print(f"OK   {tag}: flops/dev={rec['flops']:.3g} "
                       f"coll={rec['collective_bytes']:.3g}B "
                       f"peak={peak / 2**30:.2f}GiB "
@@ -355,6 +382,10 @@ def main(argv=None):
                 failures.append((tag, e))
                 traceback.print_exc()
                 print(f"FAIL {tag}: {e}", flush=True)
+    if sink is not None:
+        sink.close()
+        print(f"telemetry: {len(sink.paths())} event file(s) under "
+              f"{args.telemetry_dir}")
     for (a, c), why in SKIPS.items():
         if a in archs and c in cells:
             print(f"SKIP {a} x {c}: {why}")

@@ -21,6 +21,13 @@ to get virtual devices for the mesh.
 ``partition`` chain: dense bias-corrected Adam on 1-D/small leaves,
 Adapprox on matrices — per-layer sensitivity without blanket
 factorization (Kalra et al., 2025 / Shazeer & Stern, 2018).
+
+Telemetry: ``--telemetry-dir DIR`` streams per-group optimizer snapshots
+(xi / rank / clip activation / refresh counters) and straggler events as
+schema-validated JSONL (``repro.telemetry``); ``--auto-refresh`` adds the
+closed-loop controller, which adapts each group's S-RSI refresh cadence
+from observed xi drift at runtime — the cadence is a traced state scalar,
+so retunes never recompile the step.
 """
 from __future__ import annotations
 
@@ -39,7 +46,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointConfig
-from repro.config import OptimizerConfig, default_mixed_groups
+from repro.config import (OptimizerConfig, TelemetryConfig,
+                          default_mixed_groups)
 from repro.configs import get_config, get_smoke_config
 from repro.core import build_optimizer
 from repro.data import DataConfig
@@ -53,7 +61,8 @@ log = logging.getLogger(__name__)
 def optimizer_config(name: str, steps: int, lr: float,
                      refresh_every: int = 1, warm_start: bool = False,
                      bucketed: bool = False, fused_update: bool = False,
-                     mixed_groups: bool = False) -> OptimizerConfig:
+                     mixed_groups: bool = False, telemetry: bool = False,
+                     dynamic_refresh: bool = False) -> OptimizerConfig:
     """The launcher's OptimizerConfig: cosine schedule derived from the run
     length, paper-faithful Adapprox adaptive-rank settings.  The amortized-
     refresh knobs (refresh_every / warm_start / bucketed, adapprox only)
@@ -71,7 +80,9 @@ def optimizer_config(name: str, steps: int, lr: float,
                                min_dim_factor=64, implicit=False,
                                refresh_every=refresh_every,
                                warm_start=warm_start, bucketed=bucketed,
-                               fused_update=fused_update)
+                               fused_update=fused_update,
+                               telemetry=telemetry,
+                               dynamic_refresh=dynamic_refresh)
     if name in ("adamw", "adafactor", "came"):
         # the factored group inherits the family, so --mixed-groups is a
         # matrices/rest split of the SAME optimizer here (dense Adam on
@@ -136,6 +147,15 @@ def main(argv=None):
                          "adapprox on matrices (default for adapprox)")
     mg.add_argument("--no-mixed-groups", dest="mixed_groups",
                     action="store_false")
+    ap.add_argument("--telemetry-dir", default=None,
+                    help="stream optimizer/straggler telemetry as JSONL "
+                         "events here (repro.telemetry schema)")
+    ap.add_argument("--telemetry-every", type=int, default=1,
+                    help="emit optimizer events every N steps")
+    ap.add_argument("--auto-refresh", action="store_true",
+                    help="adapprox: closed-loop controller retunes "
+                         "refresh_every per group from observed xi drift "
+                         "(implies in-jit telemetry + dynamic cadence)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--log-every", type=int, default=20)
@@ -149,11 +169,22 @@ def main(argv=None):
            if args.smoke else get_config(args.arch))
     mesh = parse_mesh(args.mesh) if args.mesh else None
     model = build_model(cfg, mesh)
+    telemetry_on = args.telemetry_dir is not None or args.auto_refresh
     opt = build_optimizer(optimizer_config(
         args.optimizer, args.steps, args.lr,
         refresh_every=args.refresh_every, warm_start=args.warm_start,
         bucketed=args.bucketed, fused_update=args.fused_update,
-        mixed_groups=mixed))
+        mixed_groups=mixed, telemetry=telemetry_on,
+        dynamic_refresh=args.auto_refresh))
+    runtime = None
+    if telemetry_on:
+        from repro.telemetry import TelemetryRuntime
+        runtime = TelemetryRuntime(TelemetryConfig(
+            enabled=True, dir=args.telemetry_dir,
+            emit_every=args.telemetry_every,
+            auto_refresh=args.auto_refresh))
+        log.info("telemetry on (dir=%s, auto_refresh=%s)",
+                 args.telemetry_dir, args.auto_refresh)
     data_cfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
                           global_batch=args.batch)
 
@@ -170,12 +201,18 @@ def main(argv=None):
     ckpt = (CheckpointConfig(directory=args.ckpt_dir,
                              save_every=args.ckpt_every)
             if args.ckpt_dir else None)
-    state, history = train(
-        model, opt, data_cfg,
-        LoopConfig(total_steps=args.steps, log_every=args.log_every,
-                   ckpt=ckpt),
-        state_shardings=state_shardings, batch_shardings=batch_shardings,
-        install_signal_handler=ckpt is not None)
+    try:
+        state, history = train(
+            model, opt, data_cfg,
+            LoopConfig(total_steps=args.steps, log_every=args.log_every,
+                       ckpt=ckpt),
+            state_shardings=state_shardings,
+            batch_shardings=batch_shardings,
+            telemetry=runtime,
+            install_signal_handler=ckpt is not None)
+    finally:
+        if runtime is not None:
+            runtime.close()
     if history:
         print(f"final loss: {history[-1]['loss']:.4f} "
               f"({history[-1]['step_time_s'] * 1e3:.0f} ms/step)")

@@ -1,0 +1,69 @@
+"""repro.telemetry — optimizer observability + closed-loop refresh control.
+
+The paper's mechanism is *adaptive*: rank follows the observed relative
+error xi.  This package makes that observability a production surface and
+closes the remaining control loop (the S-RSI refresh cadence) on top of
+it.  Three layers:
+
+  In-jit collection (snapshot.py; gated by ``AdapproxConfig.telemetry``)
+      ``TelemetrySnapshot`` — a fixed-shape pytree of per-leaf xi,
+      effective rank k, rank occupancy k/k_max, update-RMS clip
+      activation, refresh-vs-fold step counters and the cadence in
+      effect — assembled inside ``scale_by_adapprox.update`` from values
+      the update already computes (updates stay BITWISE identical to
+      telemetry-off) and carried in the optimizer state: it rides the
+      sharded train step (every leaf replicated, ``snapshot_spec``),
+      checkpoints with the state, and reaches the host on the train
+      loop's existing post-step sync.  ``collect.py`` walks any
+      chain/partition state for named snapshots and scalar aggregates
+      (``telemetry_metrics`` runs inside the jitted step).
+
+  Host-side sink (sink.py)
+      ``TelemetrySink`` — async, buffered JSONL writer with size-based
+      rotation (``events-NNNNN.jsonl``).  ONE event stream, one schema,
+      shared by the optimizer snapshots, cadence decisions, the
+      straggler monitor and the dry-run driver; ``validate_event`` /
+      ``validate_dir`` are the machine-checkable schema CI runs
+      (``python -m repro.telemetry.validate DIR``).
+
+  Closed-loop controller (controller.py + runtime.py; ``--auto-refresh``)
+      ``RefreshController`` — deterministic, checkpointable hysteresis
+      feedback that retunes ``refresh_every`` per parameter group from
+      observed xi drift: tighten (divide) when xi regresses toward the
+      warm-start drift guard, relax (add) after sustained calm, dead
+      band in between.  Requires ``AdapproxConfig.dynamic_refresh``,
+      which carries the cadence as a traced int32 state scalar — retunes
+      NEVER recompile (tests/test_telemetry.py pins the jit cache size).
+      ``TelemetryRuntime`` is the train-loop handle tying all three
+      together (``train_loop.train(..., telemetry=runtime)``).
+
+JSONL event schema (version 1; authoritative machine form in
+``sink.EVENT_SCHEMA``).  Every line is one JSON object with ``"schema":
+1`` and a ``"kind"``:
+
+  kind="optimizer"  — one per Adapprox group per ``emit_every`` steps:
+      step, group, refresh_every, did_refresh, refresh_steps, fold_steps,
+      clip_rate; plus per-leaf vectors xi / k / k_frac (+ leaf_indices
+      into param flatten order) and mean/max aggregates when the group
+      has factored leaves.
+  kind="cadence"    — a controller decision:
+      step, group, old, new, interval_mean_xi.
+  kind="straggler"  — StragglerMonitor flag/escalation:
+      event ("flagged" | "escalated"), n_steps, step_time_s, median_s
+      (+ z, flags).
+  kind="dryrun_cell" — one compiled dry-run cell (launch/dryrun.py
+      --telemetry-dir): arch, cell, mesh, devices, flops, bytes_accessed
+      (+ peak_bytes, collective_bytes, compile_s, params).
+  kind="run_meta"   — stream header: source (+ argv, config, note).
+"""
+from repro.telemetry.collect import (get_refresh_every, named_snapshots,
+                                     named_states, set_refresh_every,
+                                     telemetry_metrics)
+from repro.telemetry.controller import (CadenceChange, ControllerConfig,
+                                        RefreshController)
+from repro.telemetry.runtime import TelemetryRuntime
+from repro.telemetry.sink import (EVENT_SCHEMA, SCHEMA_VERSION, SinkConfig,
+                                  TelemetrySink, validate_dir,
+                                  validate_event, validate_file)
+from repro.telemetry.snapshot import (TelemetrySnapshot, init_snapshot,
+                                      snapshot_spec)

@@ -1,0 +1,142 @@
+"""Walk optimizer-state pytrees for telemetry: find every Adapprox
+instance (chains, ``partition`` groups, arbitrary nesting), name it by its
+parameter group, read its :class:`~repro.telemetry.snapshot.TelemetrySnapshot`,
+and get/set its dynamic refresh cadence.
+
+Group naming: states inside a ``partition`` are named by their group label
+(the ``PartitionState.inner`` dict key, e.g. ``"factored"`` in the
+production mixed chain); a bare chain's single instance is ``"default"``.
+
+All functions are pure pytree walks (``tree_map_with_path`` with the
+Adapprox state class as the leaf type), so they work on live device
+arrays, host arrays, and tracers alike — :func:`telemetry_metrics` runs
+INSIDE the jitted train step.  Imports of ``repro.core`` are deferred to
+call time to keep ``repro.telemetry`` import-cycle-free (core imports the
+snapshot module).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _adapprox_cls():
+    from repro.core.adapprox import AdapproxState
+    return AdapproxState
+
+
+def _group_name(path) -> str:
+    """Last dict key on the path (partition group label), else 'default'."""
+    name = "default"
+    for entry in path:
+        key = getattr(entry, "key", None)
+        if isinstance(key, str):
+            name = key
+    return name
+
+
+def named_states(opt_state) -> "dict[str, Any]":
+    """``{group_name: AdapproxState}`` for every Adapprox instance inside
+    an (arbitrarily nested) optimizer state."""
+    cls = _adapprox_cls()
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        opt_state, is_leaf=lambda x: isinstance(x, cls))
+    out = {}
+    for path, leaf in flat:
+        if isinstance(leaf, cls):
+            out[_group_name(path)] = leaf
+    return out
+
+
+def named_snapshots(opt_state) -> "dict[str, Any]":
+    """``{group_name: TelemetrySnapshot}`` for every Adapprox instance
+    that carries one (``cfg.telemetry``); empty dict when telemetry is
+    off everywhere."""
+    return {name: st.telemetry for name, st in named_states(opt_state).items()
+            if st.telemetry is not None}
+
+
+def get_refresh_every(opt_state) -> "dict[str, Optional[int]]":
+    """Current refresh cadence per group; ``None`` for groups whose
+    cadence is compile-time static (``dynamic_refresh`` off)."""
+    import numpy as np
+    out = {}
+    for name, st in named_states(opt_state).items():
+        out[name] = (int(np.asarray(st.refresh_every))
+                     if st.refresh_every is not None else None)
+    return out
+
+
+def set_refresh_every(opt_state, changes: "dict[str, int] | int"):
+    """Return a copy of ``opt_state`` with the dynamic refresh cadence of
+    the named groups replaced (an int applies to every dynamic group).
+
+    The cadence is a traced int32 state scalar, so feeding the returned
+    state back into the jitted train step re-uses the compiled executable
+    — zero recompilation.  The replacement scalar is placed under the old
+    leaf's sharding (replicated) when one exists.  Groups without a
+    dynamic cadence (``dynamic_refresh`` off) raise ``ValueError`` when
+    named explicitly.
+    """
+    cls = _adapprox_cls()
+    if not isinstance(changes, dict):
+        changes = {name: int(changes)
+                   for name, st in named_states(opt_state).items()
+                   if st.refresh_every is not None}
+    applied = set()
+
+    def one(path, leaf):
+        if not isinstance(leaf, cls):
+            return leaf
+        name = _group_name(path)
+        if name not in changes:
+            return leaf
+        if leaf.refresh_every is None:
+            raise ValueError(
+                f"group {name!r} has no dynamic refresh cadence; build it "
+                f"with dynamic_refresh=True to control it at runtime")
+        value = int(changes[name])
+        if value < 1:
+            raise ValueError(f"refresh_every must be >= 1, got {value}")
+        applied.add(name)
+        new = jnp.asarray(value, jnp.int32)
+        old = leaf.refresh_every
+        # Mirror the old scalar's placement EXACTLY: device_put yields a
+        # COMMITTED array, and a committed-vs-uncommitted argument flips
+        # jit's sharding resolution — two silent relowerings right after a
+        # cadence change (observed; pinned by the zero-recompile test).
+        # Only re-place when the old leaf was itself committed (the
+        # mesh-sharded path, where in_shardings expect the placement).
+        if getattr(old, "_committed", False) and \
+                getattr(old, "sharding", None) is not None:
+            new = jax.device_put(new, old.sharding)
+        return dataclasses.replace(leaf, refresh_every=new)
+
+    out = jax.tree_util.tree_map_with_path(
+        one, opt_state, is_leaf=lambda x: isinstance(x, cls))
+    missing = set(changes) - applied
+    if missing:
+        raise ValueError(f"no Adapprox group named {sorted(missing)}; "
+                         f"known: {sorted(named_states(opt_state))}")
+    return out
+
+
+def telemetry_metrics(opt_state) -> dict:
+    """Scalar per-group aggregates of every snapshot in ``opt_state`` —
+    jit-traceable, so ``train/steps.py`` folds them into the step metrics
+    (empty dict when telemetry is off: the metrics pytree is unchanged)."""
+    out = {}
+    for name, snap in named_snapshots(opt_state).items():
+        pre = f"telemetry/{name}/"
+        if snap.xi.shape[0] > 0:
+            out[pre + "mean_xi"] = jnp.mean(snap.xi)
+            out[pre + "max_xi"] = jnp.max(snap.xi)
+            out[pre + "mean_k"] = jnp.mean(snap.k)
+            out[pre + "mean_k_frac"] = jnp.mean(snap.k_frac)
+        out[pre + "clip_rate"] = jnp.mean(snap.clip_rate)
+        out[pre + "refresh_every"] = snap.refresh_every
+        out[pre + "did_refresh"] = snap.did_refresh
+    return out

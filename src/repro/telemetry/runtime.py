@@ -1,0 +1,183 @@
+"""``TelemetryRuntime`` — the train loop's single telemetry handle.
+
+Owns the JSONL sink and the closed-loop refresh controller, and runs the
+per-step host side of the subsystem:
+
+    state, metrics = jitted_step(state, batch)     # snapshot rides inside
+    state = runtime.on_step(step, state)           # fetch -> emit -> control
+
+``on_step`` fetches the (replicated, scalar-sized) snapshots from the
+optimizer state — the loop has already blocked on the loss, so this adds
+no extra device sync — emits one ``optimizer`` event per group per
+``emit_every`` steps, feeds the controller, and when the controller moves
+a group's cadence, writes the new traced scalar back into the state
+(:func:`repro.telemetry.collect.set_refresh_every`; zero recompilation).
+
+Checkpoint integration: :meth:`manifest_meta` returns the controller
+state + current cadences for the checkpoint manifest, and
+:meth:`restore_meta` reloads them, so a killed-and-restored run
+reproduces the exact cadence-change sequence (the cadence scalar itself
+lives in the optimizer state and restores with it).  :meth:`flush` rides
+the preemption handler chain (sink drained before the signal is handed
+on).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Optional
+
+import jax
+import numpy as np
+
+log = logging.getLogger(__name__)
+
+from repro.config import TelemetryConfig
+from repro.telemetry import collect
+from repro.telemetry.controller import ControllerConfig, RefreshController
+from repro.telemetry.sink import SinkConfig, TelemetrySink
+
+
+def _controller_cfg(cfg: TelemetryConfig) -> ControllerConfig:
+    return ControllerConfig(
+        interval=cfg.interval, t_min=cfg.t_min, t_max=cfg.t_max,
+        xi_high=cfg.xi_high, xi_low=cfg.xi_low,
+        relax_patience=cfg.relax_patience, tighten_div=cfg.tighten_div,
+        relax_add=cfg.relax_add)
+
+
+class TelemetryRuntime:
+    def __init__(self, cfg: TelemetryConfig,
+                 sink: Optional[TelemetrySink] = None):
+        self.cfg = cfg
+        if sink is None and cfg.dir is not None:
+            sink = TelemetrySink(SinkConfig(directory=cfg.dir,
+                                            rotate_bytes=cfg.rotate_bytes))
+        self.sink = sink
+        self.controller = (RefreshController(_controller_cfg(cfg))
+                           if cfg.auto_refresh else None)
+        self.cadence_log: "list[tuple[int, str, int, int]]" = []
+        self._cadence: "dict[str, int]" = {}
+        self._checked_dynamic = False
+        self._warned_no_snaps = False
+
+    # -- per-step ----------------------------------------------------------
+    def on_step(self, step: int, state):
+        """Process one completed step.  ``state`` is the TrainState the
+        jitted step returned (or a bare optimizer state); returns it,
+        possibly with retuned cadence scalars."""
+        opt_state = getattr(state, "opt_state", state)
+        snaps = collect.named_snapshots(opt_state)
+        if self.controller is not None and not self._checked_dynamic:
+            # Fail on the FIRST step, not at the first cadence decision
+            # (which lands interval steps — possibly hours — into the
+            # run): auto_refresh needs in-jit collection to observe xi
+            # AND at least one group with a traced cadence to act on.
+            # This must run before the empty-snapshots early return, or
+            # a collection-off optimizer trains the whole run at a fixed
+            # cadence while the operator believes the loop is closed.
+            if not snaps:
+                raise ValueError(
+                    "auto_refresh is on but the optimizer carries no "
+                    "telemetry snapshots; build it with telemetry=True")
+            if all(v is None
+                   for v in collect.get_refresh_every(opt_state).values()):
+                raise ValueError(
+                    "auto_refresh is on but no optimizer group carries a "
+                    "dynamic refresh cadence; build the optimizer with "
+                    "dynamic_refresh=True")
+            self._checked_dynamic = True
+        if not snaps:
+            if not self._warned_no_snaps and self.cfg.enabled:
+                # Sink-only misconfig (optimizer built without
+                # telemetry=True): no error — the stream legitimately
+                # carries straggler events for non-adapprox optimizers —
+                # but say it once instead of silently emitting nothing.
+                log.warning(
+                    "telemetry runtime is enabled but the optimizer "
+                    "carries no snapshots; no optimizer events will be "
+                    "emitted (build it with telemetry=True to collect)")
+                self._warned_no_snaps = True
+            return state
+        if self.controller is None and not (
+                self.sink is not None and step % self.cfg.emit_every == 0):
+            # nothing will consume the snapshots this step: skip the
+            # device fetch — emit_every exists to bound telemetry
+            # overhead, and the host round-trip is the dominant cost
+            return state
+        host = jax.device_get(snaps)
+        changes = {}
+        for name in sorted(host):
+            snap = host[name]
+            t_now = int(np.asarray(snap.refresh_every))
+            self._cadence[name] = t_now
+            if self.sink is not None and step % self.cfg.emit_every == 0:
+                self.sink.emit(self._optimizer_event(step, name, snap))
+            if self.controller is not None and snap.xi.shape[0] > 0:
+                change = self.controller.observe(
+                    step, name, float(np.mean(snap.xi)), t_now)
+                if change is not None:
+                    changes[name] = change.new
+                    self.cadence_log.append(
+                        (change.step, name, change.old, change.new))
+                    if self.sink is not None:
+                        self.sink.emit({
+                            "kind": "cadence", "step": change.step,
+                            "group": name, "old": change.old,
+                            "new": change.new,
+                            "interval_mean_xi": change.interval_mean_xi})
+        if changes:
+            new_opt = collect.set_refresh_every(opt_state, changes)
+            self._cadence.update(changes)
+            if opt_state is state:
+                return new_opt
+            return dataclasses.replace(state, opt_state=new_opt)
+        return state
+
+    @staticmethod
+    def _optimizer_event(step: int, group: str, snap) -> dict:
+        ev = {
+            "kind": "optimizer", "step": int(step), "group": group,
+            "refresh_every": int(np.asarray(snap.refresh_every)),
+            "did_refresh": bool(np.asarray(snap.did_refresh) > 0),
+            "refresh_steps": int(np.asarray(snap.refresh_steps)),
+            "fold_steps": int(np.asarray(snap.fold_steps)),
+            "clip_rate": float(np.mean(snap.clip_rate)),
+        }
+        if snap.xi.shape[0] > 0:
+            xi = np.asarray(snap.xi)
+            k = np.asarray(snap.k)
+            kf = np.asarray(snap.k_frac)
+            ev.update(xi=xi.tolist(), k=k.tolist(), k_frac=kf.tolist(),
+                      mean_xi=float(xi.mean()), max_xi=float(xi.max()),
+                      mean_k=float(k.mean()), mean_k_frac=float(kf.mean()),
+                      leaf_indices=list(snap.leaf_indices))
+        return ev
+
+    # -- checkpoint integration --------------------------------------------
+    def manifest_meta(self) -> dict:
+        """Controller state + dynamic cadences for the checkpoint
+        manifest (JSON-safe)."""
+        meta = {"cadence": dict(self._cadence),
+                "cadence_log": [list(c) for c in self.cadence_log]}
+        if self.controller is not None:
+            meta["controller"] = self.controller.state_dict()
+        return {"telemetry": meta}
+
+    def restore_meta(self, meta: Optional[dict]) -> None:
+        tel = (meta or {}).get("telemetry")
+        if not tel:
+            return
+        self._cadence = {k: int(v) for k, v in tel.get("cadence", {}).items()}
+        self.cadence_log = [tuple(c) for c in tel.get("cadence_log", [])]
+        if self.controller is not None and "controller" in tel:
+            self.controller.load_state_dict(tel["controller"])
+
+    # -- lifecycle -----------------------------------------------------------
+    def flush(self) -> None:
+        if self.sink is not None:
+            self.sink.flush()
+
+    def close(self) -> None:
+        if self.sink is not None:
+            self.sink.close()

@@ -1,0 +1,102 @@
+"""In-jit telemetry state: the fixed-shape ``TelemetrySnapshot`` pytree.
+
+One snapshot per ``scale_by_adapprox`` instance (so a ``partition`` chain
+carries one per group that runs Adapprox).  It is assembled INSIDE the
+jitted optimizer update from quantities the update already computes —
+collection adds no extra reductions over the parameter arrays beyond a
+handful of per-leaf scalar means — and rides out of the jitted train step
+as part of the optimizer state, so it:
+
+  * needs no extra host sync (the train loop already blocks on the loss;
+    the host fetch of these scalars piggybacks on that),
+  * is checkpointed with the state (cumulative counters survive restarts
+    bit-exactly, which is what makes the closed-loop controller's
+    decisions reproducible across kill/restore),
+  * shards trivially: every leaf is a scalar or a small per-leaf vector,
+    replicated on every device (``snapshot_spec``).
+
+Every array has a FIXED shape derived from the parameter tree (number of
+leaves / number of factored leaves), so enabling telemetry never changes
+shapes step to step and the jit cache stays warm.
+
+``leaf_indices`` / ``dense_indices`` are *static* pytree metadata mapping
+the vector entries back to positions in ``jax.tree.flatten(params)``
+order — they live in the treedef, not in any array.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TelemetrySnapshot:
+    """Per-step optimizer telemetry for one Adapprox instance.
+
+    step:          int32 scalar — optimizer step the snapshot describes
+                   (counts from 1; 0 = freshly initialised, nothing ran).
+    xi:            (n_factored,) f32 — per-leaf approximation error rate
+                   (mean over the leaf's batch dims).
+    k:             (n_factored,) f32 — per-leaf effective rank (mean over
+                   batch dims).
+    k_frac:        (n_factored,) f32 — rank occupancy k / k_max per leaf.
+    clip_rate:     (n_leaves,) f32, param flatten order — fraction of the
+                   leaf's matrices whose update-RMS clip was ACTIVE this
+                   step (RMS(u) > d).
+    did_refresh:   f32 scalar — 1.0 if this step ran a full S-RSI refresh,
+                   0.0 if it folded under the frozen basis.
+    refresh_steps: int32 scalar — cumulative refresh-step count.
+    fold_steps:    int32 scalar — cumulative fold-step count
+                   (refresh_steps + fold_steps == step).
+    refresh_every: int32 scalar — the cadence in effect this step (the
+                   traced value under ``dynamic_refresh``, else the
+                   config constant).
+    leaf_indices:  static tuple — flat param index of each ``xi``/``k``
+                   entry (factored leaves, flatten order).
+    dense_indices: static tuple — flat param indices of the remaining
+                   (dense) leaves, so event emitters can label which
+                   ``clip_rate`` entries are dense fallbacks.
+    """
+
+    step: jnp.ndarray
+    xi: jnp.ndarray
+    k: jnp.ndarray
+    k_frac: jnp.ndarray
+    clip_rate: jnp.ndarray
+    did_refresh: jnp.ndarray
+    refresh_steps: jnp.ndarray
+    fold_steps: jnp.ndarray
+    refresh_every: jnp.ndarray
+    leaf_indices: tuple = dataclasses.field(
+        default=(), metadata=dict(static=True))
+    dense_indices: tuple = dataclasses.field(
+        default=(), metadata=dict(static=True))
+
+
+def init_snapshot(n_factored: int, n_leaves: int, refresh_every: int,
+                  leaf_indices: tuple = (),
+                  dense_indices: tuple = ()) -> TelemetrySnapshot:
+    """The step-0 snapshot (all zeros, cadence = configured value)."""
+    return TelemetrySnapshot(
+        step=jnp.zeros((), jnp.int32),
+        xi=jnp.zeros((n_factored,), jnp.float32),
+        k=jnp.zeros((n_factored,), jnp.float32),
+        k_frac=jnp.zeros((n_factored,), jnp.float32),
+        clip_rate=jnp.zeros((n_leaves,), jnp.float32),
+        did_refresh=jnp.zeros((), jnp.float32),
+        refresh_steps=jnp.zeros((), jnp.int32),
+        fold_steps=jnp.zeros((), jnp.int32),
+        refresh_every=jnp.asarray(refresh_every, jnp.int32),
+        leaf_indices=tuple(leaf_indices),
+        dense_indices=tuple(dense_indices),
+    )
+
+
+def snapshot_spec(snap: TelemetrySnapshot) -> TelemetrySnapshot:
+    """Sharding spec: every telemetry leaf is replicated (scalars and tiny
+    per-leaf vectors — there is nothing to shard)."""
+    return jax.tree.map(lambda _: P(), snap)

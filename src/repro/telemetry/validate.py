@@ -1,0 +1,44 @@
+"""CLI: validate a telemetry JSONL event stream against the schema.
+
+    python -m repro.telemetry.validate DIR_OR_FILE [--min-events N]
+
+Exits 0 when every event parses and conforms (and at least ``N`` events
+exist, default 1 — an empty stream usually means the producer was never
+wired up); exits 1 with a diagnostic otherwise.  CI runs this against
+the artifacts the dry-run smoke emits.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.telemetry.sink import validate_dir, validate_file
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", help="telemetry directory or one .jsonl file")
+    ap.add_argument("--min-events", type=int, default=1)
+    ap.add_argument("--prefix", default="events")
+    args = ap.parse_args(argv)
+
+    p = Path(args.path)
+    try:
+        if p.is_dir():
+            n = validate_dir(p, prefix=args.prefix)
+        else:
+            n = validate_file(p)
+    except (ValueError, OSError) as e:
+        print(f"INVALID: {e}", file=sys.stderr)
+        return 1
+    if n < args.min_events:
+        print(f"INVALID: {n} events found, expected >= {args.min_events}",
+              file=sys.stderr)
+        return 1
+    print(f"OK: {n} events conform to schema")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro.config import OptimizerConfig
 from repro.core import (GradientTransformation, apply_updates,
                         build_optimizer, global_norm)
+from repro.telemetry import collect as telemetry_collect
 
 
 def _as_transform(opt) -> GradientTransformation:
@@ -95,6 +96,11 @@ def build_train_step(model, opt,
         new_state = TrainState(params=params, opt_state=opt_state,
                                step=state.step + 1)
         metrics = dict(metrics, loss=loss, step=state.step)
+        # Optimizer telemetry rides out of the jitted step alongside the
+        # metrics: per-group scalar aggregates of the in-state snapshots
+        # (repro.telemetry).  Empty dict — the metrics pytree is unchanged
+        # — unless the optimizer was built with telemetry enabled.
+        metrics.update(telemetry_collect.telemetry_metrics(opt_state))
         return new_state, metrics
 
     return train_step

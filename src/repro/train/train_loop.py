@@ -2,7 +2,12 @@
 
 Wires together: deterministic data pipeline, jitted train step, async
 atomic checkpointing (+ preemption flush), straggler monitoring, metric
-logging.  Restart-safe by construction: on startup it restores the latest
+logging, and the telemetry subsystem (``repro.telemetry``): pass a
+``TelemetryRuntime`` and the loop streams per-group optimizer snapshots
+to its JSONL sink after every step, lets its closed-loop controller
+retune the (traced) S-RSI refresh cadence in place, saves its controller
+state into every checkpoint manifest, and flushes its sink on preemption
+— the straggler monitor shares the same event stream.  Restart-safe by construction: on startup it restores the latest
 committed checkpoint (if any) and fast-forwards the data stream to the
 restored step — a killed job resumes bit-exact (validated in
 tests/test_train_integration.py).
@@ -22,6 +27,7 @@ elastic restarts work (tests/test_sharded_train.py).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import logging
 import time
@@ -46,6 +52,12 @@ class LoopConfig:
     ckpt: Optional[CheckpointConfig] = None
     microbatches: int = 1
     grad_clip_norm: Optional[float] = None
+    # Cap on the in-memory metric history (a bounded deque of the most
+    # recent entries).  None keeps every logged entry — the historical
+    # behavior — which on a long production run grows host memory without
+    # bound; set a cap and consume the full stream via metric_hook or the
+    # telemetry sink instead.
+    history_cap: Optional[int] = None
 
 
 def train(model, opt: GradientTransformation, data_cfg: DataConfig,
@@ -54,8 +66,20 @@ def train(model, opt: GradientTransformation, data_cfg: DataConfig,
           state_shardings=None,
           batch_shardings=None,
           metric_hook: Optional[Callable[[int, dict], None]] = None,
+          telemetry=None,
           install_signal_handler: bool = False) -> tuple[TrainState, list]:
-    """Returns (final_state, history of metric dicts)."""
+    """Returns (final_state, history of metric dicts).
+
+    ``telemetry``: optional :class:`repro.telemetry.TelemetryRuntime`.
+    Each step, after the existing loss sync, the runtime fetches the
+    (scalar-sized) optimizer snapshots from the returned state, streams
+    events to its JSONL sink, and — with the closed-loop controller
+    enabled — writes retuned refresh cadences back into the state (a
+    traced scalar: no recompilation).  Its controller state rides the
+    checkpoint manifests (saved with every checkpoint, restored on
+    resume), and its sink is flushed by the preemption handler chain and
+    at loop exit.  The caller owns the runtime and closes it.
+    """
     ckpt = CheckpointManager(loop_cfg.ckpt) if loop_cfg.ckpt else None
 
     if state is None:
@@ -80,6 +104,12 @@ def train(model, opt: GradientTransformation, data_cfg: DataConfig,
         # CURRENT shardings, whatever mesh the checkpoint was written on
         state, start_step = ckpt.restore(state, state_shardings)
         log.info("restored checkpoint at step %d", start_step)
+        if telemetry is not None:
+            # controller accumulators + cadence log resume from the
+            # manifest, so the cadence-change sequence replays exactly
+            # (the cadence scalar itself is optimizer state and was just
+            # restored with it)
+            telemetry.restore_meta(ckpt.read_meta())
 
     step_fn = build_train_step(model, opt, microbatches=loop_cfg.microbatches,
                                grad_clip_norm=loop_cfg.grad_clip_norm)
@@ -97,13 +127,37 @@ def train(model, opt: GradientTransformation, data_cfg: DataConfig,
         step_fn = jax.jit(step_fn)
 
     data = DataIterator(data_cfg, start_step=start_step)
-    monitor = StragglerMonitor()
-    history = []
+    monitor = StragglerMonitor(
+        sink=telemetry.sink if telemetry is not None else None)
+    history = (collections.deque(maxlen=loop_cfg.history_cap)
+               if loop_cfg.history_cap is not None else [])
+
+    def _meta():
+        return telemetry.manifest_meta() if telemetry is not None else None
 
     if ckpt is not None and install_signal_handler:
-        latest = {"state": state, "step": start_step}
-        ckpt.install_preemption_handler(
-            lambda: (latest["state"], latest["step"]))
+        # (state, step, controller-meta) captured as ONE tuple assigned in
+        # ONE bytecode: a signal between separate assignments could pair a
+        # step-N state with step-N+1 controller accumulators, and the
+        # restored run would double-observe a step and diverge from the
+        # cadence sequence the determinism tests pin.
+        latest = {"snap": (state, start_step, _meta())}
+
+        def _flush_state():
+            # rides the preemption handler chain: drain the telemetry
+            # sink to disk, then hand the state + controller meta to the
+            # blocking checkpoint flush.  Best-effort: a sick sink (disk
+            # full on the telemetry volume) must never cost the
+            # preemption CHECKPOINT.
+            if telemetry is not None:
+                try:
+                    telemetry.flush()
+                except Exception:  # noqa: BLE001 — checkpoint comes first
+                    log.exception("telemetry flush failed during "
+                                  "preemption; saving checkpoint anyway")
+            return latest["snap"]
+
+        ckpt.install_preemption_handler(_flush_state)
 
     try:
         for step in range(start_step, loop_cfg.total_steps):
@@ -116,8 +170,14 @@ def train(model, opt: GradientTransformation, data_cfg: DataConfig,
             jax.block_until_ready(metrics["loss"])
             dt = monitor.stop()
 
+            if telemetry is not None:
+                # fetch snapshots / emit events / retune cadences; the
+                # loop already synced on the loss, so this adds no device
+                # round-trip beyond the scalar fetch
+                state = telemetry.on_step(step + 1, state)
+
             if ckpt is not None and install_signal_handler:
-                latest["state"], latest["step"] = state, step + 1
+                latest["snap"] = (state, step + 1, _meta())
 
             if (step + 1) % loop_cfg.log_every == 0 or step == start_step:
                 m = {k: float(np.asarray(v)) for k, v in metrics.items()}
@@ -130,7 +190,7 @@ def train(model, opt: GradientTransformation, data_cfg: DataConfig,
                          m.get("loss", float("nan")), dt)
 
             if ckpt is not None and ckpt.should_save(step + 1):
-                ckpt.save(state, step + 1)
+                ckpt.save(state, step + 1, extra_meta=_meta())
     finally:
         data.close()
         if ckpt is not None:
@@ -139,7 +199,15 @@ def train(model, opt: GradientTransformation, data_cfg: DataConfig,
                 # the handler must not outlive this loop's state capture
                 ckpt.uninstall_preemption_handler()
             ckpt.wait()
+        if telemetry is not None:
+            try:
+                telemetry.flush()
+            except Exception:  # noqa: BLE001 — same rule as the
+                # preemption path: a sick sink must neither mask an
+                # in-flight exception nor cost the final checkpoint
+                log.exception("telemetry flush failed at loop exit")
 
     if ckpt is not None:
-        ckpt.save(state, loop_cfg.total_steps, blocking=True)
-    return state, history
+        ckpt.save(state, loop_cfg.total_steps, blocking=True,
+                  extra_meta=_meta())
+    return state, list(history)

@@ -121,6 +121,40 @@ def test_chained_adapprox_matches_seed_monolith():
     assert int(st.leaves[1].k) == int(k)
 
 
+def test_telemetry_disabled_chain_is_unchanged():
+    """Acceptance (PR 5): with TelemetryConfig disabled — the default —
+    the adapprox chain is bitwise-identical to the pre-telemetry chain:
+    the state pytree carries no telemetry fields (treedef unchanged, so
+    old checkpoints restore), and enabling collection changes ONLY the
+    state, never the updates."""
+    params = toy_params()
+    cfg = OptimizerConfig(name="adapprox", schedule="constant", lr=1e-3,
+                          weight_decay=0.1, k=4, rank_mode="static",
+                          min_dim_factor=64, implicit=False)
+    off = build_optimizer(cfg)
+    on = build_optimizer(dataclasses.replace(cfg, telemetry=True,
+                                             dynamic_refresh=True))
+    s_off, s_on = off.init(params), on.init(params)
+    sub = adapprox_state(s_off)
+    assert sub.telemetry is None and sub.refresh_every is None
+    # the default state flattens to exactly the pre-telemetry leaves
+    # (None fields are empty pytrees: no extra leaves, no treedef change
+    # for checkpoint round-trips)
+    assert (len(jax.tree.leaves(s_off))
+            == len(jax.tree.leaves(s_on))
+            - len(jax.tree.leaves(adapprox_state(s_on).telemetry)) - 1)
+    gkey = jax.random.PRNGKey(3)
+    p = params
+    for t in range(1, 4):
+        g = toy_grads(gkey, p, t)
+        u_off, s_off = off.update(g, s_off, p)
+        u_on, s_on = on.update(g, s_on, p)
+        for a, b in zip(jax.tree.leaves(u_off), jax.tree.leaves(u_on)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"step {t}")
+        p = apply_updates(p, u_off)
+
+
 def test_build_optimizer_matches_make_optimizer():
     """build_optimizer(OptimizerConfig) and the kwargs registry produce
     step-for-step identical updates for every family."""

@@ -138,6 +138,72 @@ print("CROSS_MESH_TOL_OK")
 print("ROUNDTRIP_OK")
 """
 
+TELEMETRY = COMMON + r"""
+import repro.telemetry as T
+from jax.sharding import NamedSharding
+
+def make_opt():          # override COMMON's: telemetry + dynamic cadence
+    return build_optimizer(OptimizerConfig(
+        name="adapprox", schedule="constant", lr=1e-3, weight_decay=0.1,
+        decay_mask="no_1d", min_dim_factor=32, k=4, rank_mode="static",
+        implicit=False, refresh_every=2, telemetry=True,
+        dynamic_refresh=True, groups=default_mixed_groups()))
+
+base = tempfile.mkdtemp()
+d0 = os.path.join(base, "tel42"); os.makedirs(d0)
+state3, l3 = run((4, 2), 3, ckpt_dir=d0)
+
+# --- 8-virtual-device snapshot replication: every telemetry leaf (and
+# the traced cadence scalar) is a REPLICATED NamedSharding on the mesh
+snaps = T.named_snapshots(state3.opt_state)
+assert list(snaps) == ["factored"], list(snaps)
+for leaf in jax.tree.leaves(snaps["factored"]):
+    assert isinstance(leaf.sharding, NamedSharding), leaf.sharding
+    assert leaf.sharding.is_fully_replicated, leaf.sharding
+re = T.named_states(state3.opt_state)["factored"].refresh_every
+assert isinstance(re.sharding, NamedSharding) and \
+    re.sharding.is_fully_replicated
+assert T.get_refresh_every(state3.opt_state) == {"factored": 2}
+snap = snaps["factored"]
+assert int(snap.refresh_steps) == 2 and int(snap.fold_steps) == 1, \
+    (int(snap.refresh_steps), int(snap.fold_steps))   # refresh at 1, 3
+print("SNAPSHOT_REPLICATED_OK")
+
+# --- sharding-spec round trip: train_shardings derives telemetry specs
+# through the state_sharding_spec protocol (replicated), for a DIFFERENT
+# target mesh
+model, opt, ssh, _ = setup((2, 4))
+sh_snaps = T.named_snapshots(ssh.opt_state)
+assert list(sh_snaps) == ["factored"]
+for sh in jax.tree.leaves(sh_snaps["factored"]):
+    assert isinstance(sh, NamedSharding) and sh.is_fully_replicated, sh
+print("SPEC_ROUNDTRIP_OK")
+
+# --- resharded restore is bitwise, telemetry counters + cadence included
+mgr = CheckpointManager(CheckpointConfig(directory=d0))
+like = jax.tree.map(np.asarray, state3)
+st, step = mgr.restore(like, ssh)
+assert step == 3
+assert leaves_equal(st, state3), "telemetry state not bitwise on (2,4)"
+assert T.get_refresh_every(st.opt_state) == {"factored": 2}
+print("TELEMETRY_RESTORE_OK")
+
+# --- runtime cadence change on the live sharded state lands replicated
+# and the continuation runs under the new cadence
+new_opt = T.set_refresh_every(st.opt_state, {"factored": 3})
+re2 = T.named_states(new_opt)["factored"].refresh_every
+assert isinstance(re2.sharding, NamedSharding) and \
+    re2.sharding.is_fully_replicated
+import dataclasses as _dc
+st5, l45 = run((2, 4), 5, state=_dc.replace(st, opt_state=new_opt))
+assert T.get_refresh_every(st5.opt_state) == {"factored": 3}
+snap5 = T.named_snapshots(st5.opt_state)["factored"]
+# steps 4, 5 under T=3: 4 % 3 = 1 -> refresh, 5 % 3 = 2 -> fold
+assert int(snap5.refresh_steps) == 3 and int(snap5.fold_steps) == 2, \
+    (int(snap5.refresh_steps), int(snap5.fold_steps))
+print("TELEMETRY_CONT_OK")
+"""
+
 LAUNCHER = r"""
 import os
 os.environ["REPRO_TRAIN_DEVICES"] = "8"
@@ -205,3 +271,15 @@ def test_launcher_mesh_smoke():
     out = _run(LAUNCHER, "launcher mesh smoke")
     assert "OPT_STATE_NAMED_SHARDINGS_OK" in out, out
     assert "LAUNCHER_MESH_OK" in out, out
+
+
+def test_telemetry_sharded_snapshot():
+    """8 virtual devices: telemetry snapshot + dynamic cadence leaves are
+    replicated on the mesh, their sharding specs round-trip through the
+    state_sharding_spec protocol for other meshes, resharded restore is
+    bitwise (counters + cadence included), and a live cadence change on
+    the sharded state stays replicated through continuation."""
+    out = _run(TELEMETRY, "telemetry sharded snapshot")
+    for marker in ("SNAPSHOT_REPLICATED_OK", "SPEC_ROUNDTRIP_OK",
+                   "TELEMETRY_RESTORE_OK", "TELEMETRY_CONT_OK"):
+        assert marker in out, out

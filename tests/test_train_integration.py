@@ -1,5 +1,6 @@
 """End-to-end: tiny GPT-2-family model trains with Adapprox, loss drops,
-checkpoint-restart is bit-exact, serving engine generates."""
+checkpoint-restart is bit-exact (closed-loop telemetry controller
+included), serving engine generates."""
 import dataclasses
 
 import jax
@@ -8,11 +9,13 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import CheckpointConfig
+from repro.config import OptimizerConfig, TelemetryConfig
 from repro.configs import get_smoke_config
-from repro.core import Schedule, make_optimizer
+from repro.core import Schedule, build_optimizer, make_optimizer
 from repro.data import DataConfig
 from repro.models import build_model
 from repro.serve import Engine, Request, ServeConfig
+from repro.telemetry import TelemetryRuntime, get_refresh_every
 from repro.train import LoopConfig, TrainState, train
 
 
@@ -56,6 +59,65 @@ def test_checkpoint_restart_bit_exact(tmp_path):
                     jax.tree.leaves(state_b.params)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-6, atol=1e-6)
+
+
+def _auto_refresh_setup():
+    """Tiny adapprox run with the closed-loop controller configured so it
+    provably acts: the hysteresis band sits above any observable xi, so
+    every 5-step interval RELAXES the cadence by 1 (clamped at 4) —
+    deterministic cadence changes at steps 5, 10, 15."""
+    cfg, model = tiny_model(vocab=64)
+    opt = build_optimizer(OptimizerConfig(
+        name="adapprox", schedule="constant", lr=3e-3, weight_decay=0.1,
+        min_dim_factor=32, k=4, rank_mode="static", implicit=False,
+        telemetry=True, dynamic_refresh=True))
+    runtime = TelemetryRuntime(TelemetryConfig(
+        enabled=True, auto_refresh=True, interval=5, xi_high=2.0,
+        xi_low=1.9, relax_patience=1, relax_add=1, t_max=4))
+    data_cfg = DataConfig(vocab=64, seq_len=32, global_batch=4, seed=3)
+    return model, opt, runtime, data_cfg
+
+
+def test_controller_kill_restore_reproduces_cadence_sequence(tmp_path):
+    """A run killed and restored MID-controller-interval reproduces the
+    identical cadence-change sequence and bitwise-identical final params:
+    the cadence scalar restores with the optimizer state, the controller's
+    partial-interval accumulators ride the checkpoint manifest."""
+    total, kill_at = 18, 8           # 8 is inside the [6, 10] interval
+    want_log = [(5, "default", 1, 2), (10, "default", 2, 3),
+                (15, "default", 3, 4)]
+
+    # --- uninterrupted reference ------------------------------------------
+    model, opt, rt_a, data_cfg = _auto_refresh_setup()
+    state_a, _ = train(model, opt, data_cfg,
+                       LoopConfig(total_steps=total, log_every=5),
+                       telemetry=rt_a)
+    assert rt_a.cadence_log == want_log
+    assert get_refresh_every(state_a.opt_state) == {"default": 4}
+
+    # --- killed at step 8 (mid-interval), then restored -------------------
+    ck = CheckpointConfig(directory=str(tmp_path), save_every=kill_at,
+                          async_save=False)
+    model, opt, rt_b1, _ = _auto_refresh_setup()
+    train(model, opt, data_cfg,
+          LoopConfig(total_steps=kill_at, log_every=5, ckpt=ck),
+          telemetry=rt_b1)
+    assert rt_b1.cadence_log == want_log[:1]
+
+    model, opt, rt_b2, _ = _auto_refresh_setup()
+    state_b, _ = train(model, opt, data_cfg,
+                       LoopConfig(total_steps=total, log_every=5, ckpt=ck),
+                       telemetry=rt_b2)
+    # restore_meta replayed the pre-kill log; continuation appended the
+    # rest — identical sequence, incl. the decision at step 10 whose
+    # interval straddles the kill (steps 6-8 observed pre-kill, 9-10 post)
+    assert rt_b2.cadence_log == want_log
+    for a, b in zip(jax.tree.leaves(state_a.params),
+                    jax.tree.leaves(state_b.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(state_a.opt_state),
+                    jax.tree.leaves(state_b.opt_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_serving_engine_generates():
