@@ -8,12 +8,19 @@ implementations (``tree_nbytes`` over ``jax.eval_shape(opt.init, params)``
     117M/345M under AdamW / Adafactor / CAME / Adapprox(k_init/k_max), at
     beta1 = 0.9 and 0, as a percentage of AdamW.
   * ``sharded`` — per-DEVICE optimizer-state bytes for the production
-    mixed partition chain (dense Adam on 1-D/small leaves, Adapprox on
-    matrices) across FSDP mesh sizes 1/2/4/8, including the per-group
-    split.  Specs come from the same ``state_sharding_spec`` protocol the
-    live training path uses (``distributed/sharding.py``), evaluated
-    against ``{axis: size}`` mesh shapes — no devices needed, so the
-    full-size accounting runs in CI.
+    mixed partition chain (count-min sketch on embedding tables, Adapprox
+    on matrices, dense Adam on 1-D/small leaves) across FSDP mesh sizes
+    1/2/4/8, including the per-group split.  Specs come from the same
+    ``state_sharding_spec`` protocol the live training path uses
+    (``distributed/sharding.py``), evaluated against ``{axis: size}``
+    mesh shapes — no devices needed, so the full-size accounting runs in
+    CI.
+  * ``embedding`` — optimizer-state bytes on the EMBEDDING leaves of an
+    embedding-dominated model (``embed-heavy-256k``: 256k vocab, thin
+    trunk) for dense Adam / Adafactor / Adapprox / the count-min sketch,
+    at beta1 = 0.9 and 0.  The sketch table is vocab-independent, so at
+    beta1 = 0 it undercuts dense Adam by >= 4x on these leaves
+    (``derived.sketch_embedding_reduction_x``; pinned by CI).
 
 JSON shape follows ``BENCH_step_time.json`` conventions:
 ``{"benchmark": ..., "results": [...], "derived": {...}}``.
@@ -78,10 +85,15 @@ def _method_config(b1: float, method: str):
                                rank_mode="paper", factor_dtype="int8",
                                **base)
     if method == "mixed_groups":
-        # the launcher's production default: partition(dense adam, adapprox)
+        # the launcher's production default: partition(sketch on embedding
+        # tables, adapprox on matrices, dense adam on the rest)
         return OptimizerConfig(name="adapprox", b1=b1, k=1, k_max=10**9,
                                rank_mode="paper",
                                groups=default_mixed_groups(), **base)
+    if method == "sketch":
+        # count-min second moment (the embedding backend); exact first
+        # moment when b1 > 0, table only at b1 = 0
+        return OptimizerConfig(name="sketch", b1=b1, **base)
     raise ValueError(method)
 
 
@@ -192,6 +204,39 @@ def sharded_rows(arch: str, b1: float = 0.9) -> list[dict]:
     return rows
 
 
+EMBED_ARCH = "embed-heavy-256k"
+
+
+def embedding_leaves(params, min_rows: int = 1024) -> dict:
+    """The param leaves the ``"embeddings"`` selector would route to the
+    sketch: >= 2-D with at least ``min_rows`` rows."""
+    from repro.core.sketch import should_sketch
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    return {jax.tree_util.keystr(p): l for p, l in flat
+            if should_sketch(l.shape, min_rows)}
+
+
+def embedding_rows(arch: str = EMBED_ARCH) -> list[dict]:
+    """Optimizer-state bytes on the embedding leaves only, per family —
+    the comparison the sketch backend exists for."""
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    emb = embedding_leaves(params)
+    assert emb, f"{arch} has no embedding-sized leaves"
+    rows = []
+    for b1 in (0.9, 0.0):
+        for method in ("adamw", "adafactor", "adapprox_kinit", "sketch"):
+            opt = build_optimizer(_method_config(b1, method))
+            state = jax.eval_shape(opt.init, emb)
+            rows.append({
+                "arch": arch, "b1": b1, "method": method,
+                "embedding_leaves": len(emb),
+                "embedding_state_mb": round(tree_nbytes(state) / 1e6, 2),
+            })
+    return rows
+
+
 def table2_rows(archs) -> list[dict]:
     rows = []
     for arch in archs:
@@ -219,6 +264,8 @@ def collect(quick: bool = False) -> dict:
     sharded = []
     for arch in archs:
         sharded += sharded_rows(arch)
+    emb = embedding_rows()                  # eval_shape only: cheap enough
+                                            # to keep under --quick too
 
     def pct(arch, b1, method):
         for r in t2:
@@ -228,6 +275,13 @@ def collect(quick: bool = False) -> dict:
 
     mixed = [r for r in sharded if r["method"] == "mixed_groups"
              and r["arch"] == archs[0]]
+
+    def emb_mb(b1, method):
+        for r in emb:
+            if (r["b1"], r["method"]) == (b1, method):
+                return r["embedding_state_mb"]
+        return None
+
     derived = {
         # paper Table-2 anchor on one device
         "adapprox_kmax_pct_of_adamw_117m": pct("gpt2-117m", 0.9,
@@ -240,12 +294,16 @@ def collect(quick: bool = False) -> dict:
         "mixed_shrinks_with_mesh": all(
             a["opt_state_bytes_per_device"] > b["opt_state_bytes_per_device"]
             for a, b in zip(mixed, mixed[1:])),
+        # the sketch headline: embedding-leaf state reduction vs dense
+        # Adam at b1 = 0 (second moment only; acceptance floor is 4x)
+        "sketch_embedding_reduction_x": round(
+            emb_mb(0.0, "adamw") / emb_mb(0.0, "sketch"), 1),
     }
     return {
         "benchmark": "optimizer_state_memory",
         "backend": jax.default_backend(),
         "mesh_sizes": list(MESH_SIZES),
-        "results": {"table2": t2, "sharded": sharded},
+        "results": {"table2": t2, "sharded": sharded, "embedding": emb},
         "derived": derived,
     }
 
@@ -263,6 +321,10 @@ def run() -> list[str]:
     for r in data["results"]["sharded"]:
         rows.append(f"{r['arch']},{r['method']},{r['devices']},"
                     f"{r['opt_state_mb_per_device']}")
+    rows.append("embedding_arch,b1,method,embedding_state_mb")
+    for r in data["results"]["embedding"]:
+        rows.append(f"{r['arch']},{r['b1']},{r['method']},"
+                    f"{r['embedding_state_mb']}")
     rows += [f"{k},{v}" for k, v in data["derived"].items()
              if not isinstance(v, dict)]
     return rows
@@ -286,6 +348,9 @@ def main() -> None:
     for r in data["results"]["sharded"]:
         print(f"{r['arch']} {r['method']} mesh={r['devices']}: "
               f"{r['opt_state_mb_per_device']}MB/device")
+    for r in data["results"]["embedding"]:
+        print(f"{r['arch']} b1={r['b1']} {r['method']}: "
+              f"{r['embedding_state_mb']}MB on embedding leaves")
     print("derived:", json.dumps(data["derived"]))
     if args.out:
         with open(args.out, "w") as f:

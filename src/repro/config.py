@@ -159,6 +159,10 @@ class GroupSpec:
     ``select`` picks the leaves this group owns (first matching group in
     declaration order wins):
 
+      * ``"embeddings"`` — >= 2-D leaves whose LEADING dim is at least
+        ``OptimizerConfig.embedding_min_rows`` (vocab / embedding tables;
+        list it before ``"factored"`` so the row-hashed sketch family
+        takes them, first hit wins);
       * ``"factored"`` — >= 2-D leaves whose smaller trailing dim is at
         least ``OptimizerConfig.min_dim_factor`` (the same policy the
         factored second moments use);
@@ -167,7 +171,8 @@ class GroupSpec:
       * ``"rest"``     — catch-all (every groups tuple must end in one).
 
     ``name`` is the optimizer family for the group (adapprox | adamw |
-    adafactor | came); ``None`` inherits the parent config's ``name``.
+    adafactor | came | sketch); ``None`` inherits the parent config's
+    ``name``.
     ``lr_scale`` is a per-group LR multiplier applied inside the group's
     ``scale_by_schedule`` stage (shared warmup/decay shape, scaled peak).
     """
@@ -178,11 +183,18 @@ class GroupSpec:
 
 
 def default_mixed_groups() -> tuple:
-    """The production mixed partition: bias-corrected dense Adam on 1-D /
-    small leaves, the factored family (Adapprox by default) on matrices.
-    Adafactor-style blanket factorization costs accuracy on the small
-    leaves it barely saves memory on; this chain keeps them dense."""
-    return (("factored", GroupSpec(select="factored")),
+    """The production mixed partition, three state families: the count-min
+    sketch on embedding tables (rows update sparsely and the spectrum is
+    flat — the regime where a low-rank basis wastes memory and refresh
+    FLOPs), the factored family (Adapprox by default) on matrices, and
+    bias-corrected dense Adam on 1-D / small leaves (Adafactor-style
+    blanket factorization costs accuracy on leaves it barely saves memory
+    on).  Declaration order matters: ``"embeddings"`` is listed first so
+    wide tables hit the sketch before ``"factored"`` can claim them; with
+    the default ``embedding_min_rows`` threshold nothing below a real
+    vocab-sized table routes there."""
+    return (("embeddings", GroupSpec(select="embeddings", name="sketch")),
+            ("factored", GroupSpec(select="factored")),
             ("dense", GroupSpec(select="rest", name="adamw")))
 
 
@@ -193,7 +205,8 @@ class OptimizerConfig:
     ``scale_by_*`` transformation primitives.
 
     ``name`` selects the preconditioner family (adapprox | adamw |
-    adafactor | came); the schedule block builds the LR schedule; the
+    adafactor | came | sketch); the schedule block builds the LR schedule;
+    the
     decay block controls decoupled weight decay and its parameter mask;
     the remaining groups are family-specific knobs (ignored by families
     that don't use them).
@@ -259,6 +272,14 @@ class OptimizerConfig:
     min_dim_factor: int = 128       # factor leaves with min(m, n) >= this
     factor_dtype: str = "float32"   # "int8": quantized factors
     seed: int = 0
+    # sketch family (count-min second moment for embedding tables;
+    # core/sketch.py): depth x width buckets per leaf, hashed over the
+    # leading (row) axis.  embedding_min_rows doubles as the "embeddings"
+    # GroupSpec selector threshold — >= 2-D leaves with at least this many
+    # rows route to the sketch group in mixed chains.
+    sketch_width: int = 2048
+    sketch_depth: int = 4
+    embedding_min_rows: int = 1024
     # adafactor specifics
     b2_schedule: bool = True        # b2_t = 1 - t^-0.8
     relative_step: bool = False

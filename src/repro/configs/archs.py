@@ -113,6 +113,16 @@ GPT2_117M = ModelConfig(
     norm="layernorm", pos_embedding="learned", tie_embeddings=True,
     mlp_bias=True, max_seq_len=1024)
 
+# --- synthetic: embedding-dominated probe for the sketch backend ------------
+# Large multilingual-style vocab over a thin trunk: ~134M of ~147M params
+# sit in the (tied) token embedding, so optimizer-state memory is decided
+# by what happens to that one leaf — the workload the count-min sketch
+# second moment (repro.core.sketch) targets.  Bench-only; not ASSIGNED.
+EMBED_HEAVY_256K = ModelConfig(
+    arch="embed-heavy-256k", family="dense", n_layers=4, d_model=512,
+    n_heads=8, n_kv_heads=8, d_ff=2048, vocab=262_144,
+    tie_embeddings=True, max_seq_len=2048)
+
 GPT2_345M = ModelConfig(
     arch="gpt2-345m", family="dense", n_layers=24, d_model=1024,
     n_heads=16, n_kv_heads=16, d_ff=4096, vocab=50_257, act="gelu",
@@ -124,7 +134,7 @@ ARCHS: dict[str, ModelConfig] = {
     c.arch: c for c in [
         ZAMBA2_2P7B, MINITRON_4B, QWEN2_7B, DEEPSEEK_67B, QWEN3_14B,
         OLMOE_1B_7B, KIMI_K2, WHISPER_LARGE_V3, MAMBA2_370M,
-        LLAVA_NEXT_MISTRAL_7B, GPT2_117M, GPT2_345M,
+        LLAVA_NEXT_MISTRAL_7B, GPT2_117M, GPT2_345M, EMBED_HEAVY_256K,
     ]
 }
 

@@ -18,6 +18,10 @@ Layers, bottom to top:
       scale_by_adam(b1, b2, eps)          — bias-corrected Adam
       scale_by_factored_rms(AdafactorConfig) — Shazeer & Stern rank-1
       scale_by_came(CAMEConfig)           — CAME confidence guidance
+      scale_by_sketch(SketchConfig)       — count-min sketch second moment
+          for embedding tables (depth x width hashed buckets, min-over-
+          depth query that never underestimates the exact EMA; exact
+          first moment; dense-Adam fallback below ``min_rows``)
 
   Named optimizers (documented chains, bit-identical to the former
   monoliths):  every one is
@@ -27,6 +31,7 @@ Layers, bottom to top:
       adamw / adafactor / came   — baselines the paper compares against
       (adafactor swaps the schedule stage for ``scale_by_relative_step``
       when cfg.relative_step is set)
+      sketch(SketchConfig)       — the count-min embedding backend
 
   Construction surface
       build_optimizer(OptimizerConfig)  — THE entry point for launchers /
@@ -38,9 +43,13 @@ Layers, bottom to top:
           per-group LR multiplier via the labeled
           ``scale_by_schedule(sched, lr_scale=)`` stage.
           ``repro.config.default_mixed_groups()`` is the production
-          default the launcher uses for adapprox (``--mixed-groups``):
-          dense bias-corrected Adam on 1-D/small leaves, Adapprox on
-          matrices — per-layer sensitivity without blanket factorization.
+          default the launcher uses for adapprox (``--mixed-groups``),
+          three state families: the count-min sketch on embedding tables
+          (``"embeddings"`` selector — >= 2-D leaves with at least
+          ``embedding_min_rows`` rows, listed first so first-hit-wins
+          routes them before ``"factored"``), Adapprox on factorable
+          matrices, dense bias-corrected Adam on 1-D/small leaves —
+          per-layer sensitivity without blanket factorization.
       make_optimizer(name, **kw)        — kwargs-level registry for tests
           and ad-hoc experimentation; same chains underneath.
 
@@ -133,6 +142,9 @@ from repro.core.adamw import AdamWConfig, AdamWState, adamw, scale_by_adam
 from repro.core.adafactor import (AdafactorConfig, AdafactorState, adafactor,
                                   scale_by_factored_rms)
 from repro.core.came import CAMEConfig, CAMEState, came, scale_by_came
+from repro.core.sketch import (SketchConfig, SketchDense, SketchLeaf,
+                               SketchState, scale_by_sketch, should_sketch,
+                               sketch, sketch_state)
 from repro.core.build import build_optimizer
 
 _REGISTRY = {}
@@ -168,6 +180,8 @@ def make_optimizer(name: str, **kwargs) -> GradientTransformation:
         return adafactor(AdafactorConfig(**kwargs), decay_mask=decay_mask)
     if name == "came":
         return came(CAMEConfig(**kwargs), decay_mask=decay_mask)
+    if name == "sketch":
+        return sketch(SketchConfig(**kwargs), decay_mask=decay_mask)
     raise ValueError(f"unknown optimizer {name!r}; "
                      f"available: adapprox, adamw, adafactor, came, "
-                     f"{sorted(_REGISTRY)}")
+                     f"sketch, {sorted(_REGISTRY)}")

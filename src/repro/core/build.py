@@ -8,6 +8,7 @@ documented transformation chains in this package:
     adamw    : scale_by_adam        -> +wd*W -> *lr_t -> *(-1)
     adafactor: scale_by_factored_rms-> +wd*W -> *lr_t | *alpha_t -> *(-1)
     came     : scale_by_came        -> +wd*W -> *lr_t -> *(-1)
+    sketch   : scale_by_sketch      -> +wd*W -> *lr_t -> *(-1)
 
 ``cfg.decay_mask = "no_1d"`` swaps the decay stage's mask so 1-D leaves
 (biases, norm scales) are exempt from weight decay — the standard
@@ -18,9 +19,10 @@ GroupSpec)`` pair becomes its own full chain (the group's family
 preconditioner, the shared decay mask, the shared schedule scaled by
 ``lr_scale``, the descent sign), and a shape-based labeler routes every
 parameter leaf to the first group whose ``select`` rule matches.  The
-production default, :func:`repro.config.default_mixed_groups`, runs the
-parent family (Adapprox) on factorable matrices and dense bias-corrected
-Adam on 1-D/small leaves — per-layer sensitivity without blanket
+production default, :func:`repro.config.default_mixed_groups`, runs three
+state families: the count-min sketch on embedding tables, the parent
+family (Adapprox) on factorable matrices, and dense bias-corrected Adam
+on 1-D/small leaves — per-layer sensitivity without blanket
 factorization.  ``PartitionState`` keeps the labels as static metadata, so
 the partitioned optimizer jits, checkpoints and shards like any chain.
 """
@@ -37,6 +39,7 @@ from repro.core.adapprox import AdapproxConfig, scale_by_adapprox
 from repro.core.came import CAMEConfig, scale_by_came
 from repro.core.factored import should_factor
 from repro.core.rank import RankConfig
+from repro.core.sketch import SketchConfig, scale_by_sketch, should_sketch
 from repro.core.transform import (add_decayed_weights, partition,
                                   resolve_decay_mask, scale,
                                   scale_by_relative_step, scale_by_schedule)
@@ -91,8 +94,14 @@ def _preconditioner(cfg: OptimizerConfig, name: str,
             lr=sched, b1=cfg.b1, b2=cfg.b2, b3=cfg.b3, clip_d=cfg.clip_d,
             weight_decay=cfg.weight_decay,
             min_dim_factor=cfg.min_dim_factor))
+    if name == "sketch":
+        return scale_by_sketch(SketchConfig(
+            lr=sched, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps,
+            weight_decay=cfg.weight_decay, depth=cfg.sketch_depth,
+            width=cfg.sketch_width, min_rows=cfg.embedding_min_rows,
+            seed=cfg.seed, telemetry=cfg.telemetry))
     raise ValueError(f"unknown optimizer {name!r}; "
-                     f"available: adapprox, adamw, adafactor, came")
+                     f"available: adapprox, adamw, adafactor, came, sketch")
 
 
 def _chain_for(cfg: OptimizerConfig, name: str, sched: Callable,
@@ -116,7 +125,10 @@ def _chain_for(cfg: OptimizerConfig, name: str, sched: Callable,
 # Parameter groups -> partition
 # ---------------------------------------------------------------------------
 
-def _select_matches(select: str, shape: tuple, min_dim_factor: int) -> bool:
+def _select_matches(select: str, shape: tuple, min_dim_factor: int,
+                    embedding_min_rows: int) -> bool:
+    if select == "embeddings":
+        return should_sketch(tuple(shape), embedding_min_rows)
     if select == "factored":
         return should_factor(tuple(shape), min_dim_factor)
     if select == "matrices":
@@ -126,16 +138,19 @@ def _select_matches(select: str, shape: tuple, min_dim_factor: int) -> bool:
     if select == "rest":
         return True
     raise ValueError(f"unknown GroupSpec.select {select!r} (expected "
-                     f"'factored', 'matrices', 'vectors' or 'rest')")
+                     f"'embeddings', 'factored', 'matrices', 'vectors' "
+                     f"or 'rest')")
 
 
-def group_labeler(groups: tuple, min_dim_factor: int) -> Callable:
+def group_labeler(groups: tuple, min_dim_factor: int,
+                  embedding_min_rows: int = 1024) -> Callable:
     """params -> label pytree, first matching group (declaration order)
     wins.  Only inspects leaf shapes, so it is safe under tracing."""
 
     def label_of(p):
         for label, g in groups:
-            if _select_matches(g.select, p.shape, min_dim_factor):
+            if _select_matches(g.select, p.shape, min_dim_factor,
+                               embedding_min_rows):
                 return label
         raise ValueError(
             f"no group matches leaf of shape {tuple(p.shape)}; add a "
@@ -163,7 +178,8 @@ def _build_partitioned(cfg: OptimizerConfig, sched: Callable,
     transforms = {
         label: _chain_for(cfg, g.name or cfg.name, sched, mask, g.lr_scale)
         for label, g in groups}
-    return partition(group_labeler(groups, cfg.min_dim_factor), transforms)
+    return partition(group_labeler(groups, cfg.min_dim_factor,
+                                   cfg.embedding_min_rows), transforms)
 
 
 def build_optimizer(cfg: OptimizerConfig) -> GradientTransformation:

@@ -34,6 +34,10 @@ Family index (oracle <-> kernel module <-> ops wrapper):
       matvecs of the implicit second-moment operator
   one_sided_fold   ref.one_sided_fold   <-> (composes sq_matmul_t)
       amortized-refresh factor fold U <- mask*(b2*U + (1-b2)(G^2)^T Q)
+  sketch_update    ref.sketch_update    <-> sketch_update.py
+      fused count-min second-moment EMA scatter + min-over-depth query
+      for the sketch state family (scale_by_sketch); one-hot matmuls do
+      the bucketing on the MXU
   flash_attention  ops fallback softmax <-> flash_attention.py
       causal/GQA online-softmax attention forward
   ssd_chunk        models zoo reference <-> ssd_chunk.py

@@ -19,6 +19,7 @@ from repro.kernels.fused_update import (fused_apply_pallas,
                                         fused_precond_guided_pallas,
                                         fused_precond_pallas)
 from repro.kernels.lowrank_update import lowrank_update_pallas
+from repro.kernels.sketch_update import sketch_update_pallas
 from repro.kernels.srsi_matmul import sq_matmul_pallas
 
 # Mode: "auto" (pallas on TPU, ref elsewhere), "pallas" (force, interpret on
@@ -273,6 +274,35 @@ def one_sided_fold(u: jnp.ndarray, q: jnp.ndarray, g: jnp.ndarray,
     if col_mask is not None:
         folded = folded * col_mask[None, :]
     return folded
+
+
+def sketch_update(table: jnp.ndarray, g: jnp.ndarray, idx: jnp.ndarray,
+                  b2: float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused count-min EMA scatter + min-over-depth query (see
+    ref.sketch_update).  table: (depth, width, d) f32, g: (rows, d) any
+    float, idx: (depth, rows) int32.  Returns (table_new, vhat).
+
+    Padding contract: rows pad with zero gradient and bucket 0 (no mass
+    scattered, query sliced away); the bucket axis pads to a lane multiple
+    (padded buckets are never indexed); the inner axis pads to the block
+    and is sliced back.
+    """
+    use, interp = _use_pallas()
+    if not use:
+        return ref.sketch_update(table, g, idx, b2)
+    depth, width, d = table.shape
+    rows = g.shape[0]
+    br = _pick_block(rows, target=256, align=8)
+    # shrink the inner block when the resident (depth, width, bd) table
+    # pair would blow the VMEM budget (see sketch_update.py docstring)
+    bd_target = 128 if depth * width > 4096 else 256
+    bd = _pick_block(d, target=bd_target, align=128)
+    tab = _pad_to(_pad_to(table.astype(jnp.float32), 128, 1), bd, 2)
+    gp = _pad_to(_pad_to(g, br, 0), bd, 1)
+    ip = _pad_to(idx, br, 1)
+    new, vhat = sketch_update_pallas(tab, gp, ip, jnp.asarray(b2),
+                                     br=br, bd=bd, interpret=interp)
+    return new[:, :width, :d], vhat[:rows, :d]
 
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

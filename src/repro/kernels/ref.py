@@ -6,6 +6,7 @@ platforms without Pallas TPU lowering.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -107,6 +108,37 @@ def sq_matmul_t(g: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
     """Z = (G * G)^T @ Y.   g: (m, n), y: (m, s) -> (n, s) f32."""
     g32 = g.astype(jnp.float32)
     return (g32 * g32).T @ y.astype(jnp.float32)
+
+
+def sketch_update(table: jnp.ndarray, g: jnp.ndarray, idx: jnp.ndarray,
+                  b2: float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Count-min second-moment EMA update + per-row query, fused.
+
+        S_t[j, b, :] = b2 * S_{t-1}[j, b, :]
+                       + (1 - b2) * sum_{i : idx[j, i] = b} G[i, :]^2
+        vhat[i, :]   = min_j S_t[j, idx[j, i], :]
+
+    table: (depth, width, d) f32, g: (rows, d) any float,
+    idx: (depth, rows) int32 hashed bucket per row per depth.
+    Returns (S_t: (depth, width, d) f32, vhat: (rows, d) f32).
+
+    The query never underestimates the exact per-row EMA: every bucket
+    holds the row's own (non-negative) mass plus colliding rows', decayed
+    uniformly, and min-over-depth preserves the bound.
+    """
+    g32 = g.astype(jnp.float32)
+    gsq = g32 * g32
+    # (1 - b2) in f32 for bitwise agreement with the rest of the package.
+    b2f = jnp.asarray(b2, jnp.float32)
+    width = table.shape[1]
+
+    def per_depth(tab_j, idx_j):
+        scat = jax.ops.segment_sum(gsq, idx_j, num_segments=width)
+        return b2f * tab_j + (1.0 - b2f) * scat
+
+    new = jax.vmap(per_depth)(table.astype(jnp.float32), idx)
+    gathered = jax.vmap(lambda tab_j, idx_j: tab_j[idx_j])(new, idx)
+    return new, jnp.min(gathered, axis=0)
 
 
 def one_sided_fold(u: jnp.ndarray, q: jnp.ndarray, g: jnp.ndarray,

@@ -18,9 +18,12 @@ host, set ``REPRO_TRAIN_DEVICES=8`` (or export the matching ``XLA_FLAGS``)
 to get virtual devices for the mesh.
 
 ``--mixed-groups`` (default for adapprox) makes the optimizer a
-``partition`` chain: dense bias-corrected Adam on 1-D/small leaves,
-Adapprox on matrices — per-layer sensitivity without blanket
-factorization (Kalra et al., 2025 / Shazeer & Stern, 2018).
+``partition`` chain with three state families: the count-min sketch on
+embedding tables (>= ``--embedding-min-rows`` rows; ``--sketch-width`` /
+``--sketch-depth`` size the hashed second moment), Adapprox on factorable
+matrices, dense bias-corrected Adam on 1-D/small leaves — per-layer
+sensitivity without blanket factorization (Kalra et al., 2025 / Shazeer &
+Stern, 2018).
 
 Telemetry: ``--telemetry-dir DIR`` streams per-group optimizer snapshots
 (xi / rank / clip activation / refresh counters) and straggler events as
@@ -62,7 +65,9 @@ def optimizer_config(name: str, steps: int, lr: float,
                      refresh_every: int = 1, warm_start: bool = False,
                      bucketed: bool = False, fused_update: bool = False,
                      mixed_groups: bool = False, telemetry: bool = False,
-                     dynamic_refresh: bool = False) -> OptimizerConfig:
+                     dynamic_refresh: bool = False,
+                     sketch_width: int = 2048, sketch_depth: int = 4,
+                     embedding_min_rows: int = 1024) -> OptimizerConfig:
     """The launcher's OptimizerConfig: cosine schedule derived from the run
     length, paper-faithful Adapprox adaptive-rank settings.  The amortized-
     refresh knobs (refresh_every / warm_start / bucketed, adapprox only)
@@ -73,7 +78,9 @@ def optimizer_config(name: str, steps: int, lr: float,
     common = dict(name=name, lr=lr, schedule="cosine",
                   warmup_steps=max(steps // 20, 5), total_steps=steps,
                   min_lr=lr / 6, weight_decay=0.1,
-                  groups=default_mixed_groups() if mixed_groups else ())
+                  groups=default_mixed_groups() if mixed_groups else (),
+                  sketch_width=sketch_width, sketch_depth=sketch_depth,
+                  embedding_min_rows=embedding_min_rows)
     if name == "adapprox":
         return OptimizerConfig(**common, rank_mode="paper", k=1, k_max=128,
                                xi_thresh=0.01, delta_s=10,
@@ -147,6 +154,15 @@ def main(argv=None):
                          "adapprox on matrices (default for adapprox)")
     mg.add_argument("--no-mixed-groups", dest="mixed_groups",
                     action="store_false")
+    ap.add_argument("--sketch-width", type=int, default=2048,
+                    help="count-min sketch buckets per hash for the "
+                         "embeddings group (--mixed-groups)")
+    ap.add_argument("--sketch-depth", type=int, default=4,
+                    help="count-min sketch hash functions (min-over-depth)")
+    ap.add_argument("--embedding-min-rows", type=int, default=1024,
+                    help="leading-dim threshold for the embeddings group: "
+                         ">= 2-D leaves with at least this many rows take "
+                         "the sketch second moment")
     ap.add_argument("--telemetry-dir", default=None,
                     help="stream optimizer/straggler telemetry as JSONL "
                          "events here (repro.telemetry schema)")
@@ -175,7 +191,9 @@ def main(argv=None):
         refresh_every=args.refresh_every, warm_start=args.warm_start,
         bucketed=args.bucketed, fused_update=args.fused_update,
         mixed_groups=mixed, telemetry=telemetry_on,
-        dynamic_refresh=args.auto_refresh))
+        dynamic_refresh=args.auto_refresh,
+        sketch_width=args.sketch_width, sketch_depth=args.sketch_depth,
+        embedding_min_rows=args.embedding_min_rows))
     runtime = None
     if telemetry_on:
         from repro.telemetry import TelemetryRuntime

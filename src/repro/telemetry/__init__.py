@@ -46,6 +46,14 @@ JSONL event schema (version 1; authoritative machine form in
       clip_rate; plus per-leaf vectors xi / k / k_frac (+ leaf_indices
       into param flatten order) and mean/max aggregates when the group
       has factored leaves.
+  kind="sketch"     — one per count-min sketch group (``scale_by_sketch``
+      with ``telemetry``) per ``emit_every`` steps:
+      step, group, mean_occupancy (fraction of depth x width buckets
+      holding mass, averaged over sketched leaves), mean_overestimate
+      (collision proxy: queried mass over table mass, >= 1, == 1 with no
+      collisions); plus per-leaf vectors occupancy / overestimate
+      (+ leaf_indices into param flatten order) and max aggregates when
+      the group owns sketched leaves.
   kind="cadence"    — a controller decision:
       step, group, old, new, interval_mean_xi.
   kind="straggler"  — StragglerMonitor flag/escalation:
@@ -56,7 +64,8 @@ JSONL event schema (version 1; authoritative machine form in
       (+ peak_bytes, collective_bytes, compile_s, params).
   kind="run_meta"   — stream header: source (+ argv, config, note).
 """
-from repro.telemetry.collect import (get_refresh_every, named_snapshots,
+from repro.telemetry.collect import (get_refresh_every, named_sketch_snapshots,
+                                     named_sketch_states, named_snapshots,
                                      named_states, set_refresh_every,
                                      telemetry_metrics)
 from repro.telemetry.controller import (CadenceChange, ControllerConfig,
@@ -65,5 +74,6 @@ from repro.telemetry.runtime import TelemetryRuntime
 from repro.telemetry.sink import (EVENT_SCHEMA, SCHEMA_VERSION, SinkConfig,
                                   TelemetrySink, validate_dir,
                                   validate_event, validate_file)
-from repro.telemetry.snapshot import (TelemetrySnapshot, init_snapshot,
+from repro.telemetry.snapshot import (SketchSnapshot, TelemetrySnapshot,
+                                      init_sketch_snapshot, init_snapshot,
                                       snapshot_spec)

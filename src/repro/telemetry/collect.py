@@ -28,6 +28,11 @@ def _adapprox_cls():
     return AdapproxState
 
 
+def _sketch_cls():
+    from repro.core.sketch import SketchState
+    return SketchState
+
+
 def _group_name(path) -> str:
     """Last dict key on the path (partition group label), else 'default'."""
     name = "default"
@@ -54,8 +59,30 @@ def named_states(opt_state) -> "dict[str, Any]":
 def named_snapshots(opt_state) -> "dict[str, Any]":
     """``{group_name: TelemetrySnapshot}`` for every Adapprox instance
     that carries one (``cfg.telemetry``); empty dict when telemetry is
-    off everywhere."""
+    off everywhere.  Sketch instances have their own walker
+    (:func:`named_sketch_snapshots`) — their snapshot schema differs."""
     return {name: st.telemetry for name, st in named_states(opt_state).items()
+            if st.telemetry is not None}
+
+
+def named_sketch_states(opt_state) -> "dict[str, Any]":
+    """``{group_name: SketchState}`` for every ``scale_by_sketch``
+    instance inside an (arbitrarily nested) optimizer state."""
+    cls = _sketch_cls()
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        opt_state, is_leaf=lambda x: isinstance(x, cls))
+    out = {}
+    for path, leaf in flat:
+        if isinstance(leaf, cls):
+            out[_group_name(path)] = leaf
+    return out
+
+
+def named_sketch_snapshots(opt_state) -> "dict[str, Any]":
+    """``{group_name: SketchSnapshot}`` for every sketch instance that
+    carries one (``cfg.telemetry``); empty dict when telemetry is off."""
+    return {name: st.telemetry
+            for name, st in named_sketch_states(opt_state).items()
             if st.telemetry is not None}
 
 
@@ -139,4 +166,10 @@ def telemetry_metrics(opt_state) -> dict:
         out[pre + "clip_rate"] = jnp.mean(snap.clip_rate)
         out[pre + "refresh_every"] = snap.refresh_every
         out[pre + "did_refresh"] = snap.did_refresh
+    for name, snap in named_sketch_snapshots(opt_state).items():
+        pre = f"telemetry/{name}/"
+        if snap.occupancy.shape[0] > 0:
+            out[pre + "mean_occupancy"] = jnp.mean(snap.occupancy)
+            out[pre + "max_occupancy"] = jnp.max(snap.occupancy)
+            out[pre + "mean_overestimate"] = jnp.mean(snap.overestimate)
     return out

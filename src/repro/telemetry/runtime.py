@@ -67,6 +67,11 @@ class TelemetryRuntime:
         jitted step returned (or a bare optimizer state); returns it,
         possibly with retuned cadence scalars."""
         opt_state = getattr(state, "opt_state", state)
+        sketch_snaps = collect.named_sketch_snapshots(opt_state)
+        if sketch_snaps and self.sink is not None \
+                and step % self.cfg.emit_every == 0:
+            for name, snap in sorted(jax.device_get(sketch_snaps).items()):
+                self.sink.emit(self._sketch_event(step, name, snap))
         snaps = collect.named_snapshots(opt_state)
         if self.controller is not None and not self._checked_dynamic:
             # Fail on the FIRST step, not at the first cadence decision
@@ -88,7 +93,8 @@ class TelemetryRuntime:
                     "dynamic_refresh=True")
             self._checked_dynamic = True
         if not snaps:
-            if not self._warned_no_snaps and self.cfg.enabled:
+            if not self._warned_no_snaps and self.cfg.enabled \
+                    and not sketch_snaps:
                 # Sink-only misconfig (optimizer built without
                 # telemetry=True): no error — the stream legitimately
                 # carries straggler events for non-adapprox optimizers —
@@ -152,6 +158,23 @@ class TelemetryRuntime:
                       mean_xi=float(xi.mean()), max_xi=float(xi.max()),
                       mean_k=float(k.mean()), mean_k_frac=float(kf.mean()),
                       leaf_indices=list(snap.leaf_indices))
+        return ev
+
+    @staticmethod
+    def _sketch_event(step: int, group: str, snap) -> dict:
+        ev = {"kind": "sketch", "step": int(step), "group": group}
+        occ = np.asarray(snap.occupancy)
+        over = np.asarray(snap.overestimate)
+        if occ.shape[0] > 0:
+            ev.update(occupancy=occ.tolist(), overestimate=over.tolist(),
+                      mean_occupancy=float(occ.mean()),
+                      max_occupancy=float(occ.max()),
+                      mean_overestimate=float(over.mean()),
+                      max_overestimate=float(over.max()),
+                      leaf_indices=list(snap.leaf_indices))
+        else:
+            # the group exists but owns no sketched leaves this run
+            ev.update(mean_occupancy=0.0, mean_overestimate=1.0)
         return ev
 
     # -- checkpoint integration --------------------------------------------

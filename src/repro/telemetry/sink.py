@@ -51,6 +51,13 @@ EVENT_SCHEMA = {
                      "mean_k_frac": _NUM, "leaf_indices": list,
                      "dense_indices": list},
     },
+    "sketch": {
+        "required": {"step": int, "group": str, "mean_occupancy": _NUM,
+                     "mean_overestimate": _NUM},
+        "optional": {"occupancy": list, "overestimate": list,
+                     "max_occupancy": _NUM, "max_overestimate": _NUM,
+                     "leaf_indices": list},
+    },
     "cadence": {
         "required": {"step": int, "group": str, "old": int, "new": int,
                      "interval_mean_xi": _NUM},

@@ -96,7 +96,44 @@ def init_snapshot(n_factored: int, n_leaves: int, refresh_every: int,
     )
 
 
-def snapshot_spec(snap: TelemetrySnapshot) -> TelemetrySnapshot:
+def snapshot_spec(snap):
     """Sharding spec: every telemetry leaf is replicated (scalars and tiny
-    per-leaf vectors — there is nothing to shard)."""
+    per-leaf vectors — there is nothing to shard).  Works for both
+    ``TelemetrySnapshot`` and ``SketchSnapshot``."""
     return jax.tree.map(lambda _: P(), snap)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SketchSnapshot:
+    """Per-step telemetry for one ``scale_by_sketch`` instance.
+
+    step:         int32 scalar — optimizer step the snapshot describes.
+    occupancy:    (n_sketched,) f32 — per sketched leaf, the fraction of
+                  (depth x width) buckets holding any mass.  Climbs toward
+                  1.0 as rows touch the table; a saturated sketch is the
+                  signal to widen it.
+    overestimate: (n_sketched,) f32 — collision over-estimate proxy: total
+                  queried mass over total table mass (one depth row holds
+                  the whole EMA'd G^2 mass).  >= 1 by the count-min bound;
+                  == 1 exactly when no rows collide.
+    leaf_indices: static tuple — flat param index of each entry, in
+                  ``jax.tree.flatten(params)`` order.
+    """
+
+    step: jnp.ndarray
+    occupancy: jnp.ndarray
+    overestimate: jnp.ndarray
+    leaf_indices: tuple = dataclasses.field(
+        default=(), metadata=dict(static=True))
+
+
+def init_sketch_snapshot(n_sketched: int,
+                         leaf_indices: tuple = ()) -> SketchSnapshot:
+    """The step-0 sketch snapshot (empty table: occupancy 0, ratio 1)."""
+    return SketchSnapshot(
+        step=jnp.zeros((), jnp.int32),
+        occupancy=jnp.zeros((n_sketched,), jnp.float32),
+        overestimate=jnp.ones((n_sketched,), jnp.float32),
+        leaf_indices=tuple(leaf_indices),
+    )

@@ -13,6 +13,7 @@ from repro.core import (CountState, PartitionState, build_optimizer,
 from repro.core.adamw import AdamWState
 from repro.core.adapprox import AdapproxState, adapprox_state
 from repro.core import factored as F
+from repro.core.sketch import SketchLeaf, sketch_state
 
 
 def _params():
@@ -33,14 +34,19 @@ BASE = dict(schedule="constant", lr=1e-3, weight_decay=0.0,
 # ---------------------------------------------------------------------------
 
 def test_mixed_groups_routes_by_shape():
-    """The production default: matrices >= min_dim_factor under Adapprox
-    (factored), 1-D and small leaves under dense bias-corrected Adam."""
+    """The production default: embedding tables (>= embedding_min_rows
+    rows) under the count-min sketch, matrices >= min_dim_factor under
+    Adapprox (factored), 1-D and small leaves under dense Adam.  No leaf
+    here reaches the default 1024-row threshold, so the embeddings group
+    exists but owns nothing."""
     opt = build_optimizer(OptimizerConfig(
         name="adapprox", groups=default_mixed_groups(), **BASE))
     params = _params()
     state = opt.init(params)
     # chain state -> (partition,) is not wrapped: partition IS the top level
     assert isinstance(state, PartitionState)
+    # every declared group gets inner state, owned leaves or not
+    assert set(state.inner) == {"dense", "embeddings", "factored"}
     # flatten order of the params dict: b, tiny, w
     assert state.labels == ("dense", "dense", "factored")
     ad = adapprox_state(state.inner["factored"])
@@ -92,6 +98,50 @@ def test_groups_duplicate_label_rejected():
         build_optimizer(cfg)
 
 
+def test_embeddings_selector_first_hit_wins():
+    """(64, 96) qualifies for BOTH "embeddings" (64 rows >= min_rows=64)
+    and "factored" (both dims >= min_dim_factor=32): group ORDER decides
+    ownership, exactly like the other selectors."""
+    kw = dict(BASE, embedding_min_rows=64)
+    emb_first = (
+        ("embeddings", GroupSpec(select="embeddings", name="sketch")),
+        ("factored", GroupSpec(select="factored")),
+        ("dense", GroupSpec(select="rest", name="adamw")))
+    fac_first = (
+        ("factored", GroupSpec(select="factored")),
+        ("embeddings", GroupSpec(select="embeddings", name="sketch")),
+        ("dense", GroupSpec(select="rest", name="adamw")))
+    params = _params()
+    s1 = build_optimizer(OptimizerConfig(
+        name="adapprox", groups=emb_first, **kw)).init(params)
+    s2 = build_optimizer(OptimizerConfig(
+        name="adapprox", groups=fac_first, **kw)).init(params)
+    # flatten order b, tiny, w
+    assert s1.labels == ("dense", "dense", "embeddings")
+    assert s2.labels == ("dense", "dense", "factored")
+    st = sketch_state(s1.inner["embeddings"])
+    assert sum(isinstance(l, SketchLeaf) for l in st.leaves) == 1
+
+
+def test_mixed_groups_sketch_matches_standalone():
+    """A sketched leaf's grouped update is bit-identical to the standalone
+    sketch chain on the same leaf (the group sees only its own leaves, so
+    leaf positions — and with them the hash seeds — line up)."""
+    kw = dict(BASE, embedding_min_rows=64, sketch_width=128, sketch_depth=2)
+    params = _params()
+    grads = _grads(params)
+    mixed = build_optimizer(OptimizerConfig(
+        name="adapprox", groups=default_mixed_groups(), **kw))
+    u_mix, _ = mixed.update(grads, mixed.init(params), params)
+
+    solo = build_optimizer(OptimizerConfig(name="sketch", **kw))
+    sub_p = {"w": params["w"]}
+    sub_g = {"w": grads["w"]}
+    u_solo, _ = solo.update(sub_g, solo.init(sub_p), sub_p)
+    np.testing.assert_array_equal(np.asarray(u_mix["w"]),
+                                  np.asarray(u_solo["w"]))
+
+
 # ---------------------------------------------------------------------------
 # per-group LR multipliers
 # ---------------------------------------------------------------------------
@@ -126,6 +176,37 @@ def test_group_lr_scale_scales_only_that_group():
     np.testing.assert_allclose(np.asarray(u1["tiny"]),
                                0.5 * np.asarray(u0["tiny"]), rtol=1e-6)
     np.testing.assert_array_equal(np.asarray(u1["b"]), np.asarray(u0["b"]))
+
+
+def test_lr_scale_per_family_three_groups():
+    """lr_scale applies per group across all three state families: the
+    sketch and factored groups scale independently, dense is untouched."""
+    kw = dict(BASE, embedding_min_rows=64)
+
+    def groups(emb_scale, fac_scale):
+        return (
+            ("embeddings", GroupSpec(select="embeddings", name="sketch",
+                                     lr_scale=emb_scale)),
+            ("factored", GroupSpec(select="factored", lr_scale=fac_scale)),
+            ("dense", GroupSpec(select="rest", name="adamw")))
+
+    # w (64, 96) -> embeddings; fm (48, 96) -> factored; b, tiny -> dense
+    params = dict(_params(), fm=jnp.full((48, 96), 0.5))
+    grads = _grads(params)
+    base = build_optimizer(OptimizerConfig(
+        name="adapprox", groups=groups(1.0, 1.0), **kw))
+    u0, _ = base.update(grads, base.init(params), params)
+    scaled = build_optimizer(OptimizerConfig(
+        name="adapprox", groups=groups(0.5, 0.25), **kw))
+    u1, _ = scaled.update(grads, scaled.init(params), params)
+
+    np.testing.assert_allclose(np.asarray(u1["w"]),
+                               0.5 * np.asarray(u0["w"]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(u1["fm"]),
+                               0.25 * np.asarray(u0["fm"]), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(u1["b"]), np.asarray(u0["b"]))
+    np.testing.assert_array_equal(np.asarray(u1["tiny"]),
+                                  np.asarray(u0["tiny"]))
 
 
 def test_lr_scale_one_is_bit_exact():
@@ -208,10 +289,11 @@ def test_bench_memory_per_device_shrinks():
     assert sizes == sorted(sizes, reverse=True) and sizes[0] > sizes[-1]
     for r in rows:
         g = r["group_bytes_per_device"]
-        assert set(g) == {"dense", "factored"}
-        assert g["dense"] > 0 and g["factored"] > 0
+        assert set(g) == {"dense", "embeddings", "factored"}
+        # gpt2's wte/wpe clear the 1024-row threshold -> sketched
+        assert g["dense"] > 0 and g["factored"] > 0 and g["embeddings"] > 0
         # per-group split adds up to the per-device total
-        assert g["dense"] + g["factored"] == r["opt_state_bytes_per_device"]
+        assert sum(g.values()) == r["opt_state_bytes_per_device"]
     # the per-group figures are per-device too: they shrink with the mesh
     dense = [r["group_bytes_per_device"]["dense"] for r in rows]
     assert dense == sorted(dense, reverse=True) and dense[0] > dense[-1]

@@ -91,6 +91,31 @@ def test_straggler_never_escalates_on_uniform(seq):
     assert not mon.escalations
 
 
+@given(rows=st.integers(1, 64), inner=st.integers(1, 8),
+       depth=st.integers(1, 4), width=st.integers(1, 32),
+       b2=st.floats(0.5, 0.999), steps=st.integers(1, 4),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_count_min_query_never_underestimates(rows, inner, depth, width,
+                                              b2, steps, seed):
+    """The sketch backend's core invariant: after any number of EMA
+    steps, the min-over-depth query is >= the exact per-row second-moment
+    EMA for EVERY row (additions are non-negative, decay is uniform,
+    collisions only add mass)."""
+    from repro.core.sketch import _leaf_seeds, bucket_indices
+    from repro.kernels import ref
+
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(bucket_indices(rows, width, _leaf_seeds(seed, 0, depth)))
+    table = jnp.zeros((depth, width, inner), jnp.float32)
+    exact = np.zeros((rows, inner), np.float32)
+    for _ in range(steps):
+        g = jnp.asarray(rng.standard_normal((rows, inner)), jnp.float32)
+        table, q = ref.sketch_update(table, g, idx, b2)
+        exact = b2 * exact + (1.0 - b2) * np.square(np.asarray(g))
+        assert np.all(np.asarray(q) >= exact * (1 - 1e-5) - 1e-7)
+
+
 @given(k=st.integers(1, 32))
 @settings(**SET)
 def test_factored_state_memory_monotone_in_rank(k):

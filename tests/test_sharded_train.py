@@ -1,6 +1,7 @@
 """Sharded training path on 8 virtual CPU devices (subprocess — needs its
-own XLA device count): mesh-jitted train step with the mixed
-dense/factored partition chain, live opt-state NamedShardings, and the
+own XLA device count): mesh-jitted train step with the mixed three-family
+partition chain (count-min sketch on the token embedding, Adapprox on
+matrices, dense Adam on the rest), live opt-state NamedShardings, and the
 checkpoint resharding round trip.
 
 Contracts pinned down (see the scripts for the assertions):
@@ -47,10 +48,14 @@ def make_opt():
     # refresh_every=2 so the step-3 checkpoint lands MID-interval: step 4
     # folds under the frozen basis, step 5 refreshes — the continuation
     # only stays exact if the factored state and step counter round-trip.
+    # embedding_min_rows=64 puts the VOCAB=128 token embedding under the
+    # count-min sketch, so all THREE state families ride the round trip
+    # (the 32-row position embedding stays factored).
     return build_optimizer(OptimizerConfig(
         name="adapprox", schedule="constant", lr=1e-3, weight_decay=0.1,
         decay_mask="no_1d", min_dim_factor=32, k=4, rank_mode="static",
-        implicit=False, refresh_every=2, groups=default_mixed_groups()))
+        implicit=False, refresh_every=2, groups=default_mixed_groups(),
+        embedding_min_rows=64, sketch_width=256, sketch_depth=2))
 
 def setup(mesh_spec):
     cfg = get_smoke_config("gpt2-117m", vocab=VOCAB, max_seq_len=SEQ)
@@ -87,6 +92,13 @@ base = tempfile.mkdtemp()
 
 # --- uninterrupted sharded reference: 5 steps on (4, 2) -------------------
 state5, l5 = run((4, 2), 5)
+
+# the bitwise claims below cover all three families: the token embedding
+# really is under the count-min sketch
+from repro.core.sketch import SketchLeaf, sketch_state
+sk = sketch_state(state5.opt_state)
+assert any(isinstance(l, SketchLeaf) for l in sk.leaves), sk.leaves
+print("SKETCH_FAMILY_PRESENT_OK")
 
 # --- 3 steps on (4, 2), blocking save (mid-refresh-interval) --------------
 d0 = os.path.join(base, "save42"); os.makedirs(d0)
@@ -216,13 +228,18 @@ from repro.core import factored as F
 
 state = LT.main(["--smoke", "--steps", "2", "--log-every", "1",
                  "--batch", "8", "--seq", "32",
-                 "--mesh", "4,2", "--mixed-groups"])
+                 "--mesh", "4,2", "--mixed-groups",
+                 "--embedding-min-rows", "256", "--sketch-width", "256",
+                 "--sketch-depth", "2"])
 
-# partition state with static labels survived the mesh-jitted step
+# partition state with static labels survived the mesh-jitted step; the
+# 512-row smoke vocab clears --embedding-min-rows 256, so the token
+# embedding rides the sketch group
 pstate = state.opt_state
 assert isinstance(pstate, PartitionState), type(pstate)
-assert set(pstate.inner) == {"dense", "factored"}, pstate.inner.keys()
-assert set(pstate.labels) == {"dense", "factored"}
+assert set(pstate.inner) == {"dense", "embeddings", "factored"}, \
+    pstate.inner.keys()
+assert set(pstate.labels) == {"dense", "embeddings", "factored"}
 
 # every live opt-state leaf carries a NamedSharding from the mesh jit
 for leaf in jax.tree.leaves(state.opt_state):
@@ -240,6 +257,18 @@ adam = [s for s in pstate.inner["dense"] if isinstance(s, AdamWState)]
 assert adam and all(x.ndim <= 1 or min(x.shape[-2:]) < 64
                     for x in jax.tree.leaves(adam[0].m)), \
     "dense Adam group should hold only 1-D/small leaves"
+
+# the embeddings group holds the sketched token embedding: the hashed
+# table replaces the row axis, the exact first moment shards with FSDP
+from repro.core.sketch import SketchLeaf, sketch_state
+sk = sketch_state(pstate.inner["embeddings"])
+sls = [l for l in sk.leaves if isinstance(l, SketchLeaf)]
+assert sls, "no sketched leaves under the embeddings group"
+assert all(l.table.shape[:2] == (2, 256) for l in sls), \
+    [l.table.shape for l in sls]
+assert any(any(ax is not None for ax in l.m.sharding.spec) for l in sls), \
+    "no sketch first moment is actually sharded"
+print("SKETCH_GROUP_SHARDED_OK")
 # params sharded too (FSDP default on)
 assert any(any(ax is not None for ax in l.sharding.spec)
            for l in jax.tree.leaves(state.params) if l.ndim >= 2)
@@ -261,7 +290,8 @@ def _run(script: str, name: str, timeout=1800):
 
 def test_resharding_round_trip():
     out = _run(ROUNDTRIP, "resharding round trip")
-    for marker in ("RESTORE_BITWISE_OK", "RESHARD_PLACED_OK",
+    for marker in ("SKETCH_FAMILY_PRESENT_OK",
+                   "RESTORE_BITWISE_OK", "RESHARD_PLACED_OK",
                    "SAME_MESH_BITWISE_OK", "CKPT_EQ_LIVE_OK",
                    "CROSS_MESH_TOL_OK", "ROUNDTRIP_OK"):
         assert marker in out, out
@@ -270,6 +300,7 @@ def test_resharding_round_trip():
 def test_launcher_mesh_smoke():
     out = _run(LAUNCHER, "launcher mesh smoke")
     assert "OPT_STATE_NAMED_SHARDINGS_OK" in out, out
+    assert "SKETCH_GROUP_SHARDED_OK" in out, out
     assert "LAUNCHER_MESH_OK" in out, out
 
 
