@@ -21,6 +21,7 @@ import logging
 import shutil
 import signal
 import threading
+import time
 from pathlib import Path
 from typing import Any, Callable, Optional
 
@@ -38,6 +39,12 @@ class CheckpointConfig:
     keep: int = 3
     keep_every: int = 0          # 0 = disabled
     async_save: bool = True
+    # Transient-I/O retry policy (NFS blips, throttled object stores).
+    # io_retries is the number of RE-tries after the first attempt;
+    # backoff doubles per attempt from retry_backoff_s, no jitter —
+    # chaos tests count attempts deterministically.
+    io_retries: int = 2
+    retry_backoff_s: float = 0.05
 
 
 class CheckpointManager:
@@ -47,6 +54,24 @@ class CheckpointManager:
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
         self._prev_handlers: Optional[dict] = None
+
+    def _with_retries(self, fn, what: str):
+        """Run ``fn`` retrying OSErrors with exponential backoff.
+
+        Only OSError (the transient-I/O class) is retried; corruption and
+        programming errors propagate immediately — retrying those just
+        hides the bug for io_retries * backoff seconds."""
+        delay = self.cfg.retry_backoff_s
+        for attempt in range(self.cfg.io_retries + 1):
+            try:
+                return fn()
+            except OSError as e:
+                if attempt == self.cfg.io_retries:
+                    raise
+                log.warning("%s failed (%s); retry %d/%d in %.2fs",
+                            what, e, attempt + 1, self.cfg.io_retries, delay)
+                time.sleep(delay)
+                delay *= 2
 
     # -- save ------------------------------------------------------------
     def should_save(self, step: int) -> bool:
@@ -63,9 +88,12 @@ class CheckpointManager:
 
         def work():
             try:
-                SER.save_pytree(host_tree, self.directory, step,
-                                extra_meta=extra_meta,
-                                leaf_specs=leaf_specs, mesh_axes=mesh_axes)
+                self._with_retries(
+                    lambda: SER.save_pytree(
+                        host_tree, self.directory, step,
+                        extra_meta=extra_meta,
+                        leaf_specs=leaf_specs, mesh_axes=mesh_axes),
+                    what=f"checkpoint save step {step}")
                 self._retain()
             except BaseException as e:  # noqa: BLE001 — surfaced on wait()
                 self._error = e
@@ -120,16 +148,36 @@ class CheckpointManager:
         """Restore into the structure of ``like``, re-placed under
         ``shardings`` — a pytree of NamedSharding for the CURRENT mesh,
         which need not resemble the saving mesh (resharding happens at
-        load; save on (4, 2), restore on (2, 4), (8,) or one device)."""
-        if step is None:
-            p = SER.latest_checkpoint(self.directory)
-            if p is None:
-                raise FileNotFoundError(
-                    f"no committed checkpoint under {self.directory}")
-        else:
+        load; save on (4, 2), restore on (2, 4), (8,) or one device).
+
+        With no explicit ``step``, candidates are tried newest-first with
+        full checksum verification; a truncated or bit-flipped latest
+        checkpoint logs a warning and falls back to the previous GOOD one
+        instead of crashing the restart loop.  An explicit ``step`` is a
+        user decision: corruption there raises CheckpointCorruptError."""
+        if step is not None:
             p = self.directory / f"step_{step:09d}"
-        tree = SER.restore_pytree(p, like, shardings)
-        return tree, SER.checkpoint_step(p)
+            tree = self._with_retries(
+                lambda: SER.restore_pytree(p, like, shardings),
+                what=f"checkpoint restore step {step}")
+            return tree, SER.checkpoint_step(p)
+        candidates = SER.list_checkpoints(self.directory)
+        if not candidates:
+            raise FileNotFoundError(
+                f"no committed checkpoint under {self.directory}")
+        last_err: Optional[Exception] = None
+        for p in reversed(candidates):
+            try:
+                tree = self._with_retries(
+                    lambda p=p: SER.restore_pytree(p, like, shardings),
+                    what=f"checkpoint restore {p.name}")
+                return tree, SER.checkpoint_step(p)
+            except SER.CheckpointCorruptError as e:
+                log.warning("skipping corrupt checkpoint %s: %s", p.name, e)
+                last_err = e
+        raise SER.CheckpointCorruptError(
+            f"all {len(candidates)} checkpoints under {self.directory} "
+            f"failed verification") from last_err
 
     # -- preemption -----------------------------------------------------------
     def install_preemption_handler(self, get_state: Callable[[], tuple]):
@@ -147,7 +195,15 @@ class CheckpointManager:
         and the signal re-raised.  The originals are put back once this
         handler fires (one flush per preemption) or on
         :meth:`uninstall_preemption_handler`.
+
+        Re-installing while already installed is idempotent: the previous
+        installation is torn down first, so ``prev`` always points at the
+        handlers from OUTSIDE this manager — a naive double-install would
+        chain the handler to itself and flush (and re-raise) twice per
+        signal.
         """
+        if self._prev_handlers is not None:
+            self.uninstall_preemption_handler()
         prev = {}
 
         def handler(signum, frame):

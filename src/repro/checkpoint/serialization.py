@@ -28,6 +28,7 @@ keyed by shard index.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
 import shutil
@@ -39,6 +40,26 @@ import jax.numpy as jnp
 import numpy as np
 
 COMMIT_MARKER = "_COMMITTED"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint directory failed integrity verification."""
+
+
+def _fsync_path(path: Path) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _sha256(path: Path) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
 
 
 def _tree_paths(tree) -> list[str]:
@@ -105,13 +126,25 @@ def save_pytree(tree: Any, directory: "str | Path", step: int,
         manifest["leaves"].append({
             "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype),
             "spec": spec,
+            "bytes": os.path.getsize(tmp / fname),
+            "sha256": _sha256(tmp / fname),
         })
-    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        _fsync_path(tmp / fname)
+    mpath = tmp / "manifest.json"
+    mpath.write_text(json.dumps(manifest, indent=1))
+    _fsync_path(mpath)
+    # The marker goes into the tmp dir BEFORE the rename: the rename is
+    # then the single commit point, so a kill anywhere mid-save leaves
+    # either the old step or nothing visible — never a half-written dir
+    # that looks committed.  (A marker touched after the rename — the
+    # old scheme — had a crash window where step_N existed uncommitted.)
+    (tmp / COMMIT_MARKER).touch()
+    _fsync_path(tmp)
 
     if final.exists():
         shutil.rmtree(final)
-    os.replace(tmp, final)
-    (final / COMMIT_MARKER).touch()          # commit point
+    os.replace(tmp, final)                   # commit point
+    _fsync_path(directory)
     return final
 
 
@@ -119,12 +152,49 @@ def is_committed(ckpt_dir: "str | Path") -> bool:
     return (Path(ckpt_dir) / COMMIT_MARKER).exists()
 
 
+def verify_checkpoint(ckpt_dir: "str | Path", deep: bool = False) -> bool:
+    """Integrity check for one step directory.
+
+    Structural (always): commit marker present, manifest parses, every
+    leaf file exists with the byte size the manifest recorded.  Cheap —
+    safe on the ``latest_step()`` path.  Manifests from before checksums
+    were recorded (no ``bytes`` field) pass the size check vacuously.
+
+    deep=True additionally re-hashes every leaf file against the
+    manifest sha256 — catches bit flips that leave sizes intact.  Only
+    the restore path pays for this.
+    """
+    ckpt_dir = Path(ckpt_dir)
+    if not is_committed(ckpt_dir):
+        return False
+    try:
+        manifest = json.loads((ckpt_dir / "manifest.json").read_text())
+    except (OSError, json.JSONDecodeError):
+        return False
+    for entry in manifest.get("leaves", []):
+        fpath = ckpt_dir / entry["file"]
+        if not fpath.exists():
+            return False
+        want = entry.get("bytes")
+        if want is not None and os.path.getsize(fpath) != want:
+            return False
+        if deep:
+            digest = entry.get("sha256")
+            if digest is not None and _sha256(fpath) != digest:
+                return False
+    return True
+
+
 def list_checkpoints(directory: "str | Path") -> list[Path]:
+    """Committed, structurally-valid step dirs, oldest first.  Incomplete
+    or manifest-less directories (an interrupted save, a crash between
+    mkdir and rename under the pre-hardening format) are skipped, not
+    raised on."""
     directory = Path(directory)
     if not directory.exists():
         return []
     out = [p for p in sorted(directory.glob("step_*"))
-           if is_committed(p)]
+           if p.is_dir() and verify_checkpoint(p)]
     return out
 
 
@@ -134,12 +204,22 @@ def latest_checkpoint(directory: "str | Path") -> Optional[Path]:
 
 
 def restore_pytree(ckpt_dir: "str | Path", like: Any,
-                   shardings: Any = None) -> Any:
+                   shardings: Any = None, verify: bool = True) -> Any:
     """Restore into the structure of ``like``; re-place under ``shardings``
     (pytree of NamedSharding or None for host arrays).  Shapes must match —
-    resharding is free, reshaping is an error surfaced loudly."""
+    resharding is free, reshaping is an error surfaced loudly.
+
+    verify=True (default) deep-verifies checksums first and raises
+    :class:`CheckpointCorruptError` on any mismatch — loading a silently
+    bit-flipped second moment is strictly worse than failing over to the
+    previous checkpoint (which ``CheckpointManager.restore`` does)."""
     ckpt_dir = Path(ckpt_dir)
-    assert is_committed(ckpt_dir), f"uncommitted checkpoint: {ckpt_dir}"
+    if verify:
+        if not verify_checkpoint(ckpt_dir, deep=True):
+            raise CheckpointCorruptError(
+                f"checkpoint failed integrity verification: {ckpt_dir}")
+    elif not is_committed(ckpt_dir):
+        raise CheckpointCorruptError(f"uncommitted checkpoint: {ckpt_dir}")
     manifest = json.loads((ckpt_dir / "manifest.json").read_text())
 
     like_leaves, treedef = jax.tree.flatten(like)

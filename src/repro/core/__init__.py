@@ -109,6 +109,35 @@ identical):
     and relaxes it after sustained calm (hysteresis; deterministic and
     checkpointable, so restarts replay the same decisions).
 
+Resilience (repro.resilience; OptimizerConfig knobs, default-off => the
+default chain stays bitwise identical and the state pytree gains no
+leaves):
+
+  * ``guards=True`` — two in-jit enforcement levels, both contained
+    without a host round-trip.  ``build_optimizer`` wraps the WHOLE
+    chain in ``resilience.guards.guard_updates``: any non-finite
+    gradient or final-update leaf zeroes the step and reverts the inner
+    state wholesale (weight decay included — params and every EMA are
+    exactly their pre-step values; only the skip counters advance).
+    Inside ``scale_by_adapprox``, a per-factored-leaf xi watchdog
+    (``guard_xi_trip``) treats an approximation-error blow-up as a sick
+    factorization: the leaf gets a FORCED full S-RSI refresh next step,
+    overriding the fold cadence.
+  * ``max_demotions=N`` — graceful degradation budget: after N
+    CONSECUTIVE xi trips a leaf is demoted to the exact dense second
+    moment (per-leaf ``lax.cond``; the dense buffer is seeded from the
+    factored reconstruction ``max(Q U^T, 0)`` at demotion time, so the
+    EMA continues without a cold restart).  0 disables demotion and the
+    dense shadow buffers it would need.
+
+  Guard activity surfaces as ``kind="fault"`` telemetry events and
+  pauses the closed-loop controller's cadence relaxation; checkpoint
+  I/O is hardened independently (atomic rename-commit, per-leaf sha256,
+  retry-with-backoff, restore fallback past corrupt checkpoints — see
+  ``checkpoint/serialization.py``).  The deterministic fault-injection
+  harness (``resilience.chaos`` + ``tools/chaos.py`` +
+  tests/test_chaos.py) drives all of it through the real train loop.
+
 Sharding: every stateful transformation carries a ``state_sharding_spec``
 hook mapping param PartitionSpecs to state PartitionSpecs;
 ``distributed/sharding.py`` consumes it without knowing any state class.

@@ -67,6 +67,8 @@ from repro.core import srsi as S
 from repro.core.transform import (add_decayed_weights, scale,
                                   scale_by_schedule)
 from repro.core.types import GradientTransformation, chain
+from repro.resilience.guards import (GuardConfig, GuardState, guard_spec,
+                                     init_guard_state)
 from repro.telemetry.snapshot import (TelemetrySnapshot, init_snapshot,
                                       snapshot_spec)
 
@@ -127,6 +129,22 @@ class AdapproxConfig:
                                            # (telemetry/controller.py) can
                                            # retune the cadence at runtime
                                            # with ZERO recompilation
+    # --- resilience (repro.resilience; default None => state pytree and
+    # arithmetic unchanged)
+    guards: Optional[GuardConfig] = None   # per-leaf xi guards: a blow-up
+                                           # past guards.xi_trip forces a
+                                           # full S-RSI refresh next step;
+                                           # after guards.max_demotions
+                                           # CONSECUTIVE trips the leaf
+                                           # falls back to the exact dense
+                                           # second moment (per-leaf
+                                           # lax.cond; needs a dense shadow
+                                           # buffer, so demotion allocates
+                                           # only when max_demotions > 0).
+                                           # Forces the per-leaf path
+                                           # (bucketed stacking would batch
+                                           # the per-leaf demotion cond
+                                           # into a select).
 
 
 @jax.tree_util.register_dataclass
@@ -145,6 +163,10 @@ class AdapproxState:
                                       # refresh cadence as a TRACED int32
                                       # scalar — the controller retunes it
                                       # without retriggering compilation
+    guards: Optional[GuardState] = None
+                                      # cfg.guards: per-factored-leaf trip /
+                                      # forced-refresh / demotion state
+                                      # (None => absent, pytree unchanged)
 
 
 def _rms(x: jnp.ndarray) -> jnp.ndarray:
@@ -270,13 +292,19 @@ def _init_leaf(p: jnp.ndarray, cfg: AdapproxConfig):
 def _factored_update_2d(g, q, u, k, xi_prev, m1, key, step,
                         cfg: AdapproxConfig,
                         r_store: int, p_eff: int, k_max_leaf: int,
-                        refresh_t=None):
+                        refresh_t=None, force_refresh=None):
     """``refresh_t``: the refresh cadence as a traced int32 scalar
     (``cfg.dynamic_refresh``) or ``None`` (the compile-time
     ``cfg.refresh_every`` applies).  Returns one extra trailing output vs
     the pre-telemetry signature — ``clip_active`` (f32 scalar, 1.0 when
     the RMS clip engaged) — which is free to compute and dead-code
-    eliminated when the caller drops it (telemetry off)."""
+    eliminated when the caller drops it (telemetry off).
+
+    ``force_refresh``: optional traced int32 scalar (the xi guard's
+    per-leaf flag, ``cfg.guards``) OR-ed into the refresh predicate — a
+    tripped leaf re-factorizes immediately instead of waiting out the
+    fold cadence.  It rides in via closure like ``step``, so it stays an
+    unbatched scalar under vmap and the cond remains a real branch."""
     g32 = g.astype(jnp.float32)
     dynamic = cfg.dynamic_refresh and refresh_t is not None
     r_every = refresh_t if dynamic else cfg.refresh_every
@@ -369,14 +397,18 @@ def _factored_update_2d(g, q, u, k, xi_prev, m1, key, step,
         # host-side cadence change re-uses the compiled executable (zero
         # recompilation — tests/test_telemetry.py).  T = 1 refreshes every
         # step through the cond (same arithmetic as the direct call).
-        q_new, u_new, k_new, xi = jax.lax.cond(
-            _refresh_pred(step, refresh_t), _refresh, _fold)
+        pred = _refresh_pred(step, refresh_t)
     elif cfg.refresh_every > 1:
         # step counts from 1; refresh at t = 1, 1+T, 1+2T, ...  The scalar
         # predicate is unbatched under vmap, so lax.cond stays a real
         # branch (fold steps never pay for the S-RSI HLO).
-        q_new, u_new, k_new, xi = jax.lax.cond(
-            _refresh_pred(step, cfg.refresh_every), _refresh, _fold)
+        pred = _refresh_pred(step, cfg.refresh_every)
+    else:
+        pred = None                        # refresh every step, no cond
+    if pred is not None:
+        if force_refresh is not None:
+            pred = jnp.logical_or(pred, force_refresh > 0)
+        q_new, u_new, k_new, xi = jax.lax.cond(pred, _refresh, _fold)
     else:
         q_new, u_new, k_new, xi = _refresh()
 
@@ -448,24 +480,26 @@ def _dequant_factors(leaf: F.FactoredLeaf, cfg: AdapproxConfig):
 
 def _run_factored_core(g, q32, u32, k, xi, m1, keys, step,
                        cfg: AdapproxConfig, r_store: int, p_eff: int,
-                       k_max_leaf: int, n_batch: int, refresh_t=None):
+                       k_max_leaf: int, n_batch: int, refresh_t=None,
+                       force_refresh=None):
     """vmap ``_factored_update_2d`` over ``n_batch`` leading axes — the
     shared engine of the per-leaf path (n_batch = len(batch_dims)) and the
-    bucketed path (one extra stacking axis).  ``step`` and ``refresh_t``
-    ride in via closure, so they stay UNbatched scalars under vmap and the
-    refresh/fold ``lax.cond`` remains a real branch."""
+    bucketed path (one extra stacking axis).  ``step``, ``refresh_t`` and
+    ``force_refresh`` ride in via closure, so they stay UNbatched scalars
+    under vmap and the refresh/fold ``lax.cond`` remains a real branch."""
     fn = functools.partial(_factored_update_2d, cfg=cfg, r_store=r_store,
                            p_eff=p_eff, k_max_leaf=k_max_leaf)
     # ``m1`` may be None (b1 = 0); None is an empty pytree so it passes
     # through vmap untouched.
     core = lambda g, q, u, k, xi, m1, key: fn(g, q, u, k, xi, m1, key, step,
-                                              refresh_t=refresh_t)
+                                              refresh_t=refresh_t,
+                                              force_refresh=force_refresh)
     mapped = F.vmap_over_batch(core, n_batch)
     return mapped(g, q32, u32, k, xi, m1, keys)
 
 
 def _update_factored(g, leaf: F.FactoredLeaf, w, key, step,
-                     cfg: AdapproxConfig, refresh_t=None):
+                     cfg: AdapproxConfig, refresh_t=None, force_refresh=None):
     bd = F.batch_dims(w.shape)
     leaf_q, leaf_u = _dequant_factors(leaf, cfg)
     r_store = leaf_q.shape[-1]
@@ -473,12 +507,66 @@ def _update_factored(g, leaf: F.FactoredLeaf, w, key, step,
     keys = F.batched_keys(key, bd)
     m_out, q, u, k, xi, m1, clip = _run_factored_core(
         g, leaf_q, leaf_u, leaf.k, leaf.xi, leaf.m1, keys, step, cfg,
-        r_store, p_eff, k_max_leaf, len(bd), refresh_t)
+        r_store, p_eff, k_max_leaf, len(bd), refresh_t, force_refresh)
     if cfg.factor_dtype == "int8":
         QZ = _quantized()
         q, u = QZ.quantize(q), QZ.quantize(u)
     return (m_out, F.FactoredLeaf(q=q, u=u, k=k, xi=xi, m1=m1),
             (clip, k_max_leaf))
+
+
+def _update_factored_guarded(g, leaf: F.FactoredLeaf, w, key, step,
+                             cfg: AdapproxConfig, refresh_t, guard):
+    """Per-leaf update under the xi guard (``cfg.guards``).
+
+    ``guard = (force_refresh, demoted, dense_v)`` — per-leaf int32 scalars
+    from the prior :class:`GuardState` plus the leaf's dense shadow buffer
+    (``None`` when ``max_demotions == 0``; then only forced refresh
+    applies and the factored path runs unconditionally).
+
+    A demoted leaf runs the exact dense second moment on its shadow
+    buffer: same elementwise tail as ``_update_dense`` but with the
+    PER-MATRIX RMS clip of the factored path (reduced over the trailing
+    two axes, so batched leaves clip slice-wise exactly like before
+    demotion), guidance off, factors/k frozen, xi pinned to 0 — a demoted
+    leaf reads as healthy downstream.  The dispatch is a scalar-predicate
+    ``lax.cond``, so un-demoted leaves never execute the dense HLO.
+
+    Returns ``(m_out, new_leaf, (clip, k_max_leaf), dense_v_new)``.
+    """
+    force, demoted, dense_v = guard
+    r_store = _dequant_factors(leaf, cfg)[0].shape[-1]
+    _, k_max_leaf = _leaf_meta(w.shape, r_store, cfg)
+    if dense_v is None:
+        m_out, nl, tap = _update_factored(g, leaf, w, key, step, cfg,
+                                          refresh_t, force_refresh=force)
+        return m_out, nl, tap, None
+
+    def _fact_branch():
+        m_out, nl, tap = _update_factored(g, leaf, w, key, step, cfg,
+                                          refresh_t, force_refresh=force)
+        return (m_out, nl.q, nl.u, nl.k, nl.xi, nl.m1, tap[0], dense_v)
+
+    def _dense_branch():
+        g32 = g.astype(jnp.float32)
+        v = cfg.b2 * dense_v + (1.0 - cfg.b2) * jnp.square(g32)
+        u_hat = g32 / (jnp.sqrt(v) + cfg.eps)
+        rms = jnp.sqrt(jnp.mean(jnp.square(u_hat), axis=(-2, -1)) + 1e-30)
+        clip_denom = jnp.maximum(1.0, rms / cfg.clip_d)
+        clip_active = (clip_denom > 1.0).astype(jnp.float32)
+        u_hat = u_hat / clip_denom[..., None, None]
+        if leaf.m1 is not None:
+            m1_new = cfg.b1 * leaf.m1 + (1.0 - cfg.b1) * u_hat
+            m_out = m1_new
+        else:
+            m1_new, m_out = None, u_hat
+        return (m_out, leaf.q, leaf.u, leaf.k, jnp.zeros_like(leaf.xi),
+                m1_new, clip_active, v)
+
+    m_out, q, u, k, xi, m1, clip, dv = jax.lax.cond(
+        demoted > 0, _dense_branch, _fact_branch)
+    return (m_out, F.FactoredLeaf(q=q, u=u, k=k, xi=xi, m1=m1),
+            (clip, k_max_leaf), dv)
 
 
 def _update_factored_bucket(gs, leaves, ws, idxs, step_key, step,
@@ -645,8 +733,66 @@ def _state_spec(state: AdapproxState, param_specs) -> AdapproxState:
     tel = (snapshot_spec(state.telemetry)
            if state.telemetry is not None else None)
     re_spec = P() if state.refresh_every is not None else None
+    g_spec = None
+    if state.guards is not None:
+        fpspecs = [pspec for pspec, leaf in zip(flat_specs, state.leaves)
+                   if isinstance(leaf, F.FactoredLeaf)]
+        g_spec = guard_spec(state.guards, fpspecs)
     return AdapproxState(step=P(), key=P(), leaves=tuple(leaves),
-                         telemetry=tel, refresh_every=re_spec)
+                         telemetry=tel, refresh_every=re_spec,
+                         guards=g_spec)
+
+
+# ---------------------------------------------------------------------------
+# xi-guard bookkeeping (cfg.guards; repro.resilience.guards)
+# ---------------------------------------------------------------------------
+
+def _advance_guard_state(gstate: GuardState, gcfg: GuardConfig,
+                         cfg: AdapproxConfig, new_leaves, dv_out):
+    """Fold this step's xi outcomes into the next :class:`GuardState`.
+
+    A leaf trips when its WORST batch slice exceeds ``xi_trip`` (max, not
+    the telemetry mean — one blown slice corrupts that slice's updates
+    regardless of how healthy its siblings are).  Trips are consecutive:
+    any calm step resets the leaf's count.  A trip schedules a forced
+    full refresh for the NEXT step; ``max_demotions`` consecutive trips
+    demote the leaf instead, seeding its dense shadow buffer from the
+    just-refreshed factors (``max(Q Uᵀ, 0)`` — the reconstruction can go
+    epsilon-negative, and sqrt of that is a NaN factory).  The seeding
+    cond has a scalar predicate, so steps without a demotion never pay
+    the O(mnr) reconstruction.
+    """
+    f_leaves = [l for l in new_leaves if isinstance(l, F.FactoredLeaf)]
+    if not f_leaves:
+        return gstate
+    xi_vec = jnp.stack([jnp.max(l.xi) for l in f_leaves])
+    already = gstate.demoted > 0
+    tripped = jnp.logical_and(xi_vec > gcfg.xi_trip, ~already)
+    trips = jnp.where(tripped, gstate.trips + 1, 0).astype(jnp.int32)
+    if gcfg.max_demotions > 0:
+        newly = jnp.logical_and(~already, trips >= gcfg.max_demotions)
+        demoted = jnp.maximum(gstate.demoted, newly.astype(jnp.int32))
+        force = jnp.logical_and(tripped, ~newly).astype(jnp.int32)
+        dense_v = []
+        for j, leaf in enumerate(f_leaves):
+            def _seed(leaf=leaf):
+                q32, u32 = _dequant_factors(leaf, cfg)
+                recon = jnp.einsum("...mr,...nr->...mn", q32, u32)
+                return jnp.maximum(recon, 0.0)
+            dense_v.append(jax.lax.cond(
+                newly[j], _seed, lambda j=j: dv_out[j]))
+        demotions = (gstate.demotions
+                     + jnp.sum(newly).astype(jnp.int32))
+        dense_v = tuple(dense_v)
+    else:
+        demoted = gstate.demoted
+        force = tripped.astype(jnp.int32)
+        dense_v = gstate.dense_v
+        demotions = gstate.demotions
+    return GuardState(
+        trips=trips, force_refresh=force, demoted=demoted,
+        trip_total=gstate.trip_total + jnp.sum(tripped).astype(jnp.int32),
+        demotions=demotions, dense_v=dense_v)
 
 
 # ---------------------------------------------------------------------------
@@ -677,10 +823,15 @@ def scale_by_adapprox(cfg: AdapproxConfig) -> GradientTransformation:
                                 leaf_indices=fidx, dense_indices=didx)
         r_every = (jnp.asarray(cfg.refresh_every, jnp.int32)
                    if cfg.dynamic_refresh else None)
+        gstate = None
+        if cfg.guards is not None:
+            fshapes = [p.shape for p, l in zip(flat, leaves)
+                       if isinstance(l, F.FactoredLeaf)]
+            gstate = init_guard_state(fshapes, cfg.guards.max_demotions)
         return AdapproxState(step=jnp.zeros((), jnp.int32),
                              key=jax.random.PRNGKey(cfg.seed),
                              leaves=leaves, telemetry=tel,
-                             refresh_every=r_every)
+                             refresh_every=r_every, guards=gstate)
 
     def update(grads, state: AdapproxState, params):
         step = state.step + 1              # paper counts from t = 1
@@ -698,13 +849,29 @@ def scale_by_adapprox(cfg: AdapproxConfig) -> GradientTransformation:
         # eliminates it, so the off path stays bitwise-identical.
         taps = [None] * n_leaves
 
-        if not cfg.bucketed:
+        gcfg, gstate = cfg.guards, state.guards
+        # guards force the per-leaf path: the per-leaf demotion lax.cond
+        # would decay to a both-branches select inside a bucketed vmap.
+        if not (cfg.bucketed and gcfg is None):
+            dv_out = (list(gstate.dense_v)
+                      if gcfg is not None and gstate.dense_v else None)
+            j = 0                        # factored-leaf ordinal
             for i, (g, leaf, w) in enumerate(
                     zip(flat_g, state.leaves, flat_p)):
                 if isinstance(leaf, F.FactoredLeaf):
-                    d, nl, tap = _update_factored(
-                        g, leaf, w, jax.random.fold_in(step_key, i),
-                        step, cfg, refresh_t)
+                    if gcfg is not None:
+                        guard = (gstate.force_refresh[j], gstate.demoted[j],
+                                 dv_out[j] if dv_out is not None else None)
+                        d, nl, tap, dv = _update_factored_guarded(
+                            g, leaf, w, jax.random.fold_in(step_key, i),
+                            step, cfg, refresh_t, guard)
+                        if dv_out is not None:
+                            dv_out[j] = dv
+                    else:
+                        d, nl, tap = _update_factored(
+                            g, leaf, w, jax.random.fold_in(step_key, i),
+                            step, cfg, refresh_t)
+                    j += 1
                 else:
                     d, nl, clip = _update_dense(g, leaf, cfg)
                     tap = (clip, None)
@@ -743,11 +910,16 @@ def scale_by_adapprox(cfg: AdapproxConfig) -> GradientTransformation:
         if cfg.telemetry:
             tel = _assemble_snapshot(state.telemetry, step, new_leaves,
                                      taps, refresh_t, cfg)
+        new_gstate = None
+        if gcfg is not None:
+            new_gstate = _advance_guard_state(gstate, gcfg, cfg, new_leaves,
+                                              dv_out)
         updates = jax.tree.unflatten(treedef, outs)
         return updates, AdapproxState(step=step, key=state.key,
                                       leaves=tuple(new_leaves),
                                       telemetry=tel,
-                                      refresh_every=state.refresh_every)
+                                      refresh_every=state.refresh_every,
+                                      guards=new_gstate)
 
     return GradientTransformation(init, update, _state_spec)
 

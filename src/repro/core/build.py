@@ -45,6 +45,7 @@ from repro.core.transform import (add_decayed_weights, partition,
                                   scale_by_relative_step, scale_by_schedule)
 from repro.core.types import GradientTransformation, Schedule, chain, \
     constant_schedule
+from repro.resilience.guards import GuardConfig, guard_updates
 
 
 def _schedule_of(cfg: OptimizerConfig) -> Callable:
@@ -79,7 +80,10 @@ def _preconditioner(cfg: OptimizerConfig, name: str,
             refresh_every=cfg.refresh_every, warm_start=cfg.warm_start,
             n_iter_warm=cfg.n_iter_warm, warm_drift_xi=cfg.warm_drift_xi,
             bucketed=cfg.bucketed, fused_update=cfg.fused_update,
-            telemetry=cfg.telemetry, dynamic_refresh=cfg.dynamic_refresh)
+            telemetry=cfg.telemetry, dynamic_refresh=cfg.dynamic_refresh,
+            guards=(GuardConfig(xi_trip=cfg.guard_xi_trip,
+                                max_demotions=cfg.max_demotions)
+                    if cfg.guards else None))
         return scale_by_adapprox(acfg)
     if name == "adamw":
         return scale_by_adam(cfg.b1, cfg.b2, cfg.eps)
@@ -184,9 +188,20 @@ def _build_partitioned(cfg: OptimizerConfig, sched: Callable,
 
 def build_optimizer(cfg: OptimizerConfig) -> GradientTransformation:
     """Build the configured optimizer chain (or, with ``cfg.groups``, the
-    partitioned per-group chains).  See module docstring."""
+    partitioned per-group chains).  See module docstring.
+
+    ``cfg.guards`` wraps the OUTERMOST transform — chain or partition —
+    in the non-finite skip-step guard, so a tripped step freezes params
+    through every stage INCLUDING weight decay (guarding only the
+    preconditioner would still let ``add_decayed_weights`` move params on
+    a poisoned step)."""
     sched = _schedule_of(cfg)
     mask = _decay_mask_of(cfg)
     if cfg.groups:
-        return _build_partitioned(cfg, sched, mask)
-    return _chain_for(cfg, cfg.name, sched, mask)
+        opt = _build_partitioned(cfg, sched, mask)
+    else:
+        opt = _chain_for(cfg, cfg.name, sched, mask)
+    if cfg.guards:
+        opt = guard_updates(opt, GuardConfig(
+            xi_trip=cfg.guard_xi_trip, max_demotions=cfg.max_demotions))
+    return opt

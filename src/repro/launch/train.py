@@ -67,7 +67,9 @@ def optimizer_config(name: str, steps: int, lr: float,
                      mixed_groups: bool = False, telemetry: bool = False,
                      dynamic_refresh: bool = False,
                      sketch_width: int = 2048, sketch_depth: int = 4,
-                     embedding_min_rows: int = 1024) -> OptimizerConfig:
+                     embedding_min_rows: int = 1024,
+                     guards: bool = False, guard_xi_trip: float = 0.75,
+                     max_demotions: int = 0) -> OptimizerConfig:
     """The launcher's OptimizerConfig: cosine schedule derived from the run
     length, paper-faithful Adapprox adaptive-rank settings.  The amortized-
     refresh knobs (refresh_every / warm_start / bucketed, adapprox only)
@@ -89,7 +91,9 @@ def optimizer_config(name: str, steps: int, lr: float,
                                warm_start=warm_start, bucketed=bucketed,
                                fused_update=fused_update,
                                telemetry=telemetry,
-                               dynamic_refresh=dynamic_refresh)
+                               dynamic_refresh=dynamic_refresh,
+                               guards=guards, guard_xi_trip=guard_xi_trip,
+                               max_demotions=max_demotions)
     if name in ("adamw", "adafactor", "came"):
         # the factored group inherits the family, so --mixed-groups is a
         # matrices/rest split of the SAME optimizer here (dense Adam on
@@ -172,6 +176,18 @@ def main(argv=None):
                     help="adapprox: closed-loop controller retunes "
                          "refresh_every per group from observed xi drift "
                          "(implies in-jit telemetry + dynamic cadence)")
+    ap.add_argument("--guards", action="store_true",
+                    help="resilience: wrap the chain in the non-finite "
+                         "skip-step guard and arm the per-leaf xi watchdog "
+                         "(repro.resilience; default off — guards-off runs "
+                         "are bitwise identical to builds without them)")
+    ap.add_argument("--guard-skip-threshold", type=float, default=0.75,
+                    help="xi level that counts as a factorization blow-up "
+                         "(forces a full S-RSI refresh for that leaf)")
+    ap.add_argument("--max-demotions", type=int, default=0,
+                    help="consecutive xi trips before a leaf is demoted to "
+                         "the exact dense second moment (0 = never demote, "
+                         "forced refreshes only)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--log-every", type=int, default=20)
@@ -193,7 +209,9 @@ def main(argv=None):
         mixed_groups=mixed, telemetry=telemetry_on,
         dynamic_refresh=args.auto_refresh,
         sketch_width=args.sketch_width, sketch_depth=args.sketch_depth,
-        embedding_min_rows=args.embedding_min_rows))
+        embedding_min_rows=args.embedding_min_rows,
+        guards=args.guards, guard_xi_trip=args.guard_skip_threshold,
+        max_demotions=args.max_demotions))
     runtime = None
     if telemetry_on:
         from repro.telemetry import TelemetryRuntime

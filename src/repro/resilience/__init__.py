@@ -1,0 +1,56 @@
+"""repro.resilience — fault tolerance for the Adapprox training stack.
+
+Low-rank second moments add failure modes dense Adam does not have: a
+diverging warm-started S-RSI, a stale fold between refreshes, or a
+saturated sketch table can corrupt the preconditioner long before the
+loss spikes.  This package is the containment layer — everything is
+config-gated and default-off, so the default chain stays bitwise
+identical to the unguarded optimizer.  Three pieces:
+
+  In-jit health guards (guards.py; ``OptimizerConfig.guards``)
+      ``GuardConfig`` + two enforcement levels, both inside the jitted
+      step (no host round-trip on the decision path):
+
+      * **skip-step** — ``guard_updates(transform, cfg)`` wraps the
+        WHOLE optimizer chain (weight decay included): when any gradient
+        or final-update leaf is non-finite, the step's updates are
+        zeroed and the entire inner state reverts — params and every EMA
+        are untouched, only the ``GuardedState`` skip counters advance.
+      * **graceful degradation** — ``scale_by_adapprox`` watches each
+        factored leaf's xi; a blow-up past ``xi_trip`` forces an
+        immediate full S-RSI refresh for that leaf on the next step
+        (overriding the ``refresh_every`` fold cadence), and after
+        ``max_demotions`` CONSECUTIVE trips the leaf is demoted to the
+        exact dense second moment (a per-leaf ``lax.cond`` dispatch,
+        seeded from the factored reconstruction at demotion time).
+        Demotion needs a dense shadow buffer per factored leaf, so it
+        only allocates when ``max_demotions > 0``.
+
+      Trips, demotions and skip counters surface as ``kind="fault"``
+      telemetry events (repro.telemetry), and the closed-loop refresh
+      controller treats them as anomalies: cadence RELAXATION pauses
+      during fault bursts (tightening stays armed).
+
+  Hardened checkpoint I/O (repro.checkpoint)
+      Atomic tmp + fsync + ``os.replace`` saves with the commit marker
+      written BEFORE the rename, per-file sha256 checksums in the
+      manifest, retry-with-exponential-backoff around save/restore I/O,
+      and ``restore()`` / ``latest_step()`` that verify integrity and
+      fall back to the last GOOD checkpoint instead of crashing on a
+      truncated or bit-flipped one.
+
+  Deterministic fault injection (chaos.py + tools/chaos.py)
+      ``FaultPlan`` / ``inject_faults`` poison gradients with NaN/Inf at
+      exact steps as a gradient transformation (pure function of the
+      step counter — reruns are bit-identical), plus host-side
+      checkpoint corruption helpers and the device-loss remesh driver.
+      ``tests/test_chaos.py`` is the acceptance harness; ``python
+      tools/chaos.py`` is the CI smoke that emits the fault-event JSONL
+      artifact.
+"""
+from repro.resilience.chaos import (FaultPlan, corrupt_latest_checkpoint,
+                                    flip_bit, inject_faults,
+                                    remesh_after_loss, truncate_file)
+from repro.resilience.guards import (GuardConfig, GuardedState, GuardState,
+                                     guard_spec, guard_updates,
+                                     init_guard_state, tree_all_finite)

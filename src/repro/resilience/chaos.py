@@ -1,0 +1,165 @@
+"""Deterministic fault injection for the chaos harness.
+
+Every injector here is a pure function of explicit inputs (the step
+counter, a byte offset) — never of wall-clock or RNG — so a chaos run
+replays bit-identically and tests can assert *exact* counter matches
+against the injection schedule.
+
+Three fault families:
+
+  * ``inject_faults(FaultPlan)`` — a ``GradientTransformation`` that
+    poisons the gradient tree with NaN/Inf at the exact steps listed in
+    the plan.  Chain it BEFORE ``guard_updates`` so the guard sees the
+    poisoned gradients the way a real overflow would arrive.
+  * ``truncate_file`` / ``flip_bit`` / ``corrupt_latest_checkpoint`` —
+    host-side checkpoint corruption, mimicking a kill mid-write
+    (truncation) and silent media corruption (bit flip).
+  * ``remesh_after_loss`` — the device-loss driver: drops ``lost``
+    devices from the current topology and returns the
+    ``distributed.elastic`` plan the survivors should restart under.
+
+``tools/chaos.py`` wraps the gradient injector into a CLI smoke run
+that emits ``kind="fault"`` telemetry JSONL for the CI artifact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Deterministic NaN/Inf gradient burst schedule.
+
+    Steps are 1-based (the injector's own counter, incremented before
+    the check — step 1 is the first update), matching the train loop's
+    reported step numbers.
+    """
+
+    nan_steps: Tuple[int, ...] = ()
+    inf_steps: Tuple[int, ...] = ()
+
+    @property
+    def fault_steps(self) -> Tuple[int, ...]:
+        return tuple(sorted(set(self.nan_steps) | set(self.inf_steps)))
+
+
+def inject_faults(plan: FaultPlan):
+    """Gradient transformation that poisons grads at scheduled steps.
+
+    State is a single int32 step counter; the poisoning decision is
+    ``jnp.isin(step, schedule)`` so it stays a traced elementwise select
+    (no recompiles, no host sync).  NaN wins when a step is in both
+    lists.  With an empty plan this is an exact pass-through.
+    """
+    from repro.core.types import GradientTransformation
+
+    nan_steps = jnp.asarray(plan.nan_steps or (-1,), jnp.int32)
+    inf_steps = jnp.asarray(plan.inf_steps or (-1,), jnp.int32)
+
+    def init(params):
+        del params
+        return jnp.zeros((), jnp.int32)
+
+    def update(grads, state, params=None):
+        del params
+        step = state + 1
+        hit_nan = jnp.any(step == nan_steps)
+        hit_inf = jnp.any(step == inf_steps)
+
+        def poison(g):
+            g = jnp.where(hit_inf, jnp.full_like(g, jnp.inf), g)
+            return jnp.where(hit_nan, jnp.full_like(g, jnp.nan), g)
+
+        return jax.tree.map(poison, grads), step
+
+    def spec(state, param_specs):
+        del param_specs
+        return P()
+
+    return GradientTransformation(init, update, spec)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint corruption (host side)
+# ---------------------------------------------------------------------------
+
+def truncate_file(path: str, keep_bytes: int) -> None:
+    """Cut ``path`` down to its first ``keep_bytes`` bytes (kill mid-write)."""
+    with open(path, "r+b") as f:
+        f.truncate(max(0, keep_bytes))
+
+
+def flip_bit(path: str, byte_offset: int, bit: int = 0) -> None:
+    """Flip one bit in place (silent media corruption)."""
+    with open(path, "r+b") as f:
+        f.seek(byte_offset)
+        b = f.read(1)
+        if not b:
+            raise ValueError(f"{path}: offset {byte_offset} past EOF")
+        f.seek(byte_offset)
+        f.write(bytes([b[0] ^ (1 << bit)]))
+
+
+def corrupt_latest_checkpoint(directory: str, kind: str = "truncate") -> str:
+    """Damage the newest committed checkpoint's largest leaf file.
+
+    kind="truncate": cut the file in half (detected by the cheap
+    structural size check, so even ``latest_step()`` skips it).
+    kind="bitflip": flip one payload bit (sizes stay right — only the
+    deep sha256 verify in ``restore()`` can catch it).
+    kind="manifest": truncate manifest.json itself.
+    Returns the path of the file that was damaged.
+    """
+    from repro.checkpoint.serialization import list_checkpoints
+
+    committed = list_checkpoints(directory)
+    if not committed:
+        raise FileNotFoundError(f"no committed checkpoints in {directory}")
+    step_dir = str(committed[-1])
+    if kind == "manifest":
+        target = os.path.join(step_dir, "manifest.json")
+        truncate_file(target, os.path.getsize(target) // 2)
+        return target
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    files = [os.path.join(step_dir, leaf["file"])
+             for leaf in manifest["leaves"]]
+    target = max(files, key=os.path.getsize)
+    if kind == "truncate":
+        truncate_file(target, os.path.getsize(target) // 2)
+    elif kind == "bitflip":
+        # flip inside the payload, past the .npy header
+        flip_bit(target, os.path.getsize(target) - 1, bit=3)
+    else:
+        raise ValueError(f"unknown corruption kind: {kind!r}")
+    return target
+
+
+# ---------------------------------------------------------------------------
+# Device loss
+# ---------------------------------------------------------------------------
+
+def remesh_after_loss(lost: int, target_model: int = 16,
+                      available_devices: Optional[int] = None):
+    """Mesh plan for the survivors after losing ``lost`` devices.
+
+    Simulated device loss: the chaos harness shrinks the visible device
+    count and asks ``distributed.elastic`` for the mesh the restarted
+    job should build, then restores the checkpoint under it (placement
+    happens at load — PR-3 resharding restore does the heavy lifting).
+    """
+    from repro.distributed.elastic import plan_remesh
+
+    n = (available_devices if available_devices is not None
+         else len(jax.devices()))
+    survivors = n - lost
+    if survivors < 1:
+        raise ValueError(f"lost {lost} of {n} devices — nothing left")
+    return plan_remesh(survivors, target_model=target_model)

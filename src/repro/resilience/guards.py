@@ -1,0 +1,203 @@
+"""In-jit numerical health guards with graceful degradation.
+
+Two enforcement levels, both running INSIDE the jitted train step so a
+fault never needs a host round-trip to be contained:
+
+  * :func:`guard_updates` — the chain-level **skip-step** wrapper.  It
+    checks every gradient leaf AND every final update leaf for
+    non-finite values; on a trip the updates are zeroed and the whole
+    inner optimizer state reverts, so params and every EMA are exactly
+    what they were before the poisoned step (weight decay included —
+    that is why the wrapper sits OUTSIDE the chain, not inside the
+    preconditioner).  Only the :class:`GuardedState` counters advance.
+
+  * ``scale_by_adapprox`` xi guards — per-factored-leaf degradation
+    driven by :class:`GuardState` (carried in ``AdapproxState.guards``
+    when ``AdapproxConfig.guards`` is set): a leaf whose approximation
+    error xi blows past ``GuardConfig.xi_trip`` gets a FORCED full
+    S-RSI refresh on the next step (overriding the fold cadence), and
+    after ``max_demotions`` consecutive trips the leaf falls back to
+    the exact dense second moment (per-leaf ``lax.cond`` dispatch; the
+    dense buffer is seeded from the factored reconstruction
+    ``max(Q Uᵀ, 0)`` at demotion time, so the EMA continues without a
+    cold restart).
+
+This module keeps NO module-level ``repro`` imports (the core package
+imports it during its own init); the one ``repro.core.types`` dependency
+is resolved lazily inside :func:`guard_updates`.
+
+Everything is default-off: ``AdapproxConfig.guards is None`` and an
+unwrapped chain are bit-identical to the pre-resilience optimizer
+(pinned in tests/test_compose.py / tests/test_chaos.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """Numerical-guard policy (hashable: rides frozen optimizer configs).
+
+    skip_nonfinite: zero the step and revert the optimizer state when any
+        gradient or final-update leaf is non-finite (guard_updates).
+    xi_trip: per-leaf xi threshold; above it the leaf's factorization is
+        considered blown and a full S-RSI refresh is forced next step.
+    max_demotions: consecutive xi trips before the leaf is demoted to the
+        exact dense second moment.  0 disables demotion (and the dense
+        shadow buffers it needs); forced refreshes still apply.
+    """
+
+    skip_nonfinite: bool = True
+    xi_trip: float = 0.75
+    max_demotions: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Per-Adapprox-instance xi-guard state (lives in AdapproxState.guards)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GuardState:
+    """Per-factored-leaf degradation state for one Adapprox instance.
+
+    trips:         (n_factored,) int32 — CONSECUTIVE xi-trip count per
+                   leaf (resets to 0 on any calm step).
+    force_refresh: (n_factored,) int32 — 1 when the leaf's next step must
+                   run a full S-RSI refresh regardless of the cadence.
+    demoted:       (n_factored,) int32 — 1 once the leaf runs the exact
+                   dense second moment (sticky for the rest of the run).
+    trip_total:    int32 scalar — cumulative trip count (telemetry).
+    demotions:     int32 scalar — cumulative demotion count (telemetry).
+    dense_v:       tuple of (param-shaped) f32 dense second-moment
+                   buffers, one per factored leaf, allocated only when
+                   ``GuardConfig.max_demotions > 0`` (else empty).
+    """
+
+    trips: jnp.ndarray
+    force_refresh: jnp.ndarray
+    demoted: jnp.ndarray
+    trip_total: jnp.ndarray
+    demotions: jnp.ndarray
+    dense_v: tuple = ()
+
+
+def init_guard_state(factored_shapes, max_demotions: int) -> GuardState:
+    """Fresh guard state for ``len(factored_shapes)`` factored leaves."""
+    n = len(factored_shapes)
+    dense_v = ()
+    if max_demotions > 0:
+        dense_v = tuple(jnp.zeros(s, jnp.float32) for s in factored_shapes)
+    return GuardState(
+        trips=jnp.zeros((n,), jnp.int32),
+        force_refresh=jnp.zeros((n,), jnp.int32),
+        demoted=jnp.zeros((n,), jnp.int32),
+        trip_total=jnp.zeros((), jnp.int32),
+        demotions=jnp.zeros((), jnp.int32),
+        dense_v=dense_v,
+    )
+
+
+def guard_spec(gstate: GuardState, factored_pspecs) -> GuardState:
+    """Sharding spec: counters are replicated scalars / tiny vectors; the
+    dense shadow buffers shard exactly like the params they mirror."""
+    return GuardState(
+        trips=P(), force_refresh=P(), demoted=P(),
+        trip_total=P(), demotions=P(),
+        dense_v=tuple(factored_pspecs[:len(gstate.dense_v)]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Chain-level skip-step wrapper
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GuardedState:
+    """State of :func:`guard_updates`.
+
+    inner:     the wrapped transformation's state (reverted wholesale on
+               a skipped step).
+    steps:     int32 scalar — steps the guard has seen (its own counter:
+               the inner step counter does NOT advance on skips).
+    skipped:   int32 scalar — cumulative skip-step count.
+    last_skip: int32 scalar — ``steps`` value of the most recent skip
+               (0 = never skipped).
+    """
+
+    inner: Any
+    steps: jnp.ndarray
+    skipped: jnp.ndarray
+    last_skip: jnp.ndarray
+
+
+def tree_all_finite(tree) -> jnp.ndarray:
+    """Scalar bool: every array leaf of ``tree`` is entirely finite.
+    Non-float leaves (int counters, PRNG keys) are finite by definition.
+    An empty tree is finite."""
+    checks = []
+    for leaf in jax.tree.leaves(tree):
+        if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating):
+            checks.append(jnp.all(jnp.isfinite(leaf)))
+    if not checks:
+        return jnp.asarray(True)
+    return jnp.all(jnp.stack(checks))
+
+
+def guard_updates(inner, cfg: GuardConfig = GuardConfig()):
+    """Wrap a whole optimizer chain with the non-finite skip-step guard.
+
+    On a healthy step the wrapper is pass-through (the select lowers to a
+    no-op on identical operands).  On a tripped step the returned updates
+    are zeros — ``apply_updates`` leaves params untouched — and the inner
+    state reverts to its pre-step value, so first/second-moment EMAs,
+    step counters and PRNG folding all behave as if the poisoned step
+    never ran; only the skip counters advance.  Works on any
+    ``GradientTransformation`` (chains, partitions, arbitrary nesting)
+    and forwards the ``state_sharding_spec`` protocol.
+    """
+    from repro.core.types import (GradientTransformation,
+                                  state_sharding_spec as _resolve_spec)
+
+    def init(params):
+        # one zeros() PER field: sharing a single array across leaves
+        # makes donation reject the state ("donate the same buffer twice")
+        def z():
+            return jnp.zeros((), jnp.int32)
+        return GuardedState(inner=inner.init(params), steps=z(),
+                            skipped=z(), last_skip=z())
+
+    def update(grads, state: GuardedState, params):
+        new_upd, new_inner = inner.update(grads, state.inner, params)
+        steps = state.steps + 1
+        if not cfg.skip_nonfinite:
+            return new_upd, GuardedState(inner=new_inner, steps=steps,
+                                         skipped=state.skipped,
+                                         last_skip=state.last_skip)
+        ok = jnp.logical_and(tree_all_finite(grads),
+                             tree_all_finite(new_upd))
+        upd = jax.tree.map(
+            lambda u: None if u is None else jnp.where(ok, u,
+                                                       jnp.zeros_like(u)),
+            new_upd, is_leaf=lambda x: x is None)
+        kept = jax.tree.map(lambda n, o: jnp.where(ok, n, o),
+                            new_inner, state.inner)
+        return upd, GuardedState(
+            inner=kept, steps=steps,
+            skipped=state.skipped + jnp.where(ok, 0, 1).astype(jnp.int32),
+            last_skip=jnp.where(ok, state.last_skip, steps))
+
+    def spec(state: GuardedState, param_specs):
+        return GuardedState(
+            inner=_resolve_spec(inner, state.inner, param_specs),
+            steps=P(), skipped=P(), last_skip=P())
+
+    from repro.core.types import GradientTransformation
+    return GradientTransformation(init, update, spec)

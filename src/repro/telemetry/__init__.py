@@ -63,8 +63,20 @@ JSONL event schema (version 1; authoritative machine form in
       --telemetry-dir): arch, cell, mesh, devices, flops, bytes_accessed
       (+ peak_bytes, collective_bytes, compile_s, params).
   kind="run_meta"   — stream header: source (+ argv, config, note).
+  kind="fault"      — resilience-guard activity (repro.resilience;
+      emitted by ``TelemetryRuntime`` on counter TRANSITIONS, bypassing
+      ``emit_every`` — faults are rare and always worth a line):
+      step, group ("chain" for the skip-step wrapper, else the partition
+      group label), event ("skip" | "xi_trip" | "demote"); plus the
+      cumulative counters skipped/last_skip (skip), trips (xi_trip),
+      demotions (demote) — consumers diff consecutive events for rates.
+      The controller treats any fault in an interval as an anomaly:
+      cadence RELAXATION pauses for that interval (tightening stays
+      armed).
 """
-from repro.telemetry.collect import (get_refresh_every, named_sketch_snapshots,
+from repro.telemetry.collect import (chain_guard_state, get_refresh_every,
+                                     named_guard_states,
+                                     named_sketch_snapshots,
                                      named_sketch_states, named_snapshots,
                                      named_states, set_refresh_every,
                                      telemetry_metrics)

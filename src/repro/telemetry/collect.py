@@ -86,6 +86,32 @@ def named_sketch_snapshots(opt_state) -> "dict[str, Any]":
             if st.telemetry is not None}
 
 
+def _guarded_cls():
+    from repro.resilience.guards import GuardedState
+    return GuardedState
+
+
+def named_guard_states(opt_state) -> "dict[str, Any]":
+    """``{group_name: GuardState}`` for every Adapprox instance carrying
+    xi-guard state (``AdapproxConfig.guards``); empty when guards are off
+    everywhere."""
+    return {name: st.guards for name, st in named_states(opt_state).items()
+            if st.guards is not None}
+
+
+def chain_guard_state(opt_state):
+    """The outermost :class:`~repro.resilience.guards.GuardedState`
+    (the chain-level skip-step wrapper) inside ``opt_state``, or ``None``
+    when the chain is unguarded.  The wrapper sits at the root, so the
+    first instance found IS the chain guard."""
+    cls = _guarded_cls()
+    for leaf in jax.tree.leaves(
+            opt_state, is_leaf=lambda x: isinstance(x, cls)):
+        if isinstance(leaf, cls):
+            return leaf
+    return None
+
+
 def get_refresh_every(opt_state) -> "dict[str, Optional[int]]":
     """Current refresh cadence per group; ``None`` for groups whose
     cadence is compile-time static (``dynamic_refresh`` off)."""
@@ -172,4 +198,12 @@ def telemetry_metrics(opt_state) -> dict:
             out[pre + "mean_occupancy"] = jnp.mean(snap.occupancy)
             out[pre + "max_occupancy"] = jnp.max(snap.occupancy)
             out[pre + "mean_overestimate"] = jnp.mean(snap.overestimate)
+    gs = chain_guard_state(opt_state)
+    if gs is not None:
+        out["guard/skipped"] = gs.skipped
+        out["guard/last_skip"] = gs.last_skip
+    for name, g in named_guard_states(opt_state).items():
+        pre = f"guard/{name}/"
+        out[pre + "trip_total"] = g.trip_total
+        out[pre + "demotions"] = g.demotions
     return out

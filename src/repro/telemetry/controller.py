@@ -20,6 +20,13 @@ Policy (hysteresis band, per group, evaluated every ``interval`` steps):
     AIMD-style asymmetry that keeps the loop stable.
   * In the dead band between the thresholds nothing moves (and the relax
     streak resets), so the cadence cannot oscillate on noise.
+  * ANOMALY PAUSE — when the runtime reports guard activity in an
+    interval (skip-steps, xi trips, demotions; ``observe(...,
+    anomaly=True)``), relaxation is suppressed for that interval and the
+    calm streak resets: an xi average over steps where the guard was
+    skipping poisoned updates says nothing about how well the frozen
+    basis tracks.  Tightening stays armed — a fault burst is exactly
+    when refreshing MORE often helps.
 
 Cadences are clamped to ``[t_min, t_max]``.
 
@@ -82,22 +89,31 @@ class RefreshController:
 
     def _g(self, group: str) -> dict:
         return self._groups.setdefault(
-            group, {"xi_sum": 0.0, "n": 0, "calm": 0})
+            group, {"xi_sum": 0.0, "n": 0, "calm": 0, "anomalies": 0})
 
-    def observe(self, step: int, group: str, xi: float,
-                t_now: int) -> Optional[CadenceChange]:
+    def observe(self, step: int, group: str, xi: float, t_now: int,
+                anomaly: bool = False) -> Optional[CadenceChange]:
+        """``anomaly=True`` flags guard activity at this step (skip-step,
+        xi trip or demotion): the current interval will not relax."""
         cfg = self.cfg
         g = self._g(group)
         g["xi_sum"] += float(xi)
         g["n"] += 1
+        if anomaly:
+            g["anomalies"] = g.get("anomalies", 0) + 1
         if step % cfg.interval != 0:
             return None
         mean = g["xi_sum"] / max(g["n"], 1)
-        g["xi_sum"], g["n"] = 0.0, 0
+        burst = g.get("anomalies", 0) > 0
+        g["xi_sum"], g["n"], g["anomalies"] = 0.0, 0, 0
         if mean >= cfg.xi_high:
             g["calm"] = 0
             new_t = max(cfg.t_min, min(cfg.t_max,
                                        int(t_now) // cfg.tighten_div))
+        elif burst:
+            # faults this interval: hold the cadence, reset the streak
+            g["calm"] = 0
+            return None
         elif mean <= cfg.xi_low:
             g["calm"] += 1
             if g["calm"] < cfg.relax_patience:
@@ -118,6 +134,9 @@ class RefreshController:
         return {"groups": {k: dict(v) for k, v in self._groups.items()}}
 
     def load_state_dict(self, state: dict) -> None:
+        # ``anomalies`` entered the state with the resilience layer;
+        # manifests written before it load as 0 (no anomaly observed).
         self._groups = {k: {"xi_sum": float(v["xi_sum"]), "n": int(v["n"]),
-                            "calm": int(v["calm"])}
+                            "calm": int(v["calm"]),
+                            "anomalies": int(v.get("anomalies", 0))}
                         for k, v in state.get("groups", {}).items()}

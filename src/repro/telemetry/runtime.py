@@ -60,6 +60,48 @@ class TelemetryRuntime:
         self._cadence: "dict[str, int]" = {}
         self._checked_dynamic = False
         self._warned_no_snaps = False
+        # last-seen cumulative guard counters, so fault events fire only
+        # on transitions (the counters ride the state every step)
+        self._fault_seen: "dict[tuple, int]" = {}
+
+    # -- resilience guards -------------------------------------------------
+    def _observe_faults(self, step: int, opt_state) -> bool:
+        """Diff the guard counters against the last step, emit one
+        ``kind="fault"`` event per transition (bypassing ``emit_every`` —
+        faults are rare and always worth a line), and return whether ANY
+        guard activity happened this step (the controller's anomaly
+        flag)."""
+        gs = collect.chain_guard_state(opt_state)
+        guards = collect.named_guard_states(opt_state)
+        if gs is None and not guards:
+            return False
+        anomaly = False
+
+        def bump(key, now, event: dict) -> None:
+            nonlocal anomaly
+            prev = self._fault_seen.get(key, 0)
+            if now > prev:
+                anomaly = True
+                if self.sink is not None:
+                    self.sink.emit(event)
+            self._fault_seen[key] = now
+
+        if gs is not None:
+            skipped = int(np.asarray(gs.skipped))
+            bump(("skip",), skipped, {
+                "kind": "fault", "step": int(step), "group": "chain",
+                "event": "skip", "skipped": skipped,
+                "last_skip": int(np.asarray(gs.last_skip))})
+        for name, g in sorted(guards.items()):
+            trips = int(np.asarray(g.trip_total))
+            demos = int(np.asarray(g.demotions))
+            bump(("trip", name), trips, {
+                "kind": "fault", "step": int(step), "group": name,
+                "event": "xi_trip", "trips": trips})
+            bump(("demote", name), demos, {
+                "kind": "fault", "step": int(step), "group": name,
+                "event": "demote", "demotions": demos})
+        return anomaly
 
     # -- per-step ----------------------------------------------------------
     def on_step(self, step: int, state):
@@ -67,6 +109,7 @@ class TelemetryRuntime:
         jitted step returned (or a bare optimizer state); returns it,
         possibly with retuned cadence scalars."""
         opt_state = getattr(state, "opt_state", state)
+        anomaly = self._observe_faults(step, opt_state)
         sketch_snaps = collect.named_sketch_snapshots(opt_state)
         if sketch_snaps and self.sink is not None \
                 and step % self.cfg.emit_every == 0:
@@ -120,8 +163,12 @@ class TelemetryRuntime:
             if self.sink is not None and step % self.cfg.emit_every == 0:
                 self.sink.emit(self._optimizer_event(step, name, snap))
             if self.controller is not None and snap.xi.shape[0] > 0:
+                # guard activity anywhere this step pauses relaxation for
+                # every group's current interval — a burst that poisons
+                # one group's gradients rarely respects group boundaries
                 change = self.controller.observe(
-                    step, name, float(np.mean(snap.xi)), t_now)
+                    step, name, float(np.mean(snap.xi)), t_now,
+                    anomaly=anomaly)
                 if change is not None:
                     changes[name] = change.new
                     self.cadence_log.append(

@@ -78,6 +78,17 @@ EVENT_SCHEMA = {
         "required": {"source": str},
         "optional": {"argv": list, "config": dict, "note": str},
     },
+    # resilience guards (repro.resilience): skip-steps from the chain-level
+    # non-finite guard, per-leaf xi trips / forced refreshes / dense
+    # demotions from the Adapprox xi watchdog.  ``event`` names the fault
+    # ("skip" | "xi_trip" | "demote"); counters are CUMULATIVE, so a
+    # consumer diffs consecutive events to recover per-interval rates.
+    "fault": {
+        "required": {"step": int, "group": str, "event": str},
+        "optional": {"skipped": int, "last_skip": int, "trips": int,
+                     "demotions": int, "leaf": int, "xi": _NUM,
+                     "detail": str},
+    },
 }
 
 

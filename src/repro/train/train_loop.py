@@ -108,8 +108,10 @@ def train(model, opt: GradientTransformation, data_cfg: DataConfig,
             # controller accumulators + cadence log resume from the
             # manifest, so the cadence-change sequence replays exactly
             # (the cadence scalar itself is optimizer state and was just
-            # restored with it)
-            telemetry.restore_meta(ckpt.read_meta())
+            # restored with it).  Keyed by the step restore actually
+            # landed on — if it fell back past a corrupt latest
+            # checkpoint, the meta must come from the same fallback.
+            telemetry.restore_meta(ckpt.read_meta(start_step))
 
     step_fn = build_train_step(model, opt, microbatches=loop_cfg.microbatches,
                                grad_clip_norm=loop_cfg.grad_clip_norm)

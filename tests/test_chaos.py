@@ -1,0 +1,228 @@
+"""Chaos suite: the resilience layer exercised through the REAL train
+loop under deterministic fault injection (repro.resilience).
+
+Scenarios (the PR-7 acceptance list):
+
+  * NaN gradient burst with guards on — every parameter stays finite,
+    the loss recovers, and the skip counters match the injection
+    schedule EXACTLY;
+  * guards on without faults — same trajectory as guards off;
+  * SIGTERM mid-step (subprocess — the preemption handler re-raises via
+    SIG_DFL) — the restarted run resumes from the preemption checkpoint
+    and finishes bitwise-identical to an uninterrupted run;
+  * corrupted latest checkpoint (bit flip: sizes intact, only the deep
+    sha256 verify can see it) — the restart falls back to the previous
+    good checkpoint and still finishes bitwise-identical;
+  * simulated device loss — the remesh plan from the survivors restores
+    the checkpoint under the new mesh (8-device CI job).
+"""
+import os
+import signal
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointConfig, CheckpointManager
+from repro.checkpoint import serialization as SER
+from repro.config import OptimizerConfig
+from repro.configs import get_smoke_config
+from repro.core import build_optimizer, chain
+from repro.data import DataConfig
+from repro.models import build_model
+from repro.resilience import (FaultPlan, corrupt_latest_checkpoint,
+                              inject_faults, remesh_after_loss)
+from repro.telemetry import chain_guard_state
+from repro.train import LoopConfig, train
+
+REPO = Path(__file__).resolve().parent.parent
+
+# Shared by the in-process tests AND the SIGTERM subprocess (exec'd into
+# both namespaces so the two runs are the same program by construction).
+SETUP = r"""
+import jax, jax.numpy as jnp
+from repro.config import OptimizerConfig
+from repro.configs import get_smoke_config
+from repro.core import build_optimizer
+from repro.data import DataConfig
+from repro.models import build_model
+from repro.train import LoopConfig, train
+
+def make_model():
+    return build_model(get_smoke_config("gpt2-117m", vocab=64,
+                                        max_seq_len=32))
+
+def make_opt():
+    # guarded adapprox with a mid-size refresh interval, so checkpoints
+    # land mid-interval and the guard state rides the restore
+    return build_optimizer(OptimizerConfig(
+        name="adapprox", schedule="constant", lr=3e-3, weight_decay=0.1,
+        k=4, rank_mode="static", min_dim_factor=32, implicit=False,
+        refresh_every=2, guards=True))
+
+DATA = DataConfig(vocab=64, seq_len=32, global_batch=4, seed=0)
+"""
+_ns: dict = {}
+exec(SETUP, _ns)
+
+
+def assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# NaN burst through the full loop
+# ---------------------------------------------------------------------------
+
+def test_nan_burst_skips_exactly_and_recovers():
+    plan = FaultPlan(nan_steps=(5, 6), inf_steps=(11,))
+    opt = chain(inject_faults(plan), _ns["make_opt"]())
+    state, hist = train(_ns["make_model"](), opt, _ns["DATA"],
+                        LoopConfig(total_steps=14, log_every=1))
+    gs = chain_guard_state(state.opt_state)
+    assert int(np.asarray(gs.skipped)) == 3
+    assert int(np.asarray(gs.last_skip)) == 11
+    for leaf in jax.tree.leaves(state.params):
+        assert bool(np.all(np.isfinite(np.asarray(leaf))))
+    losses = [m["loss"] for m in hist]
+    assert np.all(np.isfinite(losses))
+    assert losses[-1] < losses[0]
+
+
+def test_guards_without_faults_match_unguarded_run():
+    plan_off = train(_ns["make_model"](),
+                     build_optimizer(OptimizerConfig(
+                         name="adapprox", schedule="constant", lr=3e-3,
+                         weight_decay=0.1, k=4, rank_mode="static",
+                         min_dim_factor=32, implicit=False,
+                         refresh_every=2)),
+                     _ns["DATA"], LoopConfig(total_steps=6, log_every=1))
+    plan_on = train(_ns["make_model"](), _ns["make_opt"](), _ns["DATA"],
+                    LoopConfig(total_steps=6, log_every=1))
+    gs = chain_guard_state(plan_on[0].opt_state)
+    assert int(np.asarray(gs.skipped)) == 0
+    assert_trees_equal(plan_off[0].params, plan_on[0].params)
+
+
+# ---------------------------------------------------------------------------
+# SIGTERM mid-step -> preemption checkpoint -> bitwise resume
+# ---------------------------------------------------------------------------
+
+def test_sigterm_midrun_resumes_bitwise(tmp_path):
+    total, kill_at = 10, 6
+    ck_dir = str(tmp_path / "ck")
+
+    # uninterrupted reference
+    ref, _ = train(_ns["make_model"](), _ns["make_opt"](), _ns["DATA"],
+                   LoopConfig(total_steps=total, log_every=5))
+
+    # the killed run MUST be a subprocess: the preemption handler hands
+    # the signal on via SIG_DFL + re-raise, which terminates the process
+    script = SETUP + f"""
+import os, signal
+from repro.checkpoint import CheckpointConfig
+
+def hook(step, m):
+    if step == {kill_at}:
+        os.kill(os.getpid(), signal.SIGTERM)
+
+train(make_model(), make_opt(), DATA,
+      LoopConfig(total_steps={total}, log_every=1,
+                 ckpt=CheckpointConfig(directory={ck_dir!r},
+                                       save_every=10**9,
+                                       async_save=False)),
+      metric_hook=hook, install_signal_handler=True)
+raise SystemExit("unreachable: SIGTERM should have killed the loop")
+"""
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == -signal.SIGTERM, proc.stderr[-2000:]
+
+    mgr = CheckpointManager(CheckpointConfig(directory=ck_dir))
+    assert mgr.latest_step() == kill_at
+    assert mgr.read_meta(kill_at).get("preempted") is True
+
+    # restart in-process: restores the preemption checkpoint, finishes
+    resumed, _ = train(
+        _ns["make_model"](), _ns["make_opt"](), _ns["DATA"],
+        LoopConfig(total_steps=total, log_every=5,
+                   ckpt=CheckpointConfig(directory=ck_dir,
+                                         save_every=10**9,
+                                         async_save=False)))
+    assert_trees_equal(ref.params, resumed.params)
+    assert_trees_equal(ref.opt_state, resumed.opt_state)
+
+
+# ---------------------------------------------------------------------------
+# corrupted latest checkpoint -> fallback -> bitwise resume
+# ---------------------------------------------------------------------------
+
+def test_corrupt_latest_falls_back_and_resumes_bitwise(tmp_path):
+    ck_dir = str(tmp_path / "ck")
+    total = 12
+
+    ref, _ = train(_ns["make_model"](), _ns["make_opt"](), _ns["DATA"],
+                   LoopConfig(total_steps=total, log_every=5))
+
+    ck = CheckpointConfig(directory=ck_dir, save_every=4, async_save=False)
+    train(_ns["make_model"](), _ns["make_opt"](), _ns["DATA"],
+          LoopConfig(total_steps=8, log_every=5, ckpt=ck))
+    # flip one payload bit in the newest checkpoint (step 8): sizes stay
+    # right, so only restore()'s deep verification can catch it
+    corrupt_latest_checkpoint(ck_dir, kind="bitflip")
+    step8 = Path(ck_dir) / "step_000000008"
+    assert SER.verify_checkpoint(step8)
+    assert not SER.verify_checkpoint(step8, deep=True)
+
+    resumed, _ = train(_ns["make_model"](), _ns["make_opt"](), _ns["DATA"],
+                       LoopConfig(total_steps=total, log_every=5, ckpt=ck))
+    assert_trees_equal(ref.params, resumed.params)
+    assert_trees_equal(ref.opt_state, resumed.opt_state)
+
+
+# ---------------------------------------------------------------------------
+# simulated device loss -> remesh -> verified restore
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="needs 8 devices (multidevice CI job)")
+def test_device_loss_remesh_restores_under_new_mesh(tmp_path):
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.elastic import build_mesh, elastic_restore
+
+    # 12x8 divides evenly over the survivors' (data=3, model=2) mesh
+    tree = {"w": np.arange(96, dtype=np.float32).reshape(12, 8),
+            "step": np.asarray(0, np.int32)}
+    mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path),
+                                             async_save=False))
+    mgr.save(tree, 1, blocking=True)
+    mgr.save({**tree, "step": np.asarray(2, np.int32)}, 2, blocking=True)
+    # the newest checkpoint dies with the lost devices' host
+    corrupt_latest_checkpoint(str(tmp_path), kind="bitflip")
+
+    plan = remesh_after_loss(lost=2, target_model=2, available_devices=8)
+    assert plan.devices == 6 and plan.model == 2
+
+    def make_shardings(mesh):
+        return {"w": NamedSharding(mesh, P("data", "model")),
+                "step": NamedSharding(mesh, P())}
+
+    state, step, mesh = elastic_restore(
+        mgr, like=tree, make_shardings=make_shardings,
+        available_devices=plan.devices, target_model=2)
+    # fallback past the corrupt step-2 checkpoint, restored on the
+    # survivors' mesh with the planned shape
+    assert step == 1
+    assert dict(mesh.shape) == {"data": 3, "model": 2}
+    np.testing.assert_array_equal(np.asarray(state["w"]), tree["w"])
+    assert state["w"].sharding.mesh.devices.size == 6

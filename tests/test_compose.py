@@ -155,6 +155,41 @@ def test_telemetry_disabled_chain_is_unchanged():
         p = apply_updates(p, u_off)
 
 
+def test_guards_disabled_chain_is_unchanged():
+    """Acceptance (PR 7): with guards off — the default — the chain is
+    bitwise-identical to the pre-resilience chain and the state pytree
+    carries no guard leaves (treedef unchanged, old checkpoints restore).
+    With guards ON but never tripping (xi_trip above any observable xi,
+    no demotion budget), the updates are STILL bitwise identical — the
+    watchdog only reads values the update already computes until it has
+    to act."""
+    params = toy_params()
+    cfg = OptimizerConfig(name="adapprox", schedule="constant", lr=1e-3,
+                          weight_decay=0.1, k=4, rank_mode="static",
+                          min_dim_factor=64, implicit=False,
+                          refresh_every=2)
+    off = build_optimizer(cfg)
+    on = build_optimizer(dataclasses.replace(
+        cfg, guards=True, guard_xi_trip=10.0, max_demotions=0))
+    s_off = off.init(params)
+    assert adapprox_state(s_off).guards is None
+    s_on = on.init(params)
+    # guards=True wraps the chain: the inner state is one level down
+    gkey = jax.random.PRNGKey(5)
+    p_off = p_on = params
+    for t in range(1, 5):
+        g = toy_grads(gkey, p_off, t)
+        u_off, s_off = off.update(g, s_off, p_off)
+        u_on, s_on = on.update(g, s_on, p_on)
+        for a, b in zip(jax.tree.leaves(u_off), jax.tree.leaves(u_on)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"step {t}")
+        p_off = apply_updates(p_off, u_off)
+        p_on = apply_updates(p_on, u_on)
+    assert int(s_on.skipped) == 0
+    assert int(adapprox_state(s_on.inner).guards.trip_total) == 0
+
+
 def test_build_optimizer_matches_make_optimizer():
     """build_optimizer(OptimizerConfig) and the kwargs registry produce
     step-for-step identical updates for every family."""

@@ -1,0 +1,382 @@
+"""Resilience layer units (repro.resilience + hardened checkpoint I/O).
+
+Guard contracts:
+  * the chain-level skip-step wrapper zeroes the update AND reverts the
+    whole inner state on a non-finite step — params and every EMA
+    (weight decay included) are exactly what they were before the
+    poisoned step, only the guard counters advance;
+  * wrapping a chain in the guard changes NOTHING on healthy steps
+    (bitwise);
+  * the per-leaf xi watchdog forces a full refresh on a trip and demotes
+    the leaf to the exact dense second moment after ``max_demotions``
+    consecutive trips, with the dense EMA advancing from there.
+
+Checkpoint-hardening contracts:
+  * ``list_checkpoints`` / ``latest_step`` skip uncommitted,
+    manifest-less and size-mismatched step dirs;
+  * the deep sha256 verify catches a single flipped payload bit that the
+    structural check cannot see, and ``CheckpointManager.restore`` falls
+    back to the previous good checkpoint;
+  * transient OSErrors are retried with backoff, everything else
+    propagates immediately;
+  * the preemption handler install is idempotent and the async-save
+    error path surfaces on the next ``wait()``.
+"""
+import dataclasses
+import json
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointConfig, CheckpointManager
+from repro.checkpoint import serialization as SER
+from repro.core import (AdapproxConfig, RankConfig, adapprox, adapprox_state,
+                        apply_updates, make_optimizer)
+from repro.resilience import (FaultPlan, GuardConfig, GuardedState,
+                              corrupt_latest_checkpoint, flip_bit,
+                              inject_faults, remesh_after_loss,
+                              tree_all_finite)
+from repro.resilience.guards import guard_updates
+
+
+def toy_params():
+    key = jax.random.PRNGKey(0)
+    return {"w": jax.random.normal(key, (64, 48)) * 0.02,
+            "b": jnp.zeros((48,))}
+
+
+def toy_grads(params, t):
+    key = jax.random.PRNGKey(7)
+    return jax.tree.map(
+        lambda p: jax.random.normal(jax.random.fold_in(key, t * 10 + p.size),
+                                    p.shape), params)
+
+
+# ---------------------------------------------------------------------------
+# tree_all_finite
+# ---------------------------------------------------------------------------
+
+def test_tree_all_finite():
+    ok = {"a": jnp.ones((3,)), "b": jnp.zeros((2, 2))}
+    assert bool(tree_all_finite(ok))
+    assert not bool(tree_all_finite({"a": jnp.array([1.0, jnp.nan])}))
+    assert not bool(tree_all_finite({"a": jnp.array([jnp.inf])}))
+    # integer leaves cannot be non-finite and must not break the check
+    assert bool(tree_all_finite({"i": jnp.arange(3), "f": jnp.ones(2)}))
+    assert bool(tree_all_finite({}))
+
+
+# ---------------------------------------------------------------------------
+# chain-level skip-step wrapper
+# ---------------------------------------------------------------------------
+
+def test_skip_step_freezes_params_and_state():
+    params = toy_params()
+    opt = guard_updates(make_optimizer("adamw", lr=1e-2, weight_decay=0.1),
+                        GuardConfig())
+    state = opt.init(params)
+    p = params
+    for t in (1, 2):
+        upd, state = opt.update(toy_grads(p, t), state, p)
+        p = apply_updates(p, upd)
+    pre_inner = jax.tree.leaves(state.inner)
+
+    poisoned = jax.tree.map(lambda g: g.at[0].set(jnp.nan), toy_grads(p, 3))
+    upd, state = opt.update(poisoned, state, p)
+    for leaf in jax.tree.leaves(upd):
+        np.testing.assert_array_equal(np.asarray(leaf), 0.0)
+    # the WHOLE inner state reverted: weight decay, momenta, step counter
+    for a, b in zip(pre_inner, jax.tree.leaves(state.inner)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(state.skipped) == 1 and int(state.last_skip) == 3
+
+    # a healthy step proceeds normally afterwards
+    upd, state = opt.update(toy_grads(p, 4), state, p)
+    assert any(float(np.abs(np.asarray(l)).max()) > 0
+               for l in jax.tree.leaves(upd))
+    assert int(state.skipped) == 1 and int(state.steps) == 4
+
+
+def test_guard_is_bitwise_noop_on_healthy_steps():
+    params = toy_params()
+    bare = make_optimizer("adamw", lr=1e-2, weight_decay=0.1)
+    wrapped = guard_updates(make_optimizer("adamw", lr=1e-2,
+                                           weight_decay=0.1), GuardConfig())
+    sa, sb = bare.init(params), wrapped.init(params)
+    p_a = p_b = params
+    for t in range(1, 5):
+        ua, sa = bare.update(toy_grads(p_a, t), sa, p_a)
+        ub, sb = wrapped.update(toy_grads(p_b, t), sb, p_b)
+        for la, lb in zip(jax.tree.leaves(ua), jax.tree.leaves(ub)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+        p_a, p_b = apply_updates(p_a, ua), apply_updates(p_b, ub)
+    assert int(sb.skipped) == 0
+
+
+def test_guard_init_leaves_do_not_alias():
+    # every state leaf must be its own buffer: a shared array across
+    # counter fields makes jit with donate_argnums reject the state
+    # ("Attempt to donate the same buffer twice") on the sharded path
+    opt = guard_updates(make_optimizer("adamw", lr=1e-2), GuardConfig())
+    leaves = [l for l in jax.tree.leaves(opt.init(toy_params()))
+              if isinstance(l, jax.Array)]
+    assert len({id(l) for l in leaves}) == len(leaves)
+
+
+def test_skip_counters_ride_jit_and_checkpoint_flatten():
+    params = toy_params()
+    opt = guard_updates(make_optimizer("adamw", lr=1e-2), GuardConfig())
+    state = opt.init(params)
+    step = jax.jit(opt.update)
+    bad = jax.tree.map(lambda g: g * jnp.nan, toy_grads(params, 1))
+    _, state = step(bad, state, params)
+    assert int(state.skipped) == 1
+    # GuardedState is a registered pytree: it flattens for checkpointing
+    leaves, treedef = jax.tree.flatten(state)
+    rt = jax.tree.unflatten(treedef, leaves)
+    assert isinstance(rt, GuardedState) and int(rt.skipped) == 1
+
+
+# ---------------------------------------------------------------------------
+# per-leaf xi watchdog: forced refresh -> demotion -> dense EMA
+# ---------------------------------------------------------------------------
+
+def guarded_cfg(**kw):
+    base = dict(lr=1e-3, min_dim_factor=32, oversample=2, n_iter=2,
+                rank=RankConfig(k_init=2, k_max=8, mode="static"),
+                guards=GuardConfig(xi_trip=1e-6, max_demotions=2))
+    base.update(kw)
+    return AdapproxConfig(**base)
+
+
+def test_xi_trip_forces_refresh_then_demotes():
+    params = toy_params()
+    opt = adapprox(guarded_cfg())
+    state = opt.init(params)
+    p = params
+    gstates = []
+    for t in range(1, 5):
+        upd, state = opt.update(toy_grads(p, t), state, p)
+        p = apply_updates(p, upd)
+        gstates.append(adapprox_state(state).guards)
+        assert bool(tree_all_finite(upd)), f"step {t}"
+    g1, g2, g3, g4 = gstates
+    # rank-2 on a random 64x48 matrix: xi far above the 1e-6 trip line
+    assert int(g1.trips[0]) == 1 and int(g1.force_refresh[0]) == 1
+    assert int(g1.demoted[0]) == 0
+    # second consecutive trip reaches max_demotions: the leaf demotes
+    assert int(g2.demoted[0]) == 1 and int(g2.demotions) == 1
+    assert int(g2.trip_total) >= 2
+    # demoted leaves run the exact dense path: xi pinned to 0, no more
+    # trips, and the dense second-moment EMA keeps advancing
+    assert int(g3.demoted[0]) == 1 and int(g3.trips[0]) == 0
+    dv3, dv4 = np.asarray(g3.dense_v[0]), np.asarray(g4.dense_v[0])
+    assert dv3.shape == (64, 48)
+    assert not np.array_equal(dv3, dv4)
+    assert np.all(dv3 >= 0) and np.all(np.isfinite(dv4))
+
+
+def test_no_demotion_without_budget():
+    params = toy_params()
+    cfg = guarded_cfg(guards=GuardConfig(xi_trip=1e-6, max_demotions=0))
+    opt = adapprox(cfg)
+    state = opt.init(params)
+    p = params
+    for t in range(1, 4):
+        upd, state = opt.update(toy_grads(p, t), state, p)
+        p = apply_updates(p, upd)
+    g = adapprox_state(state).guards
+    # trips keep registering and forcing refreshes, but nothing demotes
+    # and no dense shadow buffers were ever allocated
+    assert int(g.trip_total) >= 3 and int(g.demotions) == 0
+    assert int(g.demoted[0]) == 0 and g.dense_v == ()
+
+
+# ---------------------------------------------------------------------------
+# deterministic gradient injection
+# ---------------------------------------------------------------------------
+
+def test_inject_faults_schedule_is_exact():
+    plan = FaultPlan(nan_steps=(2,), inf_steps=(3,))
+    assert plan.fault_steps == (2, 3)
+    inj = inject_faults(plan)
+    grads = {"a": jnp.ones((4,))}
+    state = inj.init(grads)
+    out1, state = inj.update(grads, state)
+    np.testing.assert_array_equal(np.asarray(out1["a"]), 1.0)
+    out2, state = inj.update(grads, state)
+    assert np.all(np.isnan(np.asarray(out2["a"])))
+    out3, state = inj.update(grads, state)
+    assert np.all(np.isposinf(np.asarray(out3["a"])))
+    out4, state = inj.update(grads, state)
+    np.testing.assert_array_equal(np.asarray(out4["a"]), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint hardening
+# ---------------------------------------------------------------------------
+
+def save_tree(directory, step, scale=1.0):
+    tree = {"w": np.full((8, 8), scale, np.float32),
+            "step": np.asarray(step, np.int32)}
+    return SER.save_pytree(tree, directory, step), tree
+
+
+def test_list_checkpoints_skips_broken_dirs(tmp_path):
+    good1, _ = save_tree(tmp_path, 1)
+    good2, _ = save_tree(tmp_path, 2)
+    # uncommitted dir (kill between mkdir and rename under the old format)
+    (tmp_path / "step_000000090").mkdir()
+    # committed marker but no manifest
+    half = tmp_path / "step_000000091"
+    half.mkdir()
+    (half / SER.COMMIT_MARKER).touch()
+    # committed but a leaf file lost bytes (size mismatch vs manifest)
+    trunc, _ = save_tree(tmp_path, 92)
+    leaf = trunc / "leaf_00000.npy"
+    leaf.write_bytes(leaf.read_bytes()[: leaf.stat().st_size // 2])
+
+    assert SER.list_checkpoints(tmp_path) == [good1, good2]
+    assert SER.latest_checkpoint(tmp_path) == good2
+    mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path)))
+    assert mgr.latest_step() == 2
+
+
+def test_deep_verify_catches_bitflip(tmp_path):
+    ckpt, tree = save_tree(tmp_path, 5)
+    target = ckpt / "leaf_00000.npy"
+    flip_bit(str(target), target.stat().st_size - 1, bit=3)
+    # sizes intact: the structural check passes, only the hash fails
+    assert SER.verify_checkpoint(ckpt)
+    assert not SER.verify_checkpoint(ckpt, deep=True)
+    with pytest.raises(SER.CheckpointCorruptError):
+        SER.restore_pytree(ckpt, tree)
+    # verify=False loads whatever bytes are there (debugging escape hatch)
+    SER.restore_pytree(ckpt, tree, verify=False)
+
+
+def test_manager_restore_falls_back_past_corrupt_latest(tmp_path):
+    mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path),
+                                             async_save=False))
+    _, tree1 = save_tree(tmp_path, 1, scale=1.0)
+    _, tree2 = save_tree(tmp_path, 2, scale=2.0)
+    corrupt_latest_checkpoint(str(tmp_path), kind="bitflip")
+    restored, step = mgr.restore(like=tree1)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["w"]), 1.0)
+    # an explicit step request is a user decision: corruption raises
+    with pytest.raises(SER.CheckpointCorruptError):
+        mgr.restore(like=tree1, step=2)
+
+
+def test_manager_restore_raises_when_all_corrupt(tmp_path):
+    mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path),
+                                             async_save=False))
+    _, tree = save_tree(tmp_path, 1)
+    corrupt_latest_checkpoint(str(tmp_path), kind="bitflip")
+    with pytest.raises(SER.CheckpointCorruptError):
+        mgr.restore(like=tree)
+
+
+def test_truncated_latest_is_invisible_even_to_latest_step(tmp_path):
+    mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path),
+                                             async_save=False))
+    save_tree(tmp_path, 1)
+    save_tree(tmp_path, 2)
+    corrupt_latest_checkpoint(str(tmp_path), kind="truncate")
+    # the cheap structural size check already hides it — no deep hash paid
+    assert mgr.latest_step() == 1
+
+
+def test_manifest_corruption_hides_checkpoint(tmp_path):
+    save_tree(tmp_path, 1)
+    save_tree(tmp_path, 2)
+    corrupt_latest_checkpoint(str(tmp_path), kind="manifest")
+    assert [SER.checkpoint_step(p)
+            for p in SER.list_checkpoints(tmp_path)] == [1]
+
+
+def test_retry_policy(tmp_path):
+    mgr = CheckpointManager(CheckpointConfig(
+        directory=str(tmp_path), io_retries=2, retry_backoff_s=0.001))
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("transient")
+        return "ok"
+
+    assert mgr._with_retries(flaky, "test") == "ok"
+    assert calls["n"] == 3
+
+    calls["n"] = 0
+
+    def always_bad():
+        calls["n"] += 1
+        raise OSError("down")
+
+    with pytest.raises(OSError):
+        mgr._with_retries(always_bad, "test")
+    assert calls["n"] == 3          # first attempt + io_retries
+
+    calls["n"] = 0
+
+    def wrong():
+        calls["n"] += 1
+        raise ValueError("bug")
+
+    # non-OSError is a programming error: no retry
+    with pytest.raises(ValueError):
+        mgr._with_retries(wrong, "test")
+    assert calls["n"] == 1
+
+
+def test_async_save_error_surfaces_on_wait(tmp_path, monkeypatch):
+    mgr = CheckpointManager(CheckpointConfig(
+        directory=str(tmp_path), async_save=True, io_retries=0))
+    monkeypatch.setattr(SER, "save_pytree",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            OSError("disk gone")))
+    mgr.save({"w": np.zeros(2, np.float32)}, 1)
+    with pytest.raises(RuntimeError, match="async checkpoint save failed"):
+        mgr.wait()
+    # the error is consumed: the manager is usable again afterwards
+    mgr.wait()
+
+
+def test_preemption_handler_install_is_idempotent(tmp_path):
+    mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path)))
+    before = signal.getsignal(signal.SIGTERM)
+    get_state = lambda: ({"w": np.zeros(2, np.float32)}, 0)
+    mgr.install_preemption_handler(get_state)
+    first = signal.getsignal(signal.SIGTERM)
+    assert first is not before
+    # double install must NOT chain the handler to itself: prev still
+    # points at the handlers from OUTSIDE this manager
+    mgr.install_preemption_handler(get_state)
+    assert mgr._prev_handlers[signal.SIGTERM] is before
+    mgr.uninstall_preemption_handler()
+    assert signal.getsignal(signal.SIGTERM) is before
+    # uninstall with nothing installed is a no-op
+    mgr.uninstall_preemption_handler()
+    assert signal.getsignal(signal.SIGTERM) is before
+
+
+# ---------------------------------------------------------------------------
+# device loss -> remesh plan
+# ---------------------------------------------------------------------------
+
+def test_remesh_after_loss_plans_for_survivors():
+    plan = remesh_after_loss(lost=2, target_model=2, available_devices=8)
+    # 6 survivors at TP=2: (data=3, model=2), devices used = 6
+    assert plan.model == 2 and plan.devices == 6
+    # losing enough devices degrades TP to the largest fitting power of 2
+    plan = remesh_after_loss(lost=7, target_model=4, available_devices=8)
+    assert plan.model == 1 and plan.devices == 1
+    with pytest.raises(ValueError):
+        remesh_after_loss(lost=8, available_devices=8)
