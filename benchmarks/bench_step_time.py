@@ -74,6 +74,19 @@ CASES = [
     ("adapprox_refresh5_warm1_fused", "adapprox",
      {"refresh_every": 5, "warm_start": True, "n_iter_warm": 1,
       "fused_update": True}),
+    # fold-fused row: fused + amortized cadence now emits the fold
+    # projection (G^2)^T Q from pass 1 on every step (discarded on refresh
+    # steps), so fold steps skip the standalone fold matmul's extra G
+    # read.  Same optimizer config as the row above — kept under its own
+    # name so the JSON trajectory records the transition PR; the byte-side
+    # claim is pinned by benchmarks/roofline.py --quick, not CPU wall ms.
+    ("adapprox_refresh5_warm1_foldfused", "adapprox",
+     {"refresh_every": 5, "warm_start": True, "n_iter_warm": 1,
+      "fused_update": True}),
+    # int8 factor storage with lazy in-kernel dequant (the launcher's
+    # --quantize-factors); factor reads at ~1/4 f32 bytes per roofline
+    ("adapprox_int8_factors", "adapprox",
+     {"quantize_factors": True, "fused_update": True}),
 ]
 
 
@@ -155,7 +168,7 @@ def time_elementwise_stage(stack: str, r: int = 64,
         outs = []
         for q, u, g, m1 in zip(qs, us, gs, m1s):
             def one(q, u, g, m1):
-                u_hat, _, usq, _, _ = ref.fused_precond(q, u, g, b2, eps)
+                u_hat, _, usq, _, _, _ = ref.fused_precond(q, u, g, b2, eps)
                 denom = jnp.maximum(
                     1.0, jnp.sqrt(usq / u_hat.size + 1e-30) / clip_d)
                 _, m1n = ops.fused_apply(u_hat, m1, denom, b1,

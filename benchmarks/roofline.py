@@ -117,6 +117,100 @@ def optimizer_update_traffic(m: int, n: int, r: int, b1: float = 0.9,
     return {"stages": stages, "total": sum(stages.values())}
 
 
+def optimizer_fold_step_traffic(m: int, n: int, r: int, b1: float = 0.9,
+                                fused: bool = False,
+                                fold_fused: bool = False,
+                                bm: int = 256, bn: int = 256) -> dict:
+    """HBM bytes for one FOLD step (``refresh_every > 1``, between full
+    S-RSI refreshes) of one factored leaf: the elementwise tail of
+    :func:`optimizer_update_traffic` plus the one-sided fold
+    ``U <- mask * (b2*U + (1-b2) (G^2)^T Q)``.
+
+    ``fold_fused=False`` (the PR-4 pipeline) charges the standalone
+    ``sq_matmul_t`` honestly: XLA materialises G^T in HBM before the
+    custom call (read G, write G^T), then the kernel streams G^T and Q
+    and writes Y — ~3 m*n words on top of the update's own passes.
+
+    ``fold_fused=True`` (requires ``fused``): pass 1 emits per-row-block
+    ``(G_tile^2)^T Q_tile`` partials from its already-resident G tiles —
+    ``gm * n * r`` written — and the host combine (the axis-0 sum fuses
+    into the rank-r EMA's elementwise consumer) reads them back alongside
+    U.  The 3 m*n standalone pass becomes O(gm * n * r) partial words:
+    >= 1.3x fewer fold-step bytes even at the worst case r = bm/2, ~1.6x
+    at small r (pinned by tests/test_fused.py and the --quick CI gate).
+    """
+    import math
+    assert fused or not fold_fused, "fold_fused rides the fused pass 1"
+    base = optimizer_update_traffic(m, n, r, b1, False, fused=fused,
+                                    bm=bm, bn=bn)
+    stages = dict(base["stages"])
+    mn = m * n * F32
+    mr = m * r * F32
+    nr = n * r * F32
+    if fold_fused:
+        gm = math.ceil(m / bm)
+        stages["fold_partials"] = gm * nr           # written by pass 1
+        # combine + EMA: read the gm partial blocks + U, write U (the
+        # reduction fuses into the elementwise EMA loop)
+        stages["fold_ema"] = (gm + 2) * nr
+    else:
+        stages["fold_matmul"] = 3 * mn + mr + nr    # G, G^T x2, Q, Y
+        stages["fold_ema"] = 3 * nr                 # read U, Y; write U
+    return {"stages": stages, "total": sum(stages.values())}
+
+
+def factor_read_bytes(m: int, n: int, r: int, dtype: str = "float32",
+                      bm: int = 256, bn: int = 256) -> int:
+    """Bytes pass 1 reads for the (Q, U) factors of one leaf.
+
+    ``dtype="int8"`` models the dequant-fused tile loads
+    (core/quantized.py + kernels/fused_update.py): the int8 payload plus
+    the per-block f32 (scale, zero) pairs — with the codec's BLOCK_ROWS
+    equal to the kernel tile (bm = bn) each tile load needs exactly ONE
+    scale/zero row, so the overhead is 2 * (gm + gn) * r f32 words and
+    the factor reads land at ~1/4 the fp32 bytes (>= 3.75x, pinned by
+    tests/test_fused.py and the --quick CI gate; exactly 4x minus the
+    scale/zero rows).
+    """
+    import math
+    if dtype != "int8":
+        return (m * r + n * r) * F32
+    gm, gn = math.ceil(m / bm), math.ceil(n / bn)
+    return (m * r + n * r) * 1 + 2 * (gm * r + gn * r) * F32
+
+
+# Committed byte-ratio floors, asserted by ``--quick`` (CI) and
+# tests/test_fused.py.  Raise them only with a model change that justifies
+# it; they must never silently regress.
+FOLD_FUSED_FLOOR = 1.3       # PR-4 fused fold step / fold-fused fold step
+DEQUANT_FLOOR = 3.75         # fp32 factor reads / int8 factor reads
+
+QUICK_SHAPES = ((768, 2304, 128), (3072, 768, 64), (160, 144, 8))
+
+
+def quick_check(shapes=QUICK_SHAPES) -> list[str]:
+    """The ``--quick`` CI gate: recompute the fold-fused and dequant byte
+    ratios from the model and assert the committed floors hold."""
+    rows = ["quick_m,n,r,fold_fused_ratio,dequant_ratio"]
+    for m, n, r in shapes:
+        pr4 = optimizer_fold_step_traffic(m, n, r, fused=True)["total"]
+        ff = optimizer_fold_step_traffic(m, n, r, fused=True,
+                                         fold_fused=True)["total"]
+        fold_ratio = pr4 / ff
+        deq_ratio = (factor_read_bytes(m, n, r)
+                     / factor_read_bytes(m, n, r, "int8"))
+        assert fold_ratio >= FOLD_FUSED_FLOOR, (
+            f"fold-fused ratio {fold_ratio:.3f} < {FOLD_FUSED_FLOOR} "
+            f"at {(m, n, r)}")
+        assert deq_ratio >= DEQUANT_FLOOR, (
+            f"dequant ratio {deq_ratio:.3f} < {DEQUANT_FLOOR} "
+            f"at {(m, n, r)}")
+        rows.append(f"{m},{n},{r},{fold_ratio:.3f},{deq_ratio:.3f}")
+    rows.append(f"floors_ok,fold_fused>={FOLD_FUSED_FLOOR},"
+                f"dequant>={DEQUANT_FLOOR}")
+    return rows
+
+
 def optimizer_traffic_table(shapes=((768, 2304, 128), (768, 768, 128),
                                     (768, 3072, 128), (3072, 768, 128)),
                             b1: float = 0.9) -> list[str]:
@@ -156,5 +250,7 @@ if __name__ == "__main__":
     import sys
     if len(sys.argv) > 1 and sys.argv[1] == "--optimizer":
         print("\n".join(optimizer_traffic_table()))
+    elif len(sys.argv) > 1 and sys.argv[1] == "--quick":
+        print("\n".join(quick_check()))      # asserts the committed floors
     else:
         print("\n".join(run(sys.argv[1] if len(sys.argv) > 1 else "pod")))

@@ -281,6 +281,11 @@ class OptimizerConfig:
     max_demotions: int = 0
     min_dim_factor: int = 128       # factor leaves with min(m, n) >= this
     factor_dtype: str = "float32"   # "int8": quantized factors
+    # quantize_factors is the launcher-facing alias for
+    # factor_dtype="int8" (core/quantized.py per-block codec): ~4x smaller
+    # stored factors, and with fused_update the dequant fuses into the
+    # pass-1 tile loads so the f32 factors never materialize in HBM.
+    quantize_factors: bool = False
     seed: int = 0
     # sketch family (count-min second moment for embedding tables;
     # core/sketch.py): depth x width buckets per leaf, hashed over the

@@ -81,6 +81,22 @@ baseline):
     (batch_dims, m, n, dtype) and run ONE vmapped S-RSI + update per
     bucket instead of N sequential per-leaf traces: same math bit-for-bit,
     ~N-fold smaller HLO / fewer kernel launches for transformer stacks.
+    On the pallas dispatch path, ``kernels/ops.py`` additionally buckets
+    MIXED shapes: raw dims round up a coarse ladder before tiling, so
+    near-miss signatures share compiled kernel instances (default on;
+    ``REPRO_KERNEL_BUCKETS=off`` or ``ops.set_bucketing(False)``).
+  * ``fused_update=True`` + ``refresh_every>1`` — fold-fused pass 1:
+    the fused pipeline's first pass also emits the fold projection
+    ``(G^2)^T Q`` from its already-resident G tiles, so fold steps skip
+    the standalone ``sq_matmul_t`` pass over G entirely (>= 1.3x fewer
+    fold-step bytes by the roofline model; automatic, no extra knob).
+  * ``factor_dtype="int8"`` (or ``OptimizerConfig.quantize_factors`` /
+    the launcher's ``--quantize-factors``) — int8 factor storage with
+    per-(row-block, column) affine scale/zero (core/quantized.py), ~4x
+    smaller factor state.  With ``fused_update=True`` the dequant is
+    LAZY: pass 1 decodes int8 tiles in VMEM (kernels/fused_update.py)
+    and fp32 factors never materialize in HBM on the update path; only
+    the skinny O((m+n) r) refresh/fold inputs are decoded per step.
 
   Measured (benchmarks/bench_step_time.py -> BENCH_step_time.json, CPU,
   GPT-2-shaped 4-layer stack): refresh_every=5 + warm_start(l'=1) is

@@ -308,7 +308,26 @@ def _factored_update_2d(g, q, u, k, xi_prev, m1, key, step,
     g32 = g.astype(jnp.float32)
     dynamic = cfg.dynamic_refresh and refresh_t is not None
     r_every = refresh_t if dynamic else cfg.refresh_every
-    v_op = S.make_implicit_v(q, u, g32, cfg.b2)
+    # Lazy int8: with fused_update + factor_dtype="int8" the caller passes
+    # the stored QuantizedMatrix triples straight through — pass 1
+    # dequantizes per tile in VMEM and the f32 factors never materialize
+    # in HBM on the update path.  Only the skinny refresh/fold branch
+    # (inside its lax.cond, O((m+n) r) transient) sees f32 factors.
+    is_q8 = hasattr(q, "q8")
+
+    def _deq():
+        QZ = _quantized()
+        return QZ.dequantize(q), QZ.dequantize(u)
+
+    # The skinny f32 view of the factors the refresh/fold branches consume
+    # must be dequantized OUTSIDE the cond, for the same reason pass 1
+    # stays outside it (see below): XLA contracts the codec's mul-add to
+    # fma differently across program contexts, and the eager unfused path
+    # dequantizes up front — in-branch dequant breaks the bitwise
+    # contract.  O((m+n) r) transient, invisible next to the O(mn) update.
+    q32u32 = _deq() if is_q8 else None
+
+    v_op = None if is_q8 else S.make_implicit_v(q, u, g32, cfg.b2)
 
     # V_t is needed every step for the elementwise update unless the fused
     # pipeline (or the lowrank_update kernel) reconstructs it tile-wise;
@@ -326,13 +345,24 @@ def _factored_update_2d(g, q, u, k, xi_prev, m1, key, step,
     # contraction differs), and the bitwise contract compares against the
     # unfused path, which forms V outside the cond.
     vfro = None
+    yfold = None
     if cfg.fused_update:
         need_guid = cfg.b1 > 0 and cfg.guidance != "off"
-        u_hat_raw, vfro, usq, m1dot, m1sq = _kernel_ops().fused_precond(
+        # Fold-fused: on an amortized-refresh cadence pass 1 also emits
+        # the fold projection (G^2)^T Q from its already-resident G tiles,
+        # so fold steps skip the standalone sq_matmul_t pass over G.
+        # Computed EVERY step (pass 1 must stay outside the cond, see
+        # above) and discarded on refresh steps — O(gm n r) partial words,
+        # cheap next to the 3 m n the fold pass used to cost.
+        with_fold = dynamic or cfg.refresh_every > 1
+        (u_hat_raw, vfro, usq, m1dot, m1sq,
+         yfold) = _kernel_ops().fused_precond(
             q, u, g32, cfg.b2, cfg.eps, m1=m1 if need_guid else None,
-            with_vfro=cfg.implicit)
+            with_vfro=cfg.implicit, with_fold=with_fold)
 
     def _run_srsi(n_it: int, u0, use_warm):
+        op = (v_op if v_op is not None
+              else S.make_implicit_v(*q32u32, g32, cfg.b2))
         if cfg.implicit:
             # ||V||_F^2 from the already-materialised V when we have one
             # (use_kernels=False), or from the fused pass-1 partials —
@@ -342,9 +372,9 @@ def _factored_update_2d(g, q, u, k, xi_prev, m1, key, step,
                 fs = vfro
             else:
                 fs = None if vmat is None else jnp.sum(jnp.square(vmat))
-            return S.srsi_implicit(v_op, r_store, p_eff, n_it, key,
+            return S.srsi_implicit(op, r_store, p_eff, n_it, key,
                                    frob_sq=fs, u0=u0, use_warm=use_warm)
-        vm = vmat if vmat is not None else v_op.materialize()
+        vm = vmat if vmat is not None else op.materialize()
         return S.srsi_dense(vm, r_store, p_eff, n_it, key,
                             u0=u0, use_warm=use_warm)
 
@@ -364,10 +394,11 @@ def _factored_update_2d(g, q, u, k, xi_prev, m1, key, step,
             # over the next couple of warm refreshes (power iterations
             # accumulate across steps on the slow-moving EMA operator).
             use_warm = xi_prev <= cfg.warm_drift_xi
+            u_seed = q32u32[1] if is_q8 else u
             res = jax.lax.cond(
                 step == 1,
                 lambda: _run_srsi(cfg.n_iter, None, None),
-                lambda: _run_srsi(cfg.n_iter_warm, u, use_warm))
+                lambda: _run_srsi(cfg.n_iter_warm, u_seed, use_warm))
         else:
             res = _run_srsi(cfg.n_iter, None, None)
         # --- adaptive rank (Algorithm 2 over the captured-energy CDF)
@@ -382,14 +413,26 @@ def _factored_update_2d(g, q, u, k, xi_prev, m1, key, step,
         """Between refreshes: fold G_t^2 into U under the frozen basis Q —
         U <- mask * (b2*U + (1-b2) (G^2)^T Q), the exact projection of
         V_t = b2 V_{t-1} + (1-b2) G^2 onto span(Q).  O(mnr) matmul, no
-        subspace iteration, no QR."""
+        subspace iteration, no QR.  With the fold-fused pass 1 (yfold
+        from above) the matmul has already been paid for by the update's
+        read of G and only the rank-r EMA runs here."""
         mask = S.col_mask(r_store, jnp.minimum(k, k_max_leaf))
-        if cfg.use_kernels:
-            u_new = _kernel_ops().one_sided_fold(u, q, g32, cfg.b2, mask)
+        q32, u32 = q32u32 if is_q8 else (q, u)
+        if yfold is not None:
+            # yfold is the same single-dot (G^2)^T Q product the branches
+            # below compute (one HLO, bit-stable in or out of the cond),
+            # and the EMA runs inside the branch in both layouts — the
+            # fused == unfused bitwise contract holds.
+            u_new = (cfg.b2 * u32
+                     + (1.0 - cfg.b2) * yfold) * mask[None, :]
+        elif cfg.use_kernels:
+            u_new = _kernel_ops().one_sided_fold(u32, q32, g32, cfg.b2,
+                                                 mask)
         else:
-            u_new = (cfg.b2 * u
-                     + (1.0 - cfg.b2) * ((g32 * g32).T @ q)) * mask[None, :]
-        return q, u_new, k, xi_prev
+            u_new = (cfg.b2 * u32
+                     + (1.0 - cfg.b2) * ((g32 * g32).T @ q32)) \
+                * mask[None, :]
+        return q32, u_new, k, xi_prev
 
     if dynamic:
         # Traced cadence: the refresh/fold cond is always present in the
@@ -478,6 +521,13 @@ def _dequant_factors(leaf: F.FactoredLeaf, cfg: AdapproxConfig):
     return leaf.q, leaf.u
 
 
+def _lazy_q8(cfg: AdapproxConfig) -> bool:
+    """True when int8 factors skip the upfront dequant and ride into the
+    fused pipeline as QuantizedMatrix triples (dequant fused into the
+    pass-1 tile loads; refresh/fold dequantize transiently in-branch)."""
+    return cfg.factor_dtype == "int8" and cfg.fused_update
+
+
 def _run_factored_core(g, q32, u32, k, xi, m1, keys, step,
                        cfg: AdapproxConfig, r_store: int, p_eff: int,
                        k_max_leaf: int, n_batch: int, refresh_t=None,
@@ -501,8 +551,15 @@ def _run_factored_core(g, q32, u32, k, xi, m1, keys, step,
 def _update_factored(g, leaf: F.FactoredLeaf, w, key, step,
                      cfg: AdapproxConfig, refresh_t=None, force_refresh=None):
     bd = F.batch_dims(w.shape)
-    leaf_q, leaf_u = _dequant_factors(leaf, cfg)
-    r_store = leaf_q.shape[-1]
+    if _lazy_q8(cfg):
+        # Dequant-fused: the stored QuantizedMatrix triples flow straight
+        # into fused pass 1 (per-tile dequant in VMEM) — no upfront f32
+        # materialisation of the factors.
+        leaf_q, leaf_u = leaf.q, leaf.u
+        r_store = leaf.q.q8.shape[-1]
+    else:
+        leaf_q, leaf_u = _dequant_factors(leaf, cfg)
+        r_store = leaf_q.shape[-1]
     p_eff, k_max_leaf = _leaf_meta(w.shape, r_store, cfg)
     keys = F.batched_keys(key, bd)
     m_out, q, u, k, xi, m1, clip = _run_factored_core(
@@ -535,7 +592,8 @@ def _update_factored_guarded(g, leaf: F.FactoredLeaf, w, key, step,
     Returns ``(m_out, new_leaf, (clip, k_max_leaf), dense_v_new)``.
     """
     force, demoted, dense_v = guard
-    r_store = _dequant_factors(leaf, cfg)[0].shape[-1]
+    r_store = (leaf.q.q8.shape[-1] if cfg.factor_dtype == "int8"
+               else leaf.q.shape[-1])
     _, k_max_leaf = _leaf_meta(w.shape, r_store, cfg)
     if dense_v is None:
         m_out, nl, tap = _update_factored(g, leaf, w, key, step, cfg,
@@ -585,10 +643,18 @@ def _update_factored_bucket(gs, leaves, ws, idxs, step_key, step,
     tests/test_refresh.py).
     """
     bd = F.batch_dims(ws[0].shape)
-    deq = [_dequant_factors(leaf, cfg) for leaf in leaves]
-    q_stk = jnp.stack([q for q, _ in deq])
-    u_stk = jnp.stack([u for _, u in deq])
-    r_store = q_stk.shape[-1]
+    if _lazy_q8(cfg):
+        # QuantizedMatrix is a NamedTuple pytree: stacking fieldwise keeps
+        # the triples intact for the dequant-fused pass-1 loads.
+        stk = lambda ms: jax.tree.map(lambda *xs: jnp.stack(xs), *ms)
+        q_stk = stk([leaf.q for leaf in leaves])
+        u_stk = stk([leaf.u for leaf in leaves])
+        r_store = q_stk.q8.shape[-1]
+    else:
+        deq = [_dequant_factors(leaf, cfg) for leaf in leaves]
+        q_stk = jnp.stack([q for q, _ in deq])
+        u_stk = jnp.stack([u for _, u in deq])
+        r_store = q_stk.shape[-1]
     p_eff, k_max_leaf = _leaf_meta(ws[0].shape, r_store, cfg)
     g_stk = jnp.stack(gs)          # uniform dtype: part of the signature
     k_stk = jnp.stack([leaf.k for leaf in leaves])

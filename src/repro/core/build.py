@@ -76,7 +76,9 @@ def _preconditioner(cfg: OptimizerConfig, name: str,
             oversample=cfg.oversample, n_iter=cfg.n_iter,
             min_dim_factor=cfg.min_dim_factor, guidance=cfg.guidance,
             implicit=cfg.implicit, use_kernels=cfg.use_kernels,
-            factor_dtype=cfg.factor_dtype, seed=cfg.seed,
+            factor_dtype=("int8" if cfg.quantize_factors
+                          else cfg.factor_dtype),
+            seed=cfg.seed,
             refresh_every=cfg.refresh_every, warm_start=cfg.warm_start,
             n_iter_warm=cfg.n_iter_warm, warm_drift_xi=cfg.warm_drift_xi,
             bucketed=cfg.bucketed, fused_update=cfg.fused_update,

@@ -2,13 +2,30 @@
 
 The paper's Discussion: "our approach is compatible with other memory
 optimization techniques such as quantization" — this module implements it.
-The stored factors Q (m, r) / U (n, r) are kept as int8 with per-column
-fp32 scales (symmetric absmax); they are dequantised transiently at the
-start of the update.  Factor memory drops 4x vs fp32 (Table-2 extension:
-Adapprox(k_max, int8) ~ 16.9% -> ~4.4% of AdamW at beta1=0).
+The stored factors Q (m, r) / U (n, r) are kept as int8 with per-tile fp32
+scale/zero-point pairs; factor memory drops ~4x vs fp32 (Table-2
+extension: Adapprox(k_max, int8) ~ 16.9% -> ~4.4% of AdamW at beta1=0).
 
-Error analysis: per-column absmax int8 adds relative error <= 1/127 ~ 0.8%
-per entry of the *approximation* (whose own error is xi ~ 1%); and because
+Codec: asymmetric affine over row blocks of ``BLOCK_ROWS`` rows per
+column.  For each (block, column) cell of the factor:
+
+    scale = (amax - amin) / 254 + tiny
+    zero  = amin
+    q8    = clip(round((x - zero) / scale), 0, 254) - 127     (int8)
+    deq   = (q8 + 127) * scale + zero
+
+The block height deliberately equals the fused kernels' row-tile (bm =
+bn = 256), so a pass-1 tile sees exactly ONE (scale, zero) row per factor
+block and dequantization fuses into the tile load —
+``kernels/fused_update.py`` applies this exact formula in-kernel and the
+int8 factors never round-trip through fp32 HBM on the update path
+(``ops.fused_precond`` accepts :class:`QuantizedMatrix` directly).  Any
+change to the formula here MUST be mirrored in the kernel's ``_deq_tile``
+or the fused-vs-unfused bitwise contract breaks.
+
+Error analysis: per-block affine int8 adds relative error <=
+(amax - amin)/(254 * colmax) <= 1/127 ~ 0.8% per entry of the
+*approximation* (whose own error is xi ~ 1%); and because
 V_t = b2 * deq(Q)deq(U)^T + (1-b2) G^2 re-factorises every step, the
 quantisation error does not compound — it behaves like a slightly larger
 xi (validated in tests/test_quantized.py against the fp32 trajectory).
@@ -20,22 +37,52 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+# Quantization block height (rows per scale/zero cell).  MUST match the
+# row/column tile (bm = bn) the dequant-fused pass-1 kernels run with —
+# kernels/ops.py forces its tile plan to this value on the quantized path.
+BLOCK_ROWS = 256
+
 
 class QuantizedMatrix(NamedTuple):
-    q8: jnp.ndarray        # (..., m, r) int8
-    scale: jnp.ndarray     # (..., 1, r) float32 per-column absmax / 127
+    q8: jnp.ndarray        # (..., m, r) int8, offset by -127
+    scale: jnp.ndarray     # (..., nb, r) f32, nb = ceil(m / BLOCK_ROWS)
+    zero: jnp.ndarray      # (..., nb, r) f32 per-block per-column minimum
+
+
+def _expand(blocked: jnp.ndarray, m: int) -> jnp.ndarray:
+    """(..., nb, r) block cells -> (..., m, r) per-row broadcast."""
+    return jnp.repeat(blocked, BLOCK_ROWS, axis=-2)[..., :m, :]
 
 
 def quantize(x: jnp.ndarray) -> QuantizedMatrix:
-    """Symmetric per-column absmax int8."""
-    absmax = jnp.max(jnp.abs(x), axis=-2, keepdims=True)
-    scale = (absmax / 127.0 + 1e-30).astype(jnp.float32)
-    q8 = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return QuantizedMatrix(q8=q8, scale=scale)
+    """Asymmetric per-(row-block, column) affine int8.
+
+    The trailing ragged block (m % BLOCK_ROWS != 0) computes its range
+    over zero-padded rows — including 0 in the range costs <= 1 bit of
+    the 254-step budget and keeps the all-zero init exactly
+    representable (scale = tiny, zero = 0 => deq == 0).
+    """
+    m, r = x.shape[-2], x.shape[-1]
+    x = x.astype(jnp.float32)
+    pad = (-m) % BLOCK_ROWS
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(0, pad), (0, 0)])
+    nb = xp.shape[-2] // BLOCK_ROWS
+    blocks = xp.reshape(xp.shape[:-2] + (nb, BLOCK_ROWS, r))
+    amin = jnp.min(blocks, axis=-2)
+    amax = jnp.max(blocks, axis=-2)
+    scale = ((amax - amin) / 254.0 + 1e-30).astype(jnp.float32)
+    zero = amin.astype(jnp.float32)
+    q = jnp.round((x - _expand(zero, m)) / _expand(scale, m))
+    q8 = (jnp.clip(q, 0.0, 254.0) - 127.0).astype(jnp.int8)
+    return QuantizedMatrix(q8=q8, scale=scale, zero=zero)
 
 
 def dequantize(qm: QuantizedMatrix) -> jnp.ndarray:
-    return qm.q8.astype(jnp.float32) * qm.scale
+    """The EXACT formula the fused kernels apply per tile (see module
+    docstring) — keep bit-identical with ``fused_update._deq_tile``."""
+    m = qm.q8.shape[-2]
+    return ((qm.q8.astype(jnp.float32) + 127.0) * _expand(qm.scale, m)
+            + _expand(qm.zero, m))
 
 
 def quantize_tree_factors(leaf_q: jnp.ndarray, leaf_u: jnp.ndarray):

@@ -24,7 +24,17 @@ Family index (oracle <-> kernel module <-> ops wrapper):
   fused_precond    ref.fused_precond    <-> fused_update.py
       pass 1 of the two-pass fused pipeline: u_hat + per-tile partial
       reductions (sum V^2, sum u_hat^2, and with guidance dot(m1, u_hat),
-      sum m1^2); V is never materialised in HBM
+      sum m1^2); V is never materialised in HBM.  Two optional riders on
+      the same read of G:
+        * ``with_fold=True`` (fold-fused pass 1) additionally emits the
+          fold projection (G^2)^T Q as per-row-tile partials, summed on
+          the host — on an amortized-refresh cadence, fold steps reuse
+          pass 1's resident G tiles instead of paying the standalone
+          ``sq_matmul_t`` pass (which reads a materialised G^T);
+        * ``q`` / ``u`` may be :class:`repro.core.quantized.QuantizedMatrix`
+          triples — the kernel dequantizes int8 factor tiles in VMEM
+          (``_deq_tile``, the codec's exact affine formula + row masks),
+          so fp32 factors never touch HBM on the update path
   fused_apply      ref.fused_apply      <-> fused_update.py
       pass 2: RMS clip + update-EMA first moment + guidance scales in one
       read-modify-write; m1 aliased in place (input_output_aliases);
@@ -33,7 +43,8 @@ Family index (oracle <-> kernel module <-> ops wrapper):
       (G*G) @ X / (G*G)^T @ Y with the square fused — the S-RSI sketch
       matvecs of the implicit second-moment operator
   one_sided_fold   ref.one_sided_fold   <-> (composes sq_matmul_t)
-      amortized-refresh factor fold U <- mask*(b2*U + (1-b2)(G^2)^T Q)
+      amortized-refresh factor fold U <- mask*(b2*U + (1-b2)(G^2)^T Q);
+      standalone form — the fused pipeline gets the product from pass 1
   sketch_update    ref.sketch_update    <-> sketch_update.py
       fused count-min second-moment EMA scatter + min-over-depth query
       for the sketch state family (scale_by_sketch); one-hot matmuls do
@@ -42,6 +53,22 @@ Family index (oracle <-> kernel module <-> ops wrapper):
       causal/GQA online-softmax attention forward
   ssd_chunk        models zoo reference <-> ssd_chunk.py
       Mamba2 SSD intra-chunk fusion
+
+Dispatch-level machinery in ``ops.py`` (pallas paths only; the ref path
+never pads, keeping the default chain's arithmetic untouched):
+
+  * mixed-shape bucketing (default on; ``REPRO_KERNEL_BUCKETS=off`` or
+    ``ops.set_bucketing(False)`` to disable): raw dims round up a coarse
+    ladder before the block size is chosen, so near-miss leaf shapes land
+    on a handful of padded kernel signatures instead of one compiled
+    instance per (shape, r_store).  Bit-neutral on tensor outputs, f32
+    roundoff on scalar tile reductions (tests/test_kernels.py);
+  * dispatch census: ``ops.kernel_instances()`` counts distinct
+    (kernel, padded shapes, block plan) signatures — exactly the jit
+    cache keys — for tests and compile-time audits.
+
+Byte-traffic claims for all of the above are modeled and floor-asserted
+in benchmarks/roofline.py (``--quick`` runs in CI).
 
 Use via ``repro.kernels.ops`` — never call kernel modules directly.
 """

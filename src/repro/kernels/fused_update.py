@@ -13,6 +13,25 @@ it to ~3:
       dot(m1, u_hat) + sum(m1^2).  The (gm, gn) partial grids are summed on
       the host — O(tiles) scalars, negligible traffic.
 
+      Two optional tile-load extensions close the remaining HBM gaps:
+
+      * ``with_fold=True`` additionally emits the amortized-refresh fold
+        projection ``(G^2)^T Q`` as a third per-tile partial: each (i, j)
+        tile contributes ``(G_tile^2)^T Q_tile`` (bn, r) to row i of a
+        (gm, n, r) partial tensor, host-summed over i on the same
+        partial-reduction path as vfro/usq.  G is already resident in the
+        tile registers for u_hat, so on fold steps the separate
+        ``sq_matmul_t`` pass over G — read G, materialise G^T, read it
+        again — disappears (see ops.one_sided_fold / roofline.py).
+
+      * quantized factors: pass Q / U as ``(q8, scale, zero)`` triples
+        (core/quantized.py layout, block height == bm == bn) and the tile
+        load applies ``deq = (q8 + 127) * scale + zero`` in VMEM — the
+        int8 factors never round-trip through fp32 HBM.  Rows past the
+        true (m, n) are statically masked to 0 so padded tiles keep every
+        partial reduction exact (an affine codec dequantizes padding to
+        ``zero``, not 0, without the mask).
+
   pass 2 (``fused_apply_pallas``): one read-modify-write applying the
       host-combined scalars: u_c = u_hat / denom (RMS clip),
       acc = b1 * m1 + (1 - b1) * u_c (update-EMA first moment),
@@ -25,14 +44,19 @@ factor reads shared by both sides): unfused = reconstruct (read G, write
 V) + divide (read G, V; write u_hat) + rms reduce (read u_hat) + clip
 (rmw u_hat) + EMA (read u_c, m1; write m1) ~ 11 m*n; fused = pass 1
 (read G, write u_hat) + pass 2 (read u_hat, m1; write m1 == m_out)
-~ 5 m*n — 2.1-2.5x fewer bytes across modes; see
+~ 5 m*n.  On fold steps the PR-4 pipeline additionally paid ~3 m*n for
+the standalone (G^2)^T Q (read G, write G^T, read G^T); ``with_fold``
+replaces that with 2 * gm * n * r partial words — >= 1.3x fewer fold-step
+bytes at r <= bm / 2, 1.6x at small r.  See
 benchmarks/roofline.py::optimizer_update_traffic for the full per-stage
-model and tests/test_fused.py for the pinned >= 2x ratio.
+model and tests/test_fused.py for the pinned ratios.
 
 VMEM tiling matches lowrank_update.py: blocks (bm, r) of Q, (bn, r) of U,
 (bm, bn) of G / m1 with r padded to the 128-lane quantum by ops.py;
-bm = bn = 256 keeps the footprint ~2 MiB, well inside the ~16 MiB budget.
-Scalars ride in a single small ANY-space vector, indexed inside the body.
+bm = bn = 256 keeps the footprint ~2 MiB, well inside the ~16 MiB budget
+(and equals core/quantized.py's BLOCK_ROWS, so a quantized tile needs
+exactly one scale/zero row).  Scalars ride in a single small ANY-space
+vector, indexed inside the body.
 """
 from __future__ import annotations
 
@@ -43,116 +67,143 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _precond_tile(q_ref, u_ref, g_ref, s_ref):
-    """Shared pass-1 tile math -> (u_hat_tile, v_tile)."""
-    q = q_ref[...].astype(jnp.float32)          # (bm, r)
-    u = u_ref[...].astype(jnp.float32)          # (bn, r)
-    g = g_ref[...].astype(jnp.float32)          # (bm, bn)
-    b2 = s_ref[0]
-    eps = s_ref[1]
-    low = jax.lax.dot_general(q, u, (((1,), (1,)), ((), ())),
-                              preferred_element_type=jnp.float32)
-    v = b2 * jnp.maximum(low, 0.0) + (1.0 - b2) * g * g
-    return g / (jnp.sqrt(v) + eps), v
+def _deq_tile(q8_ref, scale_ref, zero_ref, base_row: jnp.ndarray,
+              true_rows: int):
+    """In-register dequant of one factor tile: the EXACT
+    core/quantized.dequantize formula, plus a static row mask so rows past
+    the matrix's true extent read as 0 (keeping padded-tile partials and
+    padded output rows exactly zero, as on the f32 path)."""
+    vals = ((q8_ref[...].astype(jnp.float32) + 127.0) * scale_ref[...]
+            + zero_ref[...])
+    rows = base_row + jax.lax.broadcasted_iota(jnp.int32, vals.shape, 0)
+    return jnp.where(rows < true_rows, vals, 0.0)
 
 
-def _precond_kernel(q_ref, u_ref, g_ref, s_ref,
-                    out_ref, vfro_ref, usq_ref):
-    out, v = _precond_tile(q_ref, u_ref, g_ref, s_ref)
-    out_ref[...] = out
-    vfro_ref[0, 0] = jnp.sum(v * v)
-    usq_ref[0, 0] = jnp.sum(out * out)
+def _make_precond_kernel(guided: bool, with_fold: bool, quantized: bool,
+                         m_true: int, n_true: int, bm: int, bn: int):
+    """Build the pass-1 kernel body for one (guided, fold, quantized)
+    variant — one code path instead of eight hand-written bodies."""
+
+    def kernel(*refs):
+        it = iter(refs)
+        if quantized:
+            q = _deq_tile(next(it), next(it), next(it),
+                          pl.program_id(0) * bm, m_true)
+            u = _deq_tile(next(it), next(it), next(it),
+                          pl.program_id(1) * bn, n_true)
+        else:
+            q = next(it)[...].astype(jnp.float32)      # (bm, r)
+            u = next(it)[...].astype(jnp.float32)      # (bn, r)
+        g = next(it)[...].astype(jnp.float32)          # (bm, bn)
+        m1 = next(it)[...].astype(jnp.float32) if guided else None
+        s_ref = next(it)
+        out_ref, vfro_ref, usq_ref = next(it), next(it), next(it)
+        m1dot_ref, m1sq_ref = (next(it), next(it)) if guided else (None,
+                                                                   None)
+        fold_ref = next(it) if with_fold else None
+
+        b2 = s_ref[0]
+        eps = s_ref[1]
+        low = jax.lax.dot_general(q, u, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        v = b2 * jnp.maximum(low, 0.0) + (1.0 - b2) * g * g
+        out = g / (jnp.sqrt(v) + eps)
+        out_ref[...] = out
+        vfro_ref[0, 0] = jnp.sum(v * v)
+        usq_ref[0, 0] = jnp.sum(out * out)
+        if guided:
+            m1dot_ref[0, 0] = jnp.sum(m1 * out)
+            m1sq_ref[0, 0] = jnp.sum(m1 * m1)
+        if with_fold:
+            # (G_tile^2)^T Q_tile: contract the bm rows already resident
+            # for u_hat — the fold projection rides the update loop.
+            fold_ref[0, :, :] = jax.lax.dot_general(
+                g * g, q, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+
+    return kernel
 
 
-def _precond_guided_kernel(q_ref, u_ref, g_ref, m1_ref, s_ref,
-                           out_ref, vfro_ref, usq_ref, m1dot_ref, m1sq_ref):
-    out, v = _precond_tile(q_ref, u_ref, g_ref, s_ref)
-    m1 = m1_ref[...].astype(jnp.float32)
-    out_ref[...] = out
-    vfro_ref[0, 0] = jnp.sum(v * v)
-    usq_ref[0, 0] = jnp.sum(out * out)
-    m1dot_ref[0, 0] = jnp.sum(m1 * out)
-    m1sq_ref[0, 0] = jnp.sum(m1 * m1)
-
-
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
-def fused_precond_pallas(q: jnp.ndarray, u: jnp.ndarray, g: jnp.ndarray,
-                         b2: jnp.ndarray, eps: jnp.ndarray,
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "with_fold",
+                                             "m_true", "n_true",
+                                             "interpret"))
+def fused_precond_pallas(q, u, g: jnp.ndarray, m1, b2, eps,
                          bm: int = 256, bn: int = 256,
+                         with_fold: bool = False,
+                         m_true: int | None = None,
+                         n_true: int | None = None,
                          interpret: bool = False):
-    """q: (m, r) f32, u: (n, r) f32, g: (m, n).  m % bm == 0, n % bn == 0,
-    r % 128 == 0 (ops.py pads; zero padding leaves every reduction
-    untouched).  Returns (u_hat (m, n) f32, vfro (), usq ()) with the
-    per-tile partial grids already summed."""
-    m, r = q.shape
-    n = u.shape[0]
+    """Pass 1 for every variant.  q: (m, r) f32 OR an int8
+    ``(q8 (m, r), scale (gm, r), zero (gm, r))`` triple; u likewise over
+    (n, r) / gn; g: (m, n); m1: (m, n) f32 or None (guidance off).
+    m % bm == 0, n % bn == 0, r % 128 == 0 (ops.py pads; zero padding —
+    plus the in-kernel row mask on the quantized path — leaves every
+    reduction untouched).  ``m_true`` / ``n_true``: the unpadded extents,
+    required when quantized.  Returns
+    ``(u_hat (m, n) f32, vfro (), usq (), m1dot, m1sq, yfold)`` with the
+    per-tile partial grids already summed; m1dot/m1sq are None without
+    m1, yfold ((n, r) f32 = (G^2)^T Q) is None unless ``with_fold``.
+    """
+    quantized = isinstance(q, tuple)
+    guided = m1 is not None
+    m, r = (q[0] if quantized else q).shape
+    n = (u[0] if quantized else u).shape[0]
     gm, gn = m // bm, n // bn
     scalars = jnp.stack([jnp.asarray(b2, jnp.float32),
                          jnp.asarray(eps, jnp.float32)])
-    tile = jax.ShapeDtypeStruct((gm, gn), jnp.float32)
-    out, vfro, usq = pl.pallas_call(
-        _precond_kernel,
-        grid=(gm, gn),
-        in_specs=[
+
+    inputs, in_specs = [], []
+    if quantized:
+        inputs += [q[0], q[1], q[2], u[0], u[1], u[2]]
+        in_specs += [
+            pl.BlockSpec((bm, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, r), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, r), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, r), lambda i, j: (j, 0)),
+        ]
+    else:
+        inputs += [q, u]
+        in_specs += [
             pl.BlockSpec((bm, r), lambda i, j: (i, 0)),
             pl.BlockSpec((bn, r), lambda i, j: (j, 0)),
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec(memory_space=pl.ANY),       # scalars (2,)
-        ],
-        out_specs=[
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
-            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((m, n), jnp.float32),
-            tile, tile,
-        ],
-        interpret=interpret,
-    )(q, u, g, scalars)
-    return out, jnp.sum(vfro), jnp.sum(usq)
+        ]
+    inputs.append(g)
+    in_specs.append(pl.BlockSpec((bm, bn), lambda i, j: (i, j)))
+    if guided:
+        inputs.append(m1)
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j: (i, j)))
+    inputs.append(scalars)
+    in_specs.append(pl.BlockSpec(memory_space=pl.ANY))
 
-
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
-def fused_precond_guided_pallas(q: jnp.ndarray, u: jnp.ndarray,
-                                g: jnp.ndarray, m1: jnp.ndarray,
-                                b2: jnp.ndarray, eps: jnp.ndarray,
-                                bm: int = 256, bn: int = 256,
-                                interpret: bool = False):
-    """Guidance variant of :func:`fused_precond_pallas`: also streams the
-    stored first moment through the tile and emits dot(m1, u_hat) and
-    sum(m1^2) partials.  Returns (u_hat, vfro, usq, m1dot, m1sq)."""
-    m, r = q.shape
-    n = u.shape[0]
-    gm, gn = m // bm, n // bn
-    scalars = jnp.stack([jnp.asarray(b2, jnp.float32),
-                         jnp.asarray(eps, jnp.float32)])
     tile = jax.ShapeDtypeStruct((gm, gn), jnp.float32)
-    out, vfro, usq, m1dot, m1sq = pl.pallas_call(
-        _precond_guided_kernel,
-        grid=(gm, gn),
-        in_specs=[
-            pl.BlockSpec((bm, r), lambda i, j: (i, 0)),
-            pl.BlockSpec((bn, r), lambda i, j: (j, 0)),
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec(memory_space=pl.ANY),       # scalars (2,)
-        ],
-        out_specs=[
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
-            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
-            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
-            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((m, n), jnp.float32),
-            tile, tile, tile, tile,
-        ],
-        interpret=interpret,
-    )(q, u, g, m1, scalars)
-    return (out, jnp.sum(vfro), jnp.sum(usq),
-            jnp.sum(m1dot), jnp.sum(m1sq))
+    tile_spec = pl.BlockSpec((1, 1), lambda i, j: (i, j))
+    out_specs = [pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+                 tile_spec, tile_spec]
+    out_shape = [jax.ShapeDtypeStruct((m, n), jnp.float32), tile, tile]
+    if guided:
+        out_specs += [tile_spec, tile_spec]
+        out_shape += [tile, tile]
+    if with_fold:
+        out_specs.append(pl.BlockSpec((1, bn, r), lambda i, j: (i, j, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((gm, n, r), jnp.float32))
+
+    kernel = _make_precond_kernel(guided, with_fold, quantized,
+                                  m_true if m_true is not None else m,
+                                  n_true if n_true is not None else n,
+                                  bm, bn)
+    res = pl.pallas_call(kernel, grid=(gm, gn), in_specs=in_specs,
+                         out_specs=out_specs, out_shape=out_shape,
+                         interpret=interpret)(*inputs)
+    res = list(res)
+    out = res.pop(0)
+    vfro = jnp.sum(res.pop(0))
+    usq = jnp.sum(res.pop(0))
+    m1dot = jnp.sum(res.pop(0)) if guided else None
+    m1sq = jnp.sum(res.pop(0)) if guided else None
+    yfold = jnp.sum(res.pop(0), axis=0) if with_fold else None
+    return out, vfro, usq, m1dot, m1sq, yfold
 
 
 def _apply_kernel(u_ref, m1_ref, s_ref, out_ref, m1_new_ref):

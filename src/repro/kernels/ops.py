@@ -16,7 +16,6 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.fused_update import (fused_apply_pallas,
                                         fused_apply_shared_pallas,
-                                        fused_precond_guided_pallas,
                                         fused_precond_pallas)
 from repro.kernels.lowrank_update import lowrank_update_pallas
 from repro.kernels.sketch_update import sketch_update_pallas
@@ -30,11 +29,48 @@ if _MODE not in ("auto", "pallas", "ref"):
     raise ValueError(
         f"REPRO_KERNEL_MODE={_MODE!r} (expected auto|pallas|ref)")
 
+# Mixed-shape bucketing (pallas dispatch only; the ref path never pads, so
+# the default chain's arithmetic is untouched): raw dims are rounded up a
+# coarse ladder before the block size is chosen, so a many-leaf stack of
+# near-miss shapes compiles to a handful of kernel instances instead of
+# one per (shape, r_store) signature.  Zero padding + the kernels' exact
+# partial reductions make the rounding bit-neutral (tests/test_kernels.py
+# pins bucketed == unbucketed bitwise).  REPRO_KERNEL_BUCKETS=off or
+# set_bucketing(False) restores exact-shape dispatch.
+_BUCKETED = os.environ.get("REPRO_KERNEL_BUCKETS", "on").lower() \
+    not in ("0", "off", "false")
+
 
 def set_mode(mode: str) -> None:
     global _MODE
     assert mode in ("auto", "pallas", "ref")
     _MODE = mode
+
+
+def set_bucketing(on: bool) -> None:
+    global _BUCKETED
+    _BUCKETED = bool(on)
+
+
+# Trace-time census of pallas dispatch signatures: every kernel launch
+# records (kernel, padded operand shapes, block plan).  Distinct keys are
+# exactly the jit cache keys of the underlying pallas wrappers, i.e. the
+# number of kernel instances XLA compiles — tests assert a ragged
+# many-leaf stack stays at a handful of instances under bucketing.
+_INSTANCES: dict = {}
+
+
+def _note_instance(kernel: str, shapes: tuple, blocks: tuple) -> None:
+    key = (kernel, shapes, blocks)
+    _INSTANCES[key] = _INSTANCES.get(key, 0) + 1
+
+
+def kernel_instances() -> dict:
+    return dict(_INSTANCES)
+
+
+def reset_kernel_instances() -> None:
+    _INSTANCES.clear()
 
 
 def resolved_mode() -> str:
@@ -73,6 +109,32 @@ def _pick_block(dim: int, target: int = 256, align: int = 8) -> int:
     return max(align, ((dim + align - 1) // align) * align)
 
 
+def _bucket_dim(dim: int) -> int:
+    """Round a raw dim up the bucket ladder: fine steps where leaves are
+    small and shapes diverse, coarse where padding waste is relatively
+    cheap.  dims > 256 already land on 256-multiples via _pad_to(block),
+    so the ladder's work is consolidating the sub-256 long tail."""
+    mult = 64 if dim <= 512 else (256 if dim <= 2048 else 512)
+    return ((dim + mult - 1) // mult) * mult
+
+
+def _tile_plan(dim: int, target: int = 256, align: int = 8) -> int:
+    """Block size for one axis of a pallas dispatch.  With bucketing on
+    (default) the dim is first rounded up the bucket ladder, so the
+    subsequent ``_pad_to(x, block)`` lands mixed raw shapes on a small
+    set of padded signatures — e.g. 100 -> 128, 130 -> 192, 320 -> 512 —
+    instead of one 8-aligned signature per raw dim."""
+    d = _bucket_dim(dim) if _BUCKETED else dim
+    return _pick_block(d, target, align)
+
+
+def _q_block_rows() -> int:
+    """core/quantized.py's codec block height (lazy import: the codec is
+    only needed on the int8 path and core imports this module)."""
+    from repro.core.quantized import BLOCK_ROWS
+    return BLOCK_ROWS
+
+
 def lowrank_update(q: jnp.ndarray, u: jnp.ndarray, g: jnp.ndarray,
                    b2: float, eps: float,
                    with_frob: bool = False):
@@ -87,11 +149,13 @@ def lowrank_update(q: jnp.ndarray, u: jnp.ndarray, g: jnp.ndarray,
             out, fro = ref.lowrank_update(q2, u2, g2, b2, eps)
             return out, fro
         m, n = g2.shape
-        bm, bn = _pick_block(m), _pick_block(n)
+        bm, bn = _tile_plan(m), _tile_plan(n)
         # r padded to a lane multiple so the MXU tile is aligned.
         qp = _pad_to(_pad_to(q2.astype(jnp.float32), bm, 0), 128, 1)
         up = _pad_to(_pad_to(u2.astype(jnp.float32), bn, 0), 128, 1)
         gp = _pad_to(_pad_to(g2, bm, 0), bn, 1)
+        _note_instance("lowrank_update", (qp.shape, up.shape, gp.shape),
+                       (bm, bn))
         out, fro = lowrank_update_pallas(qp, up, gp,
                                          jnp.asarray(b2), jnp.asarray(eps),
                                          bm=bm, bn=bn, interpret=interp)
@@ -104,66 +168,86 @@ def lowrank_update(q: jnp.ndarray, u: jnp.ndarray, g: jnp.ndarray,
     return (out, fro) if with_frob else out
 
 
-def fused_precond(q: jnp.ndarray, u: jnp.ndarray, g: jnp.ndarray,
+def fused_precond(q, u, g: jnp.ndarray,
                   b2: float, eps: float,
                   m1: jnp.ndarray | None = None,
-                  with_vfro: bool = True):
+                  with_vfro: bool = True,
+                  with_fold: bool = False):
     """Pass 1 of the fused two-pass update pipeline (see ref.fused_precond):
     raw update direction + whole-matrix reductions in one read of G, with V
     reconstructed tile-wise and never stored.  Pass ``m1`` to additionally
     get the guidance partials streamed in the same pass.
 
+    ``q`` / ``u`` are (…, m|n, r) f32 arrays OR ``QuantizedMatrix`` triples
+    (core/quantized.py): on the kernel path the int8 payload is dequantized
+    per tile in VMEM (block height == the forced bm = bn = BLOCK_ROWS) so
+    the factors never materialize in fp32 HBM; on the ref path they are
+    dequantized up front with the exact same formula, so both backends see
+    bit-identical factor values.
+
+    ``with_fold=True`` additionally returns the amortized-refresh fold
+    projection ``yfold = (G^2)^T Q`` (…, n, r), emitted from the same tile
+    loop that reads G for u_hat (per-row-block partials, host-summed like
+    vfro/usq) — on fold steps this kills the standalone ``sq_matmul_t``
+    pass over G.
+
     Accepts arbitrary leading batch dims on (q, u, g, m1) jointly.
-    Returns (u_hat, vfro, usq, m1dot, m1sq); the last two are None when
-    ``m1`` is None.  ``with_vfro=False`` returns None for vfro on the ref
-    path (the reduction is skipped — fold steps never consume it); the
-    Pallas kernels always emit the per-tile partial since it rides the
-    update loop for free, and the wrapper simply drops it.
+    Returns (u_hat, vfro, usq, m1dot, m1sq, yfold); m1dot/m1sq are None
+    when ``m1`` is None, yfold is None unless ``with_fold``.
+    ``with_vfro=False`` returns None for vfro on the ref path (the
+    reduction is skipped — fold steps never consume it); the Pallas
+    kernels always emit the per-tile partial since it rides the update
+    loop for free, and the wrapper simply drops it.
     """
     use, interp = _use_pallas()
-
-    def pads(q2, u2, g2, bm, bn):
-        qp = _pad_to(_pad_to(q2.astype(jnp.float32), bm, 0), 128, 1)
-        up = _pad_to(_pad_to(u2.astype(jnp.float32), bn, 0), 128, 1)
-        gp = _pad_to(_pad_to(g2, bm, 0), bn, 1)
-        return qp, up, gp
-
-    if m1 is None:
-        def one(q2, u2, g2):
-            if not use:
-                out, vfro, usq, _, _ = ref.fused_precond(
-                    q2, u2, g2, b2, eps, with_vfro=with_vfro)
-                return out, vfro, usq
-            m_, n_ = g2.shape
-            bm, bn = _pick_block(m_), _pick_block(n_)
-            qp, up, gp = pads(q2, u2, g2, bm, bn)
-            out, vfro, usq = fused_precond_pallas(
-                qp, up, gp, jnp.asarray(b2), jnp.asarray(eps),
-                bm=bm, bn=bn, interpret=interp)
-            # the kernel always emits the per-tile partial (it rides the
-            # update loop for free); drop it here so the return contract
-            # matches the ref path backend-independently
-            return out[:m_, :n_], vfro if with_vfro else None, usq
-
-        fn = one
-        for _ in range(g.ndim - 2):
-            fn = jax.vmap(fn)
-        out, vfro, usq = fn(q, u, g)
-        return out, vfro, usq, None, None
+    quantized = hasattr(q, "q8")
 
     def one(q2, u2, g2, m12):
         if not use:
-            return ref.fused_precond(q2, u2, g2, b2, eps, m1=m12,
-                                     with_vfro=with_vfro)
+            if quantized:
+                from repro.core.quantized import dequantize
+                q2f, u2f = dequantize(q2), dequantize(u2)
+            else:
+                q2f, u2f = q2, u2
+            out, vfro, usq, m1dot, m1sq, y = ref.fused_precond(
+                q2f, u2f, g2, b2, eps, m1=m12, with_vfro=with_vfro,
+                with_fold=with_fold)
+            return out, vfro, usq, m1dot, m1sq, y
         m_, n_ = g2.shape
-        bm, bn = _pick_block(m_), _pick_block(n_)
-        qp, up, gp = pads(q2, u2, g2, bm, bn)
-        mp = _pad_to(_pad_to(m12.astype(jnp.float32), bm, 0), bn, 1)
-        out, vfro, usq, m1dot, m1sq = fused_precond_guided_pallas(
+        if quantized:
+            # the codec's block height IS the tile plan: one (scale, zero)
+            # row per (bm, r) tile of int8 payload, so dequant fuses into
+            # the tile load.  scale/zero row counts already equal the
+            # padded grid (quantize pads ragged blocks internally).
+            bm = bn = _q_block_rows()
+            r_t = q2.q8.shape[-1]
+            qp = (_pad_to(_pad_to(q2.q8, bm, 0), 128, 1),
+                  _pad_to(q2.scale, 128, 1), _pad_to(q2.zero, 128, 1))
+            up = (_pad_to(_pad_to(u2.q8, bn, 0), 128, 1),
+                  _pad_to(u2.scale, 128, 1), _pad_to(u2.zero, 128, 1))
+            mt, nt = m_, n_
+            shapes = (qp[0].shape, up[0].shape)
+        else:
+            bm, bn = _tile_plan(m_), _tile_plan(n_)
+            r_t = q2.shape[-1]
+            qp = _pad_to(_pad_to(q2.astype(jnp.float32), bm, 0), 128, 1)
+            up = _pad_to(_pad_to(u2.astype(jnp.float32), bn, 0), 128, 1)
+            mt = nt = None
+            shapes = (qp.shape, up.shape)
+        gp = _pad_to(_pad_to(g2, bm, 0), bn, 1)
+        mp = (None if m12 is None
+              else _pad_to(_pad_to(m12.astype(jnp.float32), bm, 0), bn, 1))
+        _note_instance("fused_precond", shapes + (gp.shape,),
+                       (bm, bn, m12 is not None, with_fold, quantized))
+        out, vfro, usq, m1dot, m1sq, y = fused_precond_pallas(
             qp, up, gp, mp, jnp.asarray(b2), jnp.asarray(eps),
-            bm=bm, bn=bn, interpret=interp)
+            bm=bm, bn=bn, with_fold=with_fold, m_true=mt, n_true=nt,
+            interpret=interp)
+        # the kernel always emits the vfro per-tile partial (it rides the
+        # update loop for free); drop it here so the return contract
+        # matches the ref path backend-independently
         return (out[:m_, :n_], vfro if with_vfro else None, usq,
-                m1dot, m1sq)
+                m1dot, m1sq, None if y is None else y[:n_, :r_t])
 
     fn = one
     for _ in range(g.ndim - 2):
@@ -201,9 +285,10 @@ def fused_apply(u_hat: jnp.ndarray, m1: jnp.ndarray | None,
             out, m1n = ref.fused_apply(u2, m12, d, b1, os_, ss)
             return (m1n, m1n) if shared_out else (out, m1n)
         m_, n_ = u2.shape
-        bm, bn = _pick_block(m_), _pick_block(n_)
+        bm, bn = _tile_plan(m_), _tile_plan(n_)
         up = _pad_to(_pad_to(u2.astype(jnp.float32), bm, 0), bn, 1)
         mp = _pad_to(_pad_to(m12.astype(jnp.float32), bm, 0), bn, 1)
+        _note_instance("fused_apply", (up.shape,), (bm, bn, shared_out))
         scalars = jnp.stack([d.astype(jnp.float32),
                              jnp.asarray(b1, jnp.float32),
                              jnp.asarray(1.0 - b1, jnp.float32),
@@ -234,9 +319,10 @@ def sq_matmul(g: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
             return ref.sq_matmul(g2, x2)
         m, n = g2.shape
         s = x2.shape[1]
-        bm, bn = _pick_block(m), _pick_block(n)
+        bm, bn = _tile_plan(m), _tile_plan(n)
         gp = _pad_to(_pad_to(g2, bm, 0), bn, 1)
         xp = _pad_to(_pad_to(x2.astype(jnp.float32), bn, 0), 128, 1)
+        _note_instance("sq_matmul", (gp.shape, xp.shape), (bm, bn))
         y = sq_matmul_pallas(gp, xp, bm=bm, bn=bn, interpret=interp)
         return y[:m, :s]
 
@@ -247,9 +333,13 @@ def sq_matmul(g: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
 
 
 def sq_matmul_t(g: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
-    """(G*G)^T @ Y — implemented as sq_matmul on the transpose (the Pallas
-    grid then streams G^T tiles; layout cost is folded into the same
-    kernel)."""
+    """(G*G)^T @ Y — implemented as sq_matmul on the transpose.  NB: XLA
+    materialises G^T in HBM before the custom call (a transpose copy is
+    NOT folded into the kernel's tile streaming), so a standalone call
+    costs ~3mn words of traffic on top of the matmul's reads — the reason
+    fold steps route through ``fused_precond(..., with_fold=True)``, which
+    emits the same product from pass 1's already-resident G tiles.  The
+    roofline model (benchmarks/roofline.py) charges this stage honestly."""
     def one(g2, y2):
         return sq_matmul(g2.T, y2)
 

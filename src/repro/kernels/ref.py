@@ -30,7 +30,7 @@ def lowrank_update(q: jnp.ndarray, u: jnp.ndarray, g: jnp.ndarray,
 
 def fused_precond(q: jnp.ndarray, u: jnp.ndarray, g: jnp.ndarray,
                   b2: float, eps: float, m1: jnp.ndarray | None = None,
-                  with_vfro: bool = True):
+                  with_vfro: bool = True, with_fold: bool = False):
     """Pass 1 of the fused two-pass update pipeline.
 
     Reconstructs V tile-wise (never stored), emits the raw update direction
@@ -45,13 +45,19 @@ def fused_precond(q: jnp.ndarray, u: jnp.ndarray, g: jnp.ndarray,
         usq   = sum(u_hat^2)                     (RMS clip)
         m1dot = sum(m1 * u_hat)   [m1 given]     (cosine guidance)
         m1sq  = sum(m1^2)         [m1 given]     (cosine guidance)
+        yfold = (G^2)^T @ Q       [with_fold]    (amortized-refresh fold)
 
     q: (m, r) f32, u: (n, r) f32, g: (m, n), m1: (m, n) f32 | None.
-    Returns (u_hat, vfro, usq, m1dot, m1sq); the last two are None when
-    ``m1`` is None (guidance off or b1 = 0).  ``with_vfro=False`` skips the
-    ||V||_F^2 reduction and returns None for it — the optimizer's fold
-    steps never consume it, and skipping saves a full pass over V's values
-    on backends where the reduction doesn't ride the update loop.
+    Returns (u_hat, vfro, usq, m1dot, m1sq, yfold); m1dot/m1sq are None
+    when ``m1`` is None (guidance off or b1 = 0).  ``with_vfro=False``
+    skips the ||V||_F^2 reduction and returns None for it — the
+    optimizer's fold steps never consume it, and skipping saves a full
+    pass over V's values on backends where the reduction doesn't ride the
+    update loop.  ``with_fold=True`` additionally emits the fold
+    projection ``(G^2)^T Q`` (n, r) — on the kernel path it rides pass 1's
+    read of G, killing the standalone sq_matmul_t pass on fold steps; here
+    it is the same ``sq_matmul_t`` expression the unfused fold uses, so
+    consuming it keeps the fused == unfused bitwise contract.
     """
     g32 = g.astype(jnp.float32)
     # (1 - b2) must be computed in f32 (not python f64 then rounded) to stay
@@ -63,10 +69,12 @@ def fused_precond(q: jnp.ndarray, u: jnp.ndarray, g: jnp.ndarray,
     out = g32 / (jnp.sqrt(v) + eps)
     vfro = jnp.sum(v * v) if with_vfro else None
     usq = jnp.sum(jnp.square(out))
+    yfold = sq_matmul_t(g32, q.astype(jnp.float32)) if with_fold else None
     if m1 is None:
-        return out, vfro, usq, None, None
+        return out, vfro, usq, None, None, yfold
     m1f = m1.astype(jnp.float32)
-    return out, vfro, usq, jnp.sum(m1f * out), jnp.sum(jnp.square(m1f))
+    return (out, vfro, usq, jnp.sum(m1f * out), jnp.sum(jnp.square(m1f)),
+            yfold)
 
 
 def fused_apply(u_hat: jnp.ndarray, m1: jnp.ndarray | None,

@@ -64,6 +64,7 @@ log = logging.getLogger(__name__)
 def optimizer_config(name: str, steps: int, lr: float,
                      refresh_every: int = 1, warm_start: bool = False,
                      bucketed: bool = False, fused_update: bool = False,
+                     quantize_factors: bool = False,
                      mixed_groups: bool = False, telemetry: bool = False,
                      dynamic_refresh: bool = False,
                      sketch_width: int = 2048, sketch_depth: int = 4,
@@ -90,6 +91,7 @@ def optimizer_config(name: str, steps: int, lr: float,
                                refresh_every=refresh_every,
                                warm_start=warm_start, bucketed=bucketed,
                                fused_update=fused_update,
+                               quantize_factors=quantize_factors,
                                telemetry=telemetry,
                                dynamic_refresh=dynamic_refresh,
                                guards=guards, guard_xi_trip=guard_xi_trip,
@@ -142,6 +144,11 @@ def main(argv=None):
     ap.add_argument("--fused-update", action="store_true",
                     help="adapprox: two-pass fused elementwise tail "
                          "(kernels/fused_update.py on TPU)")
+    ap.add_argument("--quantize-factors", action="store_true",
+                    help="adapprox: store the (Q, U) factors as int8 with "
+                         "per-block scale/zero (core/quantized.py, ~4x "
+                         "smaller factor state); with --fused-update the "
+                         "dequant fuses into the pass-1 tile loads")
     ap.add_argument("--mesh", default=None,
                     help="device mesh sizes, e.g. '4,2' = (data=4, model=2);"
                          " omit for the single-device path")
@@ -206,6 +213,7 @@ def main(argv=None):
         args.optimizer, args.steps, args.lr,
         refresh_every=args.refresh_every, warm_start=args.warm_start,
         bucketed=args.bucketed, fused_update=args.fused_update,
+        quantize_factors=args.quantize_factors,
         mixed_groups=mixed, telemetry=telemetry_on,
         dynamic_refresh=args.auto_refresh,
         sketch_width=args.sketch_width, sketch_depth=args.sketch_depth,

@@ -196,3 +196,60 @@ def test_fused_pallas_interpret_matches_ref_mode():
     for k in PARAMS:
         np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
                                    rtol=1e-5, atol=1e-7)
+
+
+@pytest.mark.parametrize("refresh_every", [1, 3])
+@pytest.mark.parametrize("bucketed", [False, True])
+def test_int8_fused_bitwise_vs_unfused(refresh_every, bucketed):
+    """Lazy int8 dequant (fused tile loads) vs the eager path (unfused:
+    dequantize up front, compute in f32, requantize): same codec, same
+    arithmetic, so params and the re-quantized factor state must match
+    BITWISE across refresh and fold steps, bucketed or not."""
+    kw = dict(factor_dtype="int8", refresh_every=refresh_every,
+              warm_start=refresh_every > 1)
+    p_ref, st_ref = _run(_cfg(**kw))
+    p_fused, st_fused = _run(_cfg(fused_update=True, bucketed=bucketed,
+                                  **kw))
+    _assert_tree_bitwise(p_ref, p_fused)
+    _assert_tree_bitwise(st_ref, st_fused)
+
+
+def test_int8_fused_pallas_interpret_matches_ref_mode():
+    """int8 + fused under forced-pallas runs the in-kernel dequant codec
+    (_deq_tile) and the fold-fused pass 1 for real (interpret mode);
+    must agree with the ref dispatch, which dequantizes on the host."""
+    from repro.kernels import ops
+
+    def run(mode):
+        ops.set_mode(mode)
+        try:
+            return _run(_cfg(factor_dtype="int8", fused_update=True,
+                             refresh_every=3, warm_start=True),
+                        steps=4)[0]
+        finally:
+            ops.set_mode("auto")
+
+    a, b = run("ref"), run("pallas")
+    for k in PARAMS:
+        np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_fold_fused_and_dequant_traffic_floors():
+    """The two new roofline ratios, pinned by test rather than prose:
+    fold-fused pass 1 cuts fold-step bytes >= FOLD_FUSED_FLOOR vs the
+    PR-4 fused pipeline whose fold matmul reads G twice more, and int8
+    factor reads come in at >= DEQUANT_FLOOR fewer bytes than f32 (4x
+    payload minus the per-block scale/zero sidecar)."""
+    from benchmarks.roofline import (DEQUANT_FLOOR, FOLD_FUSED_FLOOR,
+                                     QUICK_SHAPES, factor_read_bytes,
+                                     optimizer_fold_step_traffic)
+    for m, n, r in QUICK_SHAPES:
+        base = optimizer_fold_step_traffic(m, n, r, fused=True,
+                                           fold_fused=False)["total"]
+        fold = optimizer_fold_step_traffic(m, n, r, fused=True,
+                                           fold_fused=True)["total"]
+        assert base / fold >= FOLD_FUSED_FLOOR, (m, n, r, base / fold)
+        f32 = factor_read_bytes(m, n, r, "float32")
+        i8 = factor_read_bytes(m, n, r, "int8")
+        assert f32 / i8 >= DEQUANT_FLOOR, (m, n, r, f32 / i8)

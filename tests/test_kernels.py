@@ -90,8 +90,8 @@ def test_update_zero_grad_is_zero():
 @pytest.mark.parametrize("dtype", DTYPES)
 def test_fused_precond_matches_ref(m, n, r, dtype):
     q, u, g = _mk(m, n, r, dtype)
-    out_k, vfro_k, usq_k, _, _ = ops.fused_precond(q, u, g, 0.999, 1e-8)
-    out_r, vfro_r, usq_r, _, _ = ref.fused_precond(q, u, g, 0.999, 1e-8)
+    out_k, vfro_k, usq_k, _, _, _ = ops.fused_precond(q, u, g, 0.999, 1e-8)
+    out_r, vfro_r, usq_r, _, _, _ = ref.fused_precond(q, u, g, 0.999, 1e-8)
     np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
                                rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(float(vfro_k), float(vfro_r), rtol=1e-3)
@@ -107,7 +107,7 @@ def test_fused_precond_guided_matches_ref(m, n, r, dtype):
     want = ref.fused_precond(q, u, g, 0.999, 1e-8, m1=m1)
     np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
                                rtol=2e-4, atol=2e-4)
-    for k, w in zip(got[1:], want[1:]):          # vfro, usq, m1dot, m1sq
+    for k, w in zip(got[1:5], want[1:5]):        # vfro, usq, m1dot, m1sq
         np.testing.assert_allclose(float(k), float(w), rtol=1e-3)
 
 
@@ -116,10 +116,11 @@ def test_fused_precond_batched(m, n, r):
     qs = jnp.stack([_mk(m, n, r, jnp.float32, s)[0] for s in range(3)])
     us = jnp.stack([_mk(m, n, r, jnp.float32, s)[1] for s in range(3)])
     gs = jnp.stack([_mk(m, n, r, jnp.float32, s)[2] for s in range(3)])
-    out, vfro, usq, _, _ = ops.fused_precond(qs, us, gs, 0.99, 1e-8)
+    out, vfro, usq, _, _, _ = ops.fused_precond(qs, us, gs, 0.99, 1e-8)
     assert out.shape == (3, m, n) and vfro.shape == (3,) and usq.shape == (3,)
     for i in range(3):
-        eo, ev, eu, _, _ = ref.fused_precond(qs[i], us[i], gs[i], 0.99, 1e-8)
+        eo, ev, eu, _, _, _ = ref.fused_precond(qs[i], us[i], gs[i],
+                                                0.99, 1e-8)
         np.testing.assert_allclose(np.asarray(out[i]), np.asarray(eo),
                                    rtol=2e-4, atol=2e-4)
         np.testing.assert_allclose(float(usq[i]), float(eu), rtol=1e-3)
@@ -180,3 +181,97 @@ def test_kernel_path_in_optimizer_matches_ref_path():
         upd, _ = opt.update(g, st, params)
         outs[use] = np.asarray(upd["w"])
     np.testing.assert_allclose(outs[True], outs[False], rtol=2e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Ragged shapes: fold, fold-fused pass 1, quantized tile loads, bucketing
+# ---------------------------------------------------------------------------
+
+RAGGED = [(130, 258, 3), (97, 140, 4), (257, 129, 5)]
+
+
+@pytest.mark.parametrize("m,n,r", RAGGED + SHAPES[:2])
+def test_one_sided_fold_matches_ref(m, n, r):
+    q, u, g = _mk(m, n, r, jnp.float32, seed=m)
+    mask = (jnp.arange(r) < max(1, r - 1)).astype(jnp.float32)
+    got = ops.one_sided_fold(u, q, g, 0.999, col_mask=mask)
+    want = ref.one_sided_fold(u, q, g, 0.999, col_mask=mask)
+    assert got.shape == (n, r)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,n,r", RAGGED + SHAPES[:2])
+def test_fused_precond_with_fold_matches_ref(m, n, r):
+    """Fold-fused pass 1: the extra (G^2)^T Q output must match the ref
+    oracle on ragged shapes (row/col/r padding all in play at once)."""
+    q, u, g = _mk(m, n, r, jnp.float32, seed=n)
+    got = ops.fused_precond(q, u, g, 0.999, 1e-8, with_fold=True)
+    want = ref.fused_precond(q, u, g, 0.999, 1e-8, with_fold=True)
+    assert got[5].shape == (n, r)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(got[1]), float(want[1]), rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(got[5]), np.asarray(want[5]),
+                               rtol=2e-4,
+                               atol=1e-4 * float(jnp.abs(want[5]).max()))
+
+
+@pytest.mark.parametrize("m,n,r", [(256, 256, 8), (130, 258, 3),
+                                   (300, 180, 6)])
+def test_fused_precond_quantized_matches_dequantized_ref(m, n, r):
+    """int8-dequant tile loads: fused_precond on QuantizedMatrix factors
+    must match the ref oracle run on the host-dequantized factors — the
+    in-kernel codec and row masks are exact, not approximate."""
+    from repro.core import quantized as QZ
+    q, u, g = _mk(m, n, r, jnp.float32, seed=r)
+    qm, um = QZ.quantize(q), QZ.quantize(u)
+    got = ops.fused_precond(qm, um, g, 0.999, 1e-8, with_fold=True)
+    want = ref.fused_precond(QZ.dequantize(qm), QZ.dequantize(um), g,
+                             0.999, 1e-8, with_fold=True)
+    assert got[0].shape == (m, n) and got[5].shape == (n, r)
+    # rtol 1e-3 (vs 2e-4 on the f32 tests): where the reconstructed V is
+    # near zero, u_hat = g/(sqrt(V)+eps) amplifies matmul tile-order ULP
+    # noise; the codec itself is exact (bitwise test in test_fused.py)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(float(got[1]), float(want[1]), rtol=1e-3)
+    np.testing.assert_allclose(float(got[2]), float(want[2]), rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(got[5]), np.asarray(want[5]),
+                               rtol=2e-4,
+                               atol=1e-4 * float(jnp.abs(want[5]).max()))
+
+
+def test_bucketing_is_bit_neutral_and_collapses_instances():
+    """Mixed near-miss shapes: bucketing must not change a single bit of
+    the tensor outputs (zero padding is exact elementwise and append-only
+    in the dot reductions), and may move the scalar tile reductions only
+    at f32 roundoff (the in-tile sum tree reshapes with the block size),
+    while collapsing the dispatch census to one padded signature."""
+    shapes = [(100, 130, 3), (97, 140, 4)]
+    outs = {}
+    try:
+        for bucketed in (False, True):
+            ops.set_bucketing(bucketed)
+            ops.reset_kernel_instances()
+            res = []
+            for (m, n, r) in shapes:
+                q, u, g = _mk(m, n, r, jnp.float32, seed=m + n)
+                out, vfro, usq, _, _, yf = ops.fused_precond(
+                    q, u, g, 0.999, 1e-8, with_fold=True)
+                res.append((np.asarray(out), float(vfro), float(usq),
+                            np.asarray(yf)))
+            keys = {k for k in ops.kernel_instances()
+                    if k[0] == "fused_precond"}
+            outs[bucketed] = (res, keys)
+    finally:
+        ops.set_bucketing(True)
+        ops.reset_kernel_instances()
+    (res_u, keys_u), (res_b, keys_b) = outs[False], outs[True]
+    for (a, av, au, ay), (b, bv, bu, by) in zip(res_u, res_b):
+        np.testing.assert_array_equal(a, b)          # bitwise
+        np.testing.assert_array_equal(ay, by)        # bitwise
+        np.testing.assert_allclose(av, bv, rtol=1e-6)
+        np.testing.assert_allclose(au, bu, rtol=1e-6)
+    assert len(keys_b) == 1, keys_b    # 100/97 -> 128, 130/140 -> 192
+    assert len(keys_u) == 2, keys_u

@@ -359,3 +359,54 @@ def test_warm_start_trajectory_stays_close_to_cold():
     dev = float(jnp.sqrt(jnp.mean(jnp.square(p_cold["w"] - p_fast["w"]))))
     # trajectories deviate by well under the distance travelled
     assert dev < 0.35 * ref_step, (dev, ref_step)
+
+
+def test_int8_factor_checkpoint_roundtrip_mid_interval():
+    """Quantized factor state (QuantizedMatrix int8 payload + per-block
+    f32 scale/zero) round-trips through PartitionState -> host numpy ->
+    rebuilt state bit-for-bit, interrupted MID-refresh-interval so the
+    restored run must continue the frozen-Q fold cadence on exactly the
+    dequantized factors the uninterrupted run sees."""
+    params = {"w": jax.random.normal(jax.random.PRNGKey(13),
+                                     (160, 144)) * 0.02,
+              "b": jnp.zeros((144,))}
+    labeler = lambda ps: jax.tree.map(
+        lambda p: "factored" if p.ndim >= 2 else "dense", ps)
+    sub_f = make_optimizer("adapprox", lr=1e-3, weight_decay=0.0,
+                           k_init=6, mode="static", min_dim_factor=64,
+                           refresh_every=3, warm_start=True, n_iter_warm=1,
+                           fused_update=True, factor_dtype="int8")
+    sub_d = adamw(AdamWConfig(lr=1e-3))
+    opt = partition(labeler, {"factored": sub_f, "dense": sub_d})
+    gkey = jax.random.PRNGKey(14)
+    grads = lambda t, p: jax.tree.map(lambda x: jax.random.normal(
+        jax.random.fold_in(gkey, t * 17 + x.size), x.shape), p)
+    upd = jax.jit(opt.update)
+
+    state = opt.init(params)
+    p = params
+    for t in range(1, 6):
+        u, state = upd(grads(t, p), state, p)
+        p = apply_updates(p, u)
+
+    # interrupt after t=2 (a fold step: mid-interval, frozen Q) and
+    # round-trip every leaf -- including the int8 payloads -- through host
+    # numpy, exactly what the checkpoint layer serializes
+    state2 = opt.init(params)
+    p2 = params
+    for t in range(1, 3):
+        u, state2 = upd(grads(t, p2), state2, p2)
+        p2 = apply_updates(p2, u)
+    flat, treedef = jax.tree.flatten(state2)
+    assert any(x.dtype == jnp.int8 for x in flat), \
+        "expected int8 factor leaves in the checkpointed state"
+    restored = jax.tree.unflatten(
+        treedef, [jnp.asarray(np.asarray(x)) for x in flat])
+    for t in range(3, 6):
+        u, restored = upd(grads(t, p2), restored, p2)
+        p2 = apply_updates(p2, u)
+
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
