@@ -1,11 +1,17 @@
-"""Serving driver CLI: batched greedy generation with the wave engine.
+"""Serving driver CLI: batched greedy generation, wave or continuous.
 
+    # wave (lock-step) baseline
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
         --requests 6 --max-new 16
+
+    # continuous batching over the paged KV cache, with telemetry
+    PYTHONPATH=src python -m repro.launch.serve --arch gpt2-117m --smoke \
+        --continuous --block-size 16 --slots 4 --telemetry-dir /tmp/serve
 """
 from __future__ import annotations
 
 import argparse
+import statistics
 import time
 
 import jax
@@ -13,7 +19,8 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import build_model
-from repro.serve import Engine, Request, ServeConfig
+from repro.serve import (ContinuousConfig, ContinuousEngine, Engine,
+                         Request, ServeConfig)
 
 
 def main(argv=None):
@@ -24,25 +31,75 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching + paged KV cache (instead "
+                         "of the lock-step wave scheduler)")
+    ap.add_argument("--paged", action="store_true",
+                    help="alias for --continuous (the paged cache only "
+                         "exists under the continuous scheduler)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV block size (tokens) for the paged cache")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="KV pool size in blocks (default: full span "
+                         "for every slot)")
+    ap.add_argument("--prefill-chunk", type=int, default=64,
+                    help="max prompt tokens prefilled per engine step")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bound the admission queue (0 = unbounded); "
+                         "arrivals past it are load-shed")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop decoding a sequence at this token id")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="prompt RNG seed")
+    ap.add_argument("--telemetry-dir", default=None,
+                    help="stream kind=\"serve\" JSONL events here")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = Engine(model, params, ServeConfig(slots=args.slots,
-                                               cache_len=args.cache_len))
-    rng = np.random.default_rng(0)
+
+    sink = None
+    if args.telemetry_dir is not None:
+        from repro.telemetry import SinkConfig, TelemetrySink
+        sink = TelemetrySink(SinkConfig(directory=args.telemetry_dir))
+
+    continuous = args.continuous or args.paged
+    if continuous:
+        engine = ContinuousEngine(model, params, ContinuousConfig(
+            slots=args.slots, cache_len=args.cache_len,
+            block_size=args.block_size, num_blocks=args.num_blocks,
+            prefill_chunk=args.prefill_chunk, eos_id=args.eos_id,
+            max_queue=args.max_queue), sink=sink)
+    else:
+        engine = Engine(model, params, ServeConfig(
+            slots=args.slots, cache_len=args.cache_len,
+            eos_id=args.eos_id), sink=sink)
+
+    rng = np.random.default_rng(args.seed)
     reqs = [Request(uid=i,
-                    prompt=rng.integers(0, cfg.vocab, size=8).astype(np.int32),
+                    prompt=rng.integers(0, cfg.vocab,
+                                        size=args.prompt_len)
+                    .astype(np.int32),
                     max_new_tokens=args.max_new)
             for i in range(args.requests)]
     t0 = time.perf_counter()
     engine.run(reqs)
     dt = time.perf_counter() - t0
+    if sink is not None:
+        sink.flush()
+        sink.close()
     total_tokens = sum(len(r.out_tokens) for r in reqs)
-    print(f"{len(reqs)} requests in {engine.waves} waves, "
-          f"{total_tokens} tokens in {dt:.2f}s "
-          f"({total_tokens / dt:.1f} tok/s)")
+    ttfts = [r.first_token_s - r.arrival_s for r in reqs
+             if r.first_token_s is not None]
+    sched = (f"{engine.steps} steps" if continuous
+             else f"{engine.waves} waves")
+    print(f"{len(reqs)} requests ({'continuous' if continuous else 'wave'},"
+          f" {sched}), {total_tokens} tokens in {dt:.2f}s "
+          f"({total_tokens / dt:.1f} tok/s), "
+          f"mean ttft {statistics.mean(ttfts) * 1e3:.1f}ms"
+          if ttfts else f"{len(reqs)} requests, no tokens emitted")
     for r in reqs[:3]:
         print(f"  req {r.uid}: {r.out_tokens[:10]}")
 

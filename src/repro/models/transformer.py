@@ -257,3 +257,74 @@ class TransformerLM:
         x = L.apply_norm(cfg, params["final_norm"], x)
         logits = self._lm_head(params, x)
         return logits, {"kv": kv, "pos": pos + 1}
+
+    # -- paged serving (block-table KV cache; see serve/kv_cache.py) --------
+    def init_paged_cache(self, num_blocks: int, block_size: int) -> dict:
+        """Block pool shared by every slot: {"k","v"} of shape
+        (L, num_blocks, block_size, KV, dh).  Block tables / positions are
+        NOT part of the cache — the engine owns them host-side and passes
+        them per call, so the pool pytree alone is donated/recycled."""
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        hd = cfg.resolved_head_dim
+        shape = (cfg.n_layers, num_blocks, block_size, cfg.n_kv_heads, hd)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+    def prefill_paged(self, params, pool, tokens, block_table, p0, last_idx):
+        """One prompt chunk for ONE slot.  tokens: (1, C) at logical
+        positions p0..p0+C-1; block_table: (nbt,); last_idx: () int32
+        index (within the chunk) of the last REAL prompt token — returns
+        that position's logits (1, 1, V) so bucket-padded chunks still
+        yield the correct first generated token."""
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        c = tokens.shape[1]
+        x = params["embed"].astype(dt)[tokens]
+        if cfg.pos_embedding == "learned":
+            x = x + params["pos_embed"].astype(dt)[p0 + jnp.arange(c)][None]
+        x = self.constrain(x)
+
+        def body(x, xs):
+            bp, (pk, pv) = xs
+            h = L.apply_norm(cfg, bp["norm1"], x)
+            a_out, pk, pv = A.attn_prefill_paged(cfg, bp["attn"], h, pk, pv,
+                                                 block_table, p0)
+            x = self.constrain(x + a_out)
+            h = L.apply_norm(cfg, bp["norm2"], x)
+            y, _ = self._moe_or_mlp(bp, h)
+            return self.constrain(x + y), (pk, pv)
+
+        x, kv = jax.lax.scan(body, x, (params["blocks"],
+                                       (pool["k"], pool["v"])))
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        xlast = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
+        logits = self._lm_head(params, xlast)
+        return logits, {"k": kv[0], "v": kv[1]}
+
+    def decode_paged(self, params, pool, tokens, block_tables, positions):
+        """One autoregressive step for ALL slots with PER-ROW positions.
+        tokens: (B, 1); block_tables: (B, nbt); positions: (B,) — row i
+        writes its token's k/v at positions[i] and attends to
+        0..positions[i].  Idle rows point at the null block and are
+        masked out host-side by the engine."""
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        x = params["embed"].astype(dt)[tokens]
+        if cfg.pos_embedding == "learned":
+            x = x + params["pos_embed"].astype(dt)[positions][:, None, :]
+
+        def body(x, xs):
+            bp, (pk, pv) = xs
+            h = L.apply_norm(cfg, bp["norm1"], x)
+            a_out, pk, pv = A.attn_decode_paged(cfg, bp["attn"], h, pk, pv,
+                                                block_tables, positions)
+            x = self.constrain(x + a_out)
+            h = L.apply_norm(cfg, bp["norm2"], x)
+            y, _ = self._moe_or_mlp(bp, h)
+            return self.constrain(x + y), (pk, pv)
+
+        x, kv = jax.lax.scan(body, x, (params["blocks"],
+                                       (pool["k"], pool["v"])))
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        logits = self._lm_head(params, x)
+        return logits, {"k": kv[0], "v": kv[1]}

@@ -1,1 +1,33 @@
-from repro.serve.engine import Engine, Request, ServeConfig
+"""repro.serve — batched inference engines over the model zoo's KV cache.
+
+Two schedulers share the ``Request`` contract (greedy decode, per-request
+``max_new_tokens``, optional EOS):
+
+  ``Engine`` + ``ServeConfig`` (wave; dense cache)
+      The lock-step baseline: admit up to ``slots`` requests, prefill as
+      one right-aligned batch, decode until the whole wave drains.  Kept
+      as the dense-cache fallback and as the comparison point
+      ``benchmarks/bench_serve.py`` measures against.
+
+  ``ContinuousEngine`` + ``ContinuousConfig`` (continuous; paged cache)
+      Per-slot cache positions, slot recycling the step a row finishes,
+      bucketed chunked prefill interleaved with decode, and admission
+      gated on KV-block occupancy with ``kind="serve"`` telemetry
+      through ``repro.telemetry``'s JSONL sink.
+
+  ``kv_cache`` — the paged/block KV cache: ``BlockAllocator`` (fixed-size
+      blocks, free-list reuse, reservation ledger for OOM-free
+      admission), ``SlotTable`` block tables, and ``pool_from_dense``
+      for dense->paged cache adoption.  The device pool itself comes
+      from ``model.init_paged_cache``; the paged attention read is
+      bitwise-identical to the dense cache at equal logical lengths
+      (models/attention.py).
+
+Launcher: ``python -m repro.launch.serve`` (``--continuous/--paged``
+selects the scheduler); bench: ``benchmarks/bench_serve.py`` (Poisson
+open-loop, wave vs continuous -> BENCH_serve.json).
+"""
+from repro.serve.engine import (ContinuousConfig, ContinuousEngine, Engine,
+                                Request, ServeConfig)
+from repro.serve.kv_cache import (NULL_BLOCK, BlockAllocator, PoolExhausted,
+                                  SlotTable, pool_from_dense)

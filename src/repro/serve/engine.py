@@ -1,25 +1,56 @@
-"""Batched serving engine: wave-scheduled prefill + decode.
+"""Serving engines: lock-step wave batching and continuous batching.
 
-Static (wave) batching: up to ``slots`` requests are admitted per wave,
-prompts right-aligned/padded to a common length, prefilled as ONE batch,
-then decoded in lock-step until every sequence in the wave finishes.  This
-matches the cache design the dry-run cells lower (a single scalar position
-per cache — the production low-complexity scheduler); continuous batching
-would move to per-row positions, which the roofline cells do not require.
+Two schedulers, one ``Request`` contract (greedy decode, per-request
+``max_new_tokens`` budget, optional EOS):
 
-What this exercises end-to-end: batched prefill, jitted single-token
-decode, greedy sampling, EOS/budget termination, slot accounting and
-multi-wave reuse of the same compiled functions.
+``Engine`` (wave)
+    The seed scheduler, kept as the baseline and dense-cache fallback:
+    up to ``slots`` requests are admitted per wave, prompts
+    right-aligned/padded to a common width, prefilled as ONE batch, then
+    decoded in lock-step until every sequence finishes.  One slow
+    sequence drains the whole batch — head-of-line blocking is the
+    behaviour ``benchmarks/bench_serve.py`` quantifies.  Note the
+    right-aligned pad tokens are attended to (a single scalar cache
+    position forces common alignment), so a request's logits depend on
+    its wave-mates' lengths; equal-length prompts are unaffected.
+
+``ContinuousEngine`` (continuous batching + paged KV cache)
+    Per-slot cache positions and slot recycling: the step any row
+    finishes, its blocks return to the pool and the slot re-admits from
+    the queue — no wave drain.  The KV cache is the block pool of
+    ``serve/kv_cache.py``: per-slot block tables instead of a
+    ``cache_len`` worst-case dense reservation per slot.  Prompts
+    prefill in bucketed CHUNKS interleaved with decode (one chunk per
+    engine step), so admission never stalls token emission.  Admission
+    is gated on pool occupancy (``occupancy_watermark``) and the whole
+    loop streams ``kind="serve"`` events (queue depth, TTFT, tokens/s,
+    block occupancy) through the PR-5 telemetry sink.
+
+    Compile-once contract: the jitted decode step sees fixed shapes
+    (``slots`` rows, ``cache_len // block_size`` table columns) with
+    block tables / positions as data, and prefill chunk lengths are
+    bucketed to powers of two — request churn never recompiles
+    (tests/test_serve.py pins the jit cache sizes).
+
+Cache contract (models/attention.py, models/transformer.py): the paged
+read gathers the pool through the block table into the logical dense
+layout and runs the same ``_sdpa`` as the dense cache, masking at or
+beyond each row's position to exactly-zero softmax weight — with equal
+logical lengths, paged decode is BITWISE identical to the dense path.
 """
 from __future__ import annotations
 
 import dataclasses
 import logging
+import time
+from collections import deque
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serve.kv_cache import NULL_BLOCK, BlockAllocator, SlotTable
 
 log = logging.getLogger(__name__)
 
@@ -31,6 +62,11 @@ class Request:
     max_new_tokens: int
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    rejected: bool = False        # load-shed by a bounded admission queue
+    # engine-relative timestamps (seconds since run() start)
+    arrival_s: float = 0.0
+    first_token_s: Optional[float] = None
+    done_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -41,14 +77,27 @@ class ServeConfig:
     pad_id: int = 0
 
 
+def _now(t0: float) -> float:
+    return time.monotonic() - t0
+
+
 class Engine:
-    def __init__(self, model, params, cfg: ServeConfig):
+    """Wave scheduler (see module docstring)."""
+
+    def __init__(self, model, params, cfg: ServeConfig, sink=None):
         self.model = model
         self.params = params
         self.cfg = cfg
+        self.sink = sink
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step)
         self.waves = 0
+        self.tokens_emitted = 0
+
+    def _emit(self, event: str, t_s: float, **fields) -> None:
+        if self.sink is not None:
+            self.sink.emit({"kind": "serve", "event": event, "t_s": t_s,
+                            "scheduler": "wave", **fields})
 
     def _pad_prompts(self, reqs) -> jnp.ndarray:
         width = max(len(r.prompt) for r in reqs)
@@ -57,21 +106,41 @@ class Engine:
             batch[i, width - len(r.prompt):] = r.prompt   # right-aligned
         return jnp.asarray(batch)
 
-    def run_wave(self, reqs: list[Request]) -> None:
+    def run_wave(self, reqs: list[Request], t0: Optional[float] = None):
         assert len(reqs) <= self.cfg.slots
+        t0 = time.monotonic() if t0 is None else t0
         tokens = self._pad_prompts(reqs)
         cache = self.model.init_cache(self.cfg.slots, self.cfg.cache_len)
         logits, cache = self._prefill(self.params, tokens, cache)
         toks = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
         budget = np.zeros((self.cfg.slots,), np.int64)
         for i, r in enumerate(reqs):
-            r.out_tokens.append(int(toks[i]))
-            budget[i] = r.max_new_tokens - 1
+            if r.max_new_tokens <= 0:
+                # a zero budget emits nothing — not even the
+                # prefill-computed token
+                r.done = True
+                continue
+            tok = int(toks[i])
+            r.out_tokens.append(tok)
+            r.first_token_s = _now(t0)
+            self.tokens_emitted += 1
+            self._emit("first_token", r.first_token_s, uid=r.uid,
+                       ttft_s=r.first_token_s - r.arrival_s)
+            if ((self.cfg.eos_id is not None and tok == self.cfg.eos_id)
+                    or r.max_new_tokens == 1):
+                # EOS straight out of prefill ends the sequence here —
+                # the budget may not keep a finished row decoding
+                r.done = True
+            else:
+                budget[i] = r.max_new_tokens - 1
 
-        last = jnp.asarray(toks[:, None].astype(np.int32))
         live = np.array([not r.done for r in reqs]
                         + [False] * (self.cfg.slots - len(reqs)))
         live &= budget > 0
+        for i, r in enumerate(reqs):
+            if r.done and r.done_s is None:
+                self._finish(r, _now(t0))
+        last = jnp.asarray(toks[:, None].astype(np.int32))
         while live.any():
             logits, cache = self._decode(self.params, cache, last)
             toks = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
@@ -80,20 +149,363 @@ class Engine:
                     continue
                 tok = int(toks[i])
                 r.out_tokens.append(tok)
+                self.tokens_emitted += 1
                 budget[i] -= 1
                 if budget[i] <= 0 or (self.cfg.eos_id is not None
                                       and tok == self.cfg.eos_id):
                     live[i] = False
-                    r.done = True
+                    self._finish(r, _now(t0))
             last = jnp.asarray(toks[:, None].astype(np.int32))
         for r in reqs:
-            r.done = True
+            if not r.done:
+                self._finish(r, _now(t0))
         self.waves += 1
 
-    def run(self, requests: list[Request]) -> list[Request]:
-        pending = list(requests)
+    def _finish(self, r: Request, t_s: float) -> None:
+        r.done = True
+        r.done_s = t_s
+        self._emit("finish", t_s, uid=r.uid, tokens=len(r.out_tokens),
+                   latency_s=t_s - r.arrival_s)
+
+    def run(self, requests: list[Request],
+            arrivals: Optional[list[float]] = None) -> list[Request]:
+        """Serve ``requests``; ``arrivals[i]`` (seconds from start) makes
+        the load open-loop — a wave only admits arrived requests, and an
+        idle engine sleeps until the next arrival."""
+        t0 = time.monotonic()
+        if arrivals is None:
+            arrivals = [0.0] * len(requests)
+        order = sorted(range(len(requests)), key=lambda i: arrivals[i])
+        pending = deque((arrivals[i], requests[i]) for i in order)
+        for a, r in pending:
+            r.arrival_s = a
         while pending:
-            wave, pending = (pending[:self.cfg.slots],
-                             pending[self.cfg.slots:])
-            self.run_wave(wave)
+            now = _now(t0)
+            if pending[0][0] > now:
+                time.sleep(pending[0][0] - now)
+                continue
+            wave = []
+            while pending and len(wave) < self.cfg.slots \
+                    and pending[0][0] <= _now(t0):
+                wave.append(pending.popleft()[1])
+            self.run_wave(wave, t0=t0)
+            self._emit("stats", _now(t0), queue_depth=len(pending),
+                       tokens=self.tokens_emitted, slots_active=0)
+        return requests
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+
+_MIN_BUCKET = 8
+
+
+def _bucket(n: int, cap: int) -> int:
+    """Smallest power-of-two >= n (floor _MIN_BUCKET, ceiling cap)."""
+    c = _MIN_BUCKET
+    while c < n:
+        c *= 2
+    return min(c, cap)
+
+
+@dataclasses.dataclass
+class ContinuousConfig:
+    slots: int = 4                 # concurrent sequences (decode batch)
+    cache_len: int = 512           # logical per-slot maximum (tokens)
+    block_size: int = 16           # tokens per KV block
+    num_blocks: Optional[int] = None   # pool size; None = slots full span
+    prefill_chunk: int = 64        # max prompt tokens per engine step
+    eos_id: Optional[int] = None
+    pad_id: int = 0
+    max_queue: int = 0             # >0: load-shed arrivals past this depth
+    occupancy_watermark: float = 0.95  # admission backs off above this
+    stats_every: int = 32          # engine steps between stats events
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    phase: str = "idle"            # idle | prefill | decode
+    table: Optional[SlotTable] = None
+    length: int = 0                # tokens currently in the logical cache
+    prompt_done: int = 0           # prompt tokens prefilled so far
+    budget: int = 0                # generated tokens still allowed
+    last_token: int = 0            # next decode input
+    reserved_left: int = 0         # admission reservation not yet drawn
+
+
+class ContinuousEngine:
+    """Continuous-batching scheduler over the paged KV cache."""
+
+    def __init__(self, model, params, cfg: ContinuousConfig, sink=None):
+        if not hasattr(model, "decode_paged"):
+            raise TypeError(f"{type(model).__name__} has no paged decode "
+                            f"path; ContinuousEngine needs a KV-cache "
+                            f"model (dense/moe/vlm transformer)")
+        if cfg.cache_len % cfg.block_size:
+            raise ValueError("cache_len must be a multiple of block_size")
+        if cfg.prefill_chunk & (cfg.prefill_chunk - 1):
+            raise ValueError("prefill_chunk must be a power of two")
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.sink = sink
+        self.nbt = cfg.cache_len // cfg.block_size  # table width (blocks)
+        num_blocks = cfg.num_blocks
+        if num_blocks is None:
+            num_blocks = cfg.slots * self.nbt + 1   # +1: the null block
+        self.alloc = BlockAllocator(num_blocks, cfg.block_size)
+        self.pool = model.init_paged_cache(num_blocks, cfg.block_size)
+        self.slots = [_Slot() for _ in range(cfg.slots)]
+        self.steps = 0
+        self.tokens_emitted = 0
+        self.completed = 0
+        self._ready: "deque[Request]" = deque()
+        self._rr = 0                                # prefill round-robin
+        self._above_watermark = False
+
+        def _decode_fn(params, pool, tokens, tables, positions):
+            logits, pool = model.decode_paged(params, pool, tokens,
+                                              tables, positions)
+            return (jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32),
+                    pool)
+
+        def _prefill_fn(params, pool, tokens, table, p0, last_idx):
+            logits, pool = model.prefill_paged(params, pool, tokens,
+                                               table, p0, last_idx)
+            return jnp.argmax(logits[0, -1, :]).astype(jnp.int32), pool
+
+        # pool is donated: the engine only ever holds the latest buffer,
+        # so decode/prefill update the blocks in place
+        self._decode_jit = jax.jit(_decode_fn, donate_argnums=(1,))
+        self._prefill_jit = jax.jit(_prefill_fn, donate_argnums=(1,))
+
+    # -- telemetry ---------------------------------------------------------
+    def _emit(self, event: str, t_s: float, **fields) -> None:
+        if self.sink is not None:
+            self.sink.emit({"kind": "serve", "event": event, "t_s": t_s,
+                            "scheduler": "continuous", **fields})
+
+    # -- admission ---------------------------------------------------------
+    def _chunk_plan(self, n: int) -> list[tuple[int, int, int]]:
+        """(p0, real, padded) prefill chunks covering an n-token prompt."""
+        plan, p0 = [], 0
+        while p0 < n:
+            real = min(self.cfg.prefill_chunk, n - p0)
+            plan.append((p0, real, _bucket(real, self.cfg.prefill_chunk)))
+            p0 += real
+        return plan
+
+    def _span(self, req: Request) -> int:
+        """Worst-case logical span a request can touch: the bucket-padded
+        prefill frontier or prompt + generation budget, whichever is
+        larger (chunk padding writes throwaway k/v past the prompt)."""
+        plan = self._chunk_plan(len(req.prompt))
+        padded_end = plan[-1][0] + plan[-1][2]
+        return max(padded_end, len(req.prompt) + req.max_new_tokens)
+
+    def _validate(self, req: Request) -> None:
+        if len(req.prompt) < 1:
+            raise ValueError(f"req {req.uid}: empty prompt")
+        span = self._span(req)
+        if span > self.cfg.cache_len:
+            raise ValueError(
+                f"req {req.uid}: span {span} (prompt {len(req.prompt)} + "
+                f"budget {req.max_new_tokens}, chunk-padded) exceeds "
+                f"cache_len {self.cfg.cache_len}")
+        if self.alloc.blocks_for(span) > self.alloc.usable:
+            raise ValueError(f"req {req.uid}: needs "
+                             f"{self.alloc.blocks_for(span)} blocks; pool "
+                             f"has {self.alloc.usable}")
+
+    def _admit(self, now: float) -> None:
+        while self._ready:
+            occ = self.alloc.occupancy()
+            if occ >= self.cfg.occupancy_watermark:
+                if not self._above_watermark:   # once per crossing
+                    self._above_watermark = True
+                    self._emit("backoff", now, occupancy=occ,
+                               queue_depth=len(self._ready),
+                               reason="occupancy_watermark")
+                return
+            self._above_watermark = False
+            try:
+                slot = next(s for s in self.slots if s.phase == "idle")
+            except StopIteration:
+                return
+            req = self._ready[0]
+            need = self.alloc.blocks_for(self._span(req))
+            if not self.alloc.reserve(need):
+                self._emit("backoff", now, occupancy=occ,
+                           queue_depth=len(self._ready),
+                           reason="reservation")
+                return
+            self._ready.popleft()
+            slot.req = req
+            slot.phase = "prefill"
+            slot.table = SlotTable()
+            slot.length = 0
+            slot.prompt_done = 0
+            slot.budget = req.max_new_tokens
+            slot.reserved_left = need
+            self._emit("admit", now, uid=req.uid,
+                       queue_depth=len(self._ready), occupancy=occ)
+
+    def _grow(self, slot: _Slot, upto_tokens: int) -> None:
+        need = self.alloc.blocks_for(upto_tokens) - len(slot.table.blocks)
+        if need > 0:
+            n = min(need, slot.reserved_left)
+            ids = self.alloc.alloc(n, reserved=True)
+            if need > n:                 # past the reservation (shouldn't
+                ids += self.alloc.alloc(need - n)   # happen; be safe)
+            slot.reserved_left -= n
+            slot.table.blocks.extend(ids)
+
+    # -- prefill -----------------------------------------------------------
+    def _prefill_one(self, now: float) -> bool:
+        """Run ONE bucketed prompt chunk for the next prefilling slot
+        (round-robin) — chunked prefill interleaves with decode instead
+        of stalling it."""
+        n = len(self.slots)
+        for off in range(n):
+            slot = self.slots[(self._rr + off) % n]
+            if slot.phase == "prefill":
+                self._rr = (self._rr + off + 1) % n
+                break
+        else:
+            return False
+        req = slot.req
+        p0 = slot.prompt_done
+        real = min(self.cfg.prefill_chunk, len(req.prompt) - p0)
+        padded = _bucket(real, self.cfg.prefill_chunk)
+        self._grow(slot, p0 + padded)
+        chunk = np.full((1, padded), self.cfg.pad_id, np.int32)
+        chunk[0, :real] = req.prompt[p0:p0 + real]
+        tok, self.pool = self._prefill_jit(
+            self.params, self.pool, chunk, slot.table.padded(self.nbt),
+            jnp.asarray(p0, jnp.int32), jnp.asarray(real - 1, jnp.int32))
+        slot.prompt_done += real
+        if slot.prompt_done < len(req.prompt):
+            return True
+        # prompt complete: the chunk's last real logits give the first
+        # generated token
+        slot.length = len(req.prompt)
+        if req.max_new_tokens <= 0:
+            self._finish(slot, now)     # zero budget emits nothing
+            return True
+        tok = int(tok)
+        req.out_tokens.append(tok)
+        req.first_token_s = now
+        self.tokens_emitted += 1
+        self._emit("first_token", now, uid=req.uid,
+                   ttft_s=now - req.arrival_s)
+        if ((self.cfg.eos_id is not None and tok == self.cfg.eos_id)
+                or req.max_new_tokens == 1):
+            self._finish(slot, now)
+        else:
+            slot.phase = "decode"
+            slot.last_token = tok
+            slot.budget = req.max_new_tokens - 1
+        return True
+
+    # -- decode ------------------------------------------------------------
+    def _decode_all(self, now: float) -> bool:
+        """One token for every decoding slot; idle/prefilling rows are
+        parked on the null block and their outputs dropped."""
+        rows = [i for i, s in enumerate(self.slots) if s.phase == "decode"]
+        if not rows:
+            return False
+        n = self.cfg.slots
+        tokens = np.zeros((n, 1), np.int32)
+        tables = np.full((n, self.nbt), NULL_BLOCK, np.int32)
+        positions = np.zeros((n,), np.int32)
+        for i in rows:
+            slot = self.slots[i]
+            self._grow(slot, slot.length + 1)
+            tokens[i, 0] = slot.last_token
+            tables[i] = slot.table.padded(self.nbt)
+            positions[i] = slot.length
+        toks, self.pool = self._decode_jit(self.params, self.pool, tokens,
+                                           tables, positions)
+        toks = np.asarray(toks)
+        for i in rows:
+            slot = self.slots[i]
+            tok = int(toks[i])
+            slot.req.out_tokens.append(tok)
+            self.tokens_emitted += 1
+            slot.length += 1
+            slot.budget -= 1
+            slot.last_token = tok
+            if slot.budget <= 0 or (self.cfg.eos_id is not None
+                                    and tok == self.cfg.eos_id):
+                self._finish(slot, now)
+        return True
+
+    # -- lifecycle ---------------------------------------------------------
+    def _finish(self, slot: _Slot, now: float) -> None:
+        req = slot.req
+        req.done = True
+        req.done_s = now
+        self.completed += 1
+        self._emit("finish", now, uid=req.uid, tokens=len(req.out_tokens),
+                   latency_s=now - req.arrival_s,
+                   occupancy=self.alloc.occupancy())
+        if slot.table.blocks:
+            self.alloc.free(slot.table.blocks)
+        if slot.reserved_left:
+            self.alloc.release(slot.reserved_left)
+        slot.req = None
+        slot.phase = "idle"
+        slot.table = None
+        slot.length = slot.prompt_done = slot.budget = 0
+        slot.reserved_left = slot.last_token = 0
+
+    def step(self, now: float) -> bool:
+        """One scheduler step: admit, one prefill chunk, one decode step
+        for every live row.  Returns whether any work ran."""
+        self._admit(now)
+        did = self._prefill_one(now)
+        did = self._decode_all(now) or did
+        self.steps += 1
+        if self.sink is not None and self.steps % self.cfg.stats_every == 0:
+            self._emit("stats", now, step=self.steps,
+                       queue_depth=len(self._ready),
+                       occupancy=self.alloc.occupancy(),
+                       slots_active=sum(s.phase != "idle"
+                                        for s in self.slots),
+                       tokens=self.tokens_emitted,
+                       tok_per_s=self.tokens_emitted / max(now, 1e-9))
+        return did
+
+    def run(self, requests: list[Request],
+            arrivals: Optional[list[float]] = None) -> list[Request]:
+        """Serve ``requests`` to completion.  ``arrivals[i]`` (seconds
+        from start) drives an open-loop load; requests arriving onto a
+        full bounded queue (``max_queue``) are load-shed (``rejected``)."""
+        for r in requests:
+            self._validate(r)
+        t0 = time.monotonic()
+        if arrivals is None:
+            arrivals = [0.0] * len(requests)
+        order = sorted(range(len(requests)), key=lambda i: arrivals[i])
+        pending = deque((arrivals[i], requests[i]) for i in order)
+        for a, r in pending:
+            r.arrival_s = a
+        while pending or self._ready \
+                or any(s.phase != "idle" for s in self.slots):
+            now = _now(t0)
+            while pending and pending[0][0] <= now:
+                _, req = pending.popleft()
+                if 0 < self.cfg.max_queue <= len(self._ready):
+                    req.rejected = True
+                    req.done = True
+                    req.done_s = now
+                    self._emit("reject", now, uid=req.uid,
+                               queue_depth=len(self._ready))
+                    continue
+                self._ready.append(req)
+            if not self.step(now) and not self._ready:
+                if pending:
+                    time.sleep(max(pending[0][0] - _now(t0), 0.0))
         return requests

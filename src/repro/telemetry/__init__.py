@@ -73,6 +73,16 @@ JSONL event schema (version 1; authoritative machine form in
       The controller treats any fault in an interval as an anomaly:
       cadence RELAXATION pauses for that interval (tightening stays
       armed).
+  kind="serve"      — serving-engine observability (repro.serve; both
+      schedulers stream through the same sink):
+      event ("admit" | "first_token" | "finish" | "reject" | "backoff" |
+      "stats"), t_s (seconds since run start), scheduler ("wave" |
+      "continuous"); plus uid/ttft_s/latency_s/tokens per request,
+      queue_depth / occupancy (KV-block pool, incl. reservations) /
+      slots_active / tok_per_s on stats lines, and reason on admission
+      backoff ("occupancy_watermark" | "reservation").  The continuous
+      engine's admission gate is driven by the same occupancy signal it
+      emits here.
 """
 from repro.telemetry.collect import (chain_guard_state, get_refresh_every,
                                      named_guard_states,

@@ -89,6 +89,19 @@ EVENT_SCHEMA = {
                      "demotions": int, "leaf": int, "xi": _NUM,
                      "detail": str},
     },
+    # serving engines (repro.serve): request lifecycle ("admit" |
+    # "first_token" | "finish" | "reject"), admission back-pressure
+    # ("backoff" when KV-block occupancy crosses the watermark) and
+    # periodic "stats" lines.  ``t_s`` is seconds since the engine run
+    # started; ``tokens`` counters are CUMULATIVE on "stats" lines and
+    # per-request on "finish" lines.
+    "serve": {
+        "required": {"event": str, "t_s": _NUM, "scheduler": str},
+        "optional": {"uid": int, "step": int, "queue_depth": int,
+                     "ttft_s": _NUM, "latency_s": _NUM, "tokens": int,
+                     "tok_per_s": _NUM, "occupancy": _NUM,
+                     "slots_active": int, "reason": str},
+    },
 }
 
 
