@@ -11,16 +11,23 @@ and a long-tailed ``max_new_tokens`` mix, the shape where lock-step
 draining hurts: one long sequence holds every slot in its wave hostage
 while the continuous engine recycles them.
 
-Also pins two correctness claims into the JSON:
+Also pins three correctness claims into the JSON:
   * ``derived.paged_bitwise_parity`` — paged decode logits are BITWISE
     equal to the dense-cache decode path on the bench model;
   * ``derived.serve_events_valid`` — the ``kind="serve"`` telemetry the
-    continuous run emits validates against the schema.
+    continuous run emits validates against the schema;
+  * ``derived.trace_check_problems == 0`` — the timed continuous run is
+    traced (``repro.telemetry.trace.Tracer``), and every request must
+    reconstruct a COMPLETE queued→finish span waterfall
+    (``check_events``); per-phase latency attribution lands in
+    ``derived.phase_latency_s``.
 
 The run FAILS (nonzero exit) unless continuous beats wave on BOTH p99
-latency and throughput and both correctness claims hold — this is the
+latency and throughput and all correctness claims hold — this is the
 CI gate (``--quick``).  Writes BENCH_serve.json; the committed copy is
-the acceptance artifact.
+the acceptance artifact.  ``--events-dir`` keeps the traced event
+stream somewhere inspectable (``tools/traceview.py``); default is a
+temp dir.
 
     PYTHONPATH=src python benchmarks/bench_serve.py --quick
 """
@@ -41,7 +48,9 @@ from repro.models import build_model
 from repro.serve import (ContinuousConfig, ContinuousEngine, Engine,
                          Request, ServeConfig)
 from repro.serve.kv_cache import BlockAllocator, SlotTable, pool_from_dense
-from repro.telemetry import SinkConfig, TelemetrySink, validate_dir
+from repro.telemetry import (MetricsRegistry, SinkConfig, TelemetrySink,
+                             Tracer, check_events, load_events, span_stats,
+                             validate_dir)
 
 PROMPT_LEN = 16
 SLOTS = 4
@@ -131,6 +140,10 @@ def main(argv=None):
                          "engine's measured capacity — near saturation, "
                          "where scheduling decides the tail")
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--events-dir", default=None,
+                    help="write the timed continuous run's serve + span "
+                         "events here (default: a temp dir); inspect "
+                         "with tools/traceview.py")
     args = ap.parse_args(argv)
     n = args.requests or (16 if args.quick else 48)
 
@@ -176,14 +189,25 @@ def main(argv=None):
     wave.run(wave_reqs, arrivals=list(arrivals))
 
     cont_reqs = clone(reqs)
-    tmp = tempfile.mkdtemp(prefix="serve-events-")
-    sink = TelemetrySink(SinkConfig(directory=tmp))
-    cont.sink = sink                    # telemetry only on the timed run
+    events_dir = args.events_dir or tempfile.mkdtemp(prefix="serve-events-")
+    sink = TelemetrySink(SinkConfig(directory=events_dir))
+    tracer = Tracer(sink=sink, registry=MetricsRegistry())
+    cont.sink = sink          # telemetry + tracing only on the timed run
+    cont.set_tracer(tracer)
     cont.run(cont_reqs, arrivals=list(arrivals))
+    tracer.flush()
     sink.flush()
     sink.close()
     cont.sink = None
-    n_events = validate_dir(tmp)
+    cont.set_tracer(None)
+    n_events = validate_dir(events_dir)
+    events = load_events(events_dir)
+    problems = check_events(events)
+    stats = span_stats(events)
+    phase_latency = {name: {k: s[k] for k in ("p50_s", "p95_s", "p99_s")}
+                     for name, s in stats.items()
+                     if name in ("queued", "admitted", "prefill_chunk",
+                                 "decode", "request")}
 
     wave_m = metrics(wave_reqs, "wave")
     cont_m = metrics(cont_reqs, "continuous")
@@ -211,6 +235,8 @@ def main(argv=None):
             "paged_bitwise_parity": parity,
             "serve_events": n_events,
             "serve_events_valid": True,      # validate_dir raised otherwise
+            "phase_latency_s": phase_latency,
+            "trace_check_problems": len(problems),
         },
     }
     with open(args.out, "w") as f:
@@ -226,7 +252,8 @@ def main(argv=None):
     print(f"speedups: p99 {d['p99_latency_speedup_x']:.2f}x  "
           f"ttft {d['p99_ttft_speedup_x']:.2f}x  "
           f"throughput {d['throughput_speedup_x']:.2f}x  "
-          f"paged-bitwise={parity}  events={n_events}")
+          f"paged-bitwise={parity}  events={n_events}  "
+          f"trace-problems={len(problems)}")
     failures = []
     if d["p99_latency_speedup_x"] < 1.0:
         failures.append("continuous must beat wave on p99 latency")
@@ -234,6 +261,11 @@ def main(argv=None):
         failures.append("continuous must beat wave on throughput")
     if not parity:
         failures.append("paged decode logits must match dense bitwise")
+    if problems:
+        for p in problems[:10]:
+            print(f"  trace: {p}", file=sys.stderr)
+        failures.append(f"{len(problems)} trace problems: every request "
+                        f"must reconstruct a complete span waterfall")
     if failures:
         for msg in failures:
             print(f"FAIL: {msg}", file=sys.stderr)

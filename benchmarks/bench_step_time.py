@@ -67,6 +67,15 @@ CASES = [
     ("adapprox_refresh5_warm1_telemetry", "adapprox",
      {"refresh_every": 5, "warm_start": True, "n_iter_warm": 1,
       "telemetry": True, "dynamic_refresh": True}),
+    # host-side span-tracing overhead row: the SAME optimizer config as
+    # the telemetry row, but every timed step additionally runs under the
+    # train loop's four spans (train_step / data_wait / step_dispatch /
+    # device_sync) recording through a real JSONL sink — the _traced name
+    # suffix is what switches the harness on.  Pinned <= 3% wall vs the
+    # telemetry row by tests/test_trace.py against the committed JSON.
+    ("adapprox_refresh5_warm1_traced", "adapprox",
+     {"refresh_every": 5, "warm_start": True, "n_iter_warm": 1,
+      "telemetry": True, "dynamic_refresh": True}),
     ("adapprox_refresh5_warm1_bucketed", "adapprox",
      {"refresh_every": 5, "warm_start": True, "n_iter_warm": 1,
       "bucketed": True}),
@@ -97,9 +106,12 @@ def make_params(stack: str):
 
 
 def time_opt(family: str, overrides: dict, stack: str, reps: int,
-             min_dim_factor: int) -> float:
+             min_dim_factor: int, traced: bool = False) -> float:
     """ms per optimizer step, jitted, averaged over ``reps`` post-compile
-    steps."""
+    steps.  With ``traced`` every timed step runs under the train loop's
+    span set (4 spans/step) recording through a real JSONL sink — the
+    tracing-overhead row; the compute and sync pattern stay identical to
+    the untraced rows, so the delta IS the span machinery."""
     params = make_params(stack)
     opt = build_optimizer(OptimizerConfig(
         name=family, schedule="constant", lr=1e-3, weight_decay=0.0,
@@ -113,13 +125,104 @@ def time_opt(family: str, overrides: dict, stack: str, reps: int,
         upd, s = opt.update(g, s, p)
         return apply_updates(p, upd), s
 
+    tracer = sink = None
+    if traced:
+        import tempfile
+
+        from repro.telemetry import SinkConfig, TelemetrySink, Tracer
+        sink = TelemetrySink(SinkConfig(
+            directory=tempfile.mkdtemp(prefix="bench-trace-")))
+        tracer = Tracer(sink=sink)
+
     params2, state = step(grads, state, params)   # compile (= step 1)
     jax.block_until_ready(params2)
     t0 = time.perf_counter()
-    for _ in range(reps):
-        params2, state = step(grads, state, params2)
+    if traced:
+        for i in range(reps):
+            with tracer.span("train_step", step=i + 1):
+                with tracer.span("data_wait"):
+                    g = grads
+                with tracer.span("step_dispatch"):
+                    params2, state = step(g, state, params2)
+                with tracer.span("device_sync"):
+                    pass          # sync stays end-of-loop, as untraced
+    else:
+        for _ in range(reps):
+            params2, state = step(grads, state, params2)
     jax.block_until_ready(params2)
-    return (time.perf_counter() - t0) / reps * 1e3
+    dt = (time.perf_counter() - t0) / reps * 1e3
+    if sink is not None:
+        sink.close()
+    return dt
+
+
+def paired_overhead(stack: str, reps: int, min_dim_factor: int,
+                    overrides_a: dict, overrides_b: dict,
+                    trace_b: bool = False, rounds: int = 4) -> float:
+    """Paired overhead ratio wall(B)/wall(A): both variants' jitted
+    steps timed back-to-back each round, min wall per variant over the
+    rounds — the single-pass row protocol's run-to-run noise on a
+    shared CPU box swamps a 3% acceptance bound, so the overhead PINS
+    use this paired protocol (exactly like ``time_elementwise_stage``);
+    the rows keep the historical single-pass numbers.  With ``trace_b``
+    variant B's timed loop additionally runs under the train loop's
+    four spans recording through a real JSONL sink, so A == B configs
+    isolates pure span machinery."""
+    params = make_params(stack)
+    grads = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(1), p.shape), params)
+
+    def build(overrides):
+        opt = build_optimizer(OptimizerConfig(
+            name="adapprox", schedule="constant", lr=1e-3,
+            weight_decay=0.0, min_dim_factor=min_dim_factor, **overrides))
+
+        @jax.jit
+        def step(g, s, p):
+            upd, s = opt.update(g, s, p)
+            return apply_updates(p, upd), s
+
+        p2, s = step(grads, opt.init(params), params)   # compile
+        jax.block_until_ready(p2)
+        return step, s, p2
+
+    step_a, state_a, params_a = build(overrides_a)
+    step_b, state_b, params_b = build(overrides_b)
+
+    tracer = sink = None
+    if trace_b:
+        import tempfile
+
+        from repro.telemetry import SinkConfig, TelemetrySink, Tracer
+        sink = TelemetrySink(SinkConfig(
+            directory=tempfile.mkdtemp(prefix="bench-trace-")))
+        tracer = Tracer(sink=sink)
+
+    best = {"a": float("inf"), "b": float("inf")}
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            params_a, state_a = step_a(grads, state_a, params_a)
+        jax.block_until_ready(params_a)
+        best["a"] = min(best["a"], time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        if trace_b:
+            for i in range(reps):
+                with tracer.span("train_step", step=i + 1):
+                    with tracer.span("data_wait"):
+                        g = grads
+                    with tracer.span("step_dispatch"):
+                        params_b, state_b = step_b(g, state_b, params_b)
+                    with tracer.span("device_sync"):
+                        pass      # sync stays end-of-loop, as untraced
+        else:
+            for _ in range(reps):
+                params_b, state_b = step_b(grads, state_b, params_b)
+        jax.block_until_ready(params_b)
+        best["b"] = min(best["b"], time.perf_counter() - t0)
+    if sink is not None:
+        sink.close()
+    return best["b"] / best["a"]
 
 
 def time_elementwise_stage(stack: str, r: int = 64,
@@ -208,7 +311,8 @@ def collect(quick: bool = False) -> dict:
     min_dim_factor = 128
     results = []
     for name, family, overrides in CASES:
-        ms = time_opt(family, overrides, stack, reps, min_dim_factor)
+        ms = time_opt(family, overrides, stack, reps, min_dim_factor,
+                      traced=name.endswith("_traced"))
         results.append({"name": name, "optimizer": family,
                         "config": overrides, "ms_per_step": round(ms, 3)})
     by_name = {r["name"]: r["ms_per_step"] for r in results}
@@ -221,11 +325,26 @@ def collect(quick: bool = False) -> dict:
     derived["speedup_fused_vs_refresh5_warm1"] = round(
         by_name["adapprox_refresh5_warm1"]
         / by_name["adapprox_refresh5_warm1_fused"], 2)
-    # telemetry collection overhead (>= 1.0 means slower than the
-    # telemetry-off row; acceptance: <= 1.03)
+    # Both <= 3% overhead pins are measured PAIRED + interleaved
+    # (paired_overhead), never as row quotients: the single-pass rows
+    # are separate runs minutes apart, and shared-box noise between
+    # them swamps a 3% bound (observed 0.77x-1.28x on identical
+    # configs run to run).
+    cases = {n: o for n, _, o in CASES}
+    # telemetry collection overhead (in-jit snapshot + traced cadence
+    # vs the telemetry-off config; acceptance: <= 1.03)
     derived["telemetry_overhead_vs_refresh5_warm1"] = round(
-        by_name["adapprox_refresh5_warm1_telemetry"]
-        / by_name["adapprox_refresh5_warm1"], 3)
+        paired_overhead(stack, reps, min_dim_factor,
+                        cases["adapprox_refresh5_warm1"],
+                        cases["adapprox_refresh5_warm1_telemetry"]), 3)
+    # host-side span-tracing overhead (same config both sides; variant
+    # B adds the train loop's 4 recorded spans per step through a real
+    # JSONL sink; acceptance: <= 1.03)
+    derived["trace_overhead_vs_refresh5_warm1_telemetry"] = round(
+        paired_overhead(stack, reps, min_dim_factor,
+                        cases["adapprox_refresh5_warm1_telemetry"],
+                        cases["adapprox_refresh5_warm1_telemetry"],
+                        trace_b=True), 3)
     from repro.kernels import ops
     return {
         "benchmark": "optimizer_step_time",

@@ -1,7 +1,17 @@
-"""Quickstart: train a tiny LM with Adapprox in ~40 lines.
+"""Quickstart: train a tiny LM with Adapprox, traced end to end.
 
     PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py --steps 60 \
+        --trace-dir /tmp/quickstart-trace
+
+Every step runs under host-side spans (``repro.telemetry.trace``); at
+exit the script reconstructs where step time went (data wait vs jitted
+dispatch vs device sync) straight from the recorded JSONL — the same
+events ``tools/traceview.py`` analyses.
 """
+import argparse
+import tempfile
+
 import jax
 import jax.numpy as jnp
 
@@ -10,8 +20,16 @@ from repro.configs import get_smoke_config
 from repro.core import apply_updates, build_optimizer, rank_metrics
 from repro.data import DataConfig, make_source
 from repro.models import build_model
+from repro.telemetry import (SinkConfig, TelemetrySink, Tracer,
+                             format_breakdown, load_events, step_breakdown)
 
-STEPS, BATCH, SEQ, VOCAB = 150, 8, 64, 256
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=150)
+ap.add_argument("--trace-dir", default=None,
+                help="record span events here (default: a temp dir)")
+args = ap.parse_args()
+
+STEPS, BATCH, SEQ, VOCAB = args.steps, 8, 64, 256
 
 cfg = get_smoke_config("gpt2-117m", vocab=VOCAB, max_seq_len=SEQ)
 model = build_model(cfg)
@@ -29,6 +47,10 @@ opt_state = opt.init(params)
 source = make_source(DataConfig(vocab=VOCAB, seq_len=SEQ,
                                 global_batch=BATCH))
 
+trace_dir = args.trace_dir or tempfile.mkdtemp(prefix="quickstart-trace-")
+sink = TelemetrySink(SinkConfig(directory=trace_dir))
+tracer = Tracer(sink=sink)
+
 
 @jax.jit
 def step(params, opt_state, batch):
@@ -39,11 +61,23 @@ def step(params, opt_state, batch):
 
 
 for t in range(STEPS):
-    batch = {"tokens": jnp.asarray(source.batch_at(t)["tokens"])}
-    params, opt_state, loss = step(params, opt_state, batch)
+    with tracer.span("train_step", step=t + 1):
+        with tracer.span("data_wait"):
+            batch = {"tokens": jnp.asarray(source.batch_at(t)["tokens"])}
+        with tracer.span("step_dispatch"):
+            params, opt_state, loss = step(params, opt_state, batch)
+        with tracer.span("device_sync"):
+            jax.block_until_ready(loss)
     if (t + 1) % 25 == 0 or t == 0:
         m = rank_metrics(opt_state)
         print(f"step {t + 1:4d}  loss {float(loss):.4f}  "
               f"mean_rank {float(m['adapprox/mean_rank']):.1f}  "
               f"mean_xi {float(m['adapprox/mean_xi']):.4f}")
+
+tracer.flush()
+sink.close()
 print("done — Adapprox trained a model with a low-rank second moment.")
+print()
+print(format_breakdown(step_breakdown(load_events(trace_dir))))
+print(f"\nspan events in {trace_dir} — inspect with "
+      f"PYTHONPATH=src python tools/traceview.py {trace_dir}")

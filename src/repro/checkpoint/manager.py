@@ -28,6 +28,7 @@ from typing import Any, Callable, Optional
 import jax
 
 from repro.checkpoint import serialization as SER
+from repro.telemetry.trace import NULL_TRACER
 
 log = logging.getLogger(__name__)
 
@@ -54,6 +55,10 @@ class CheckpointManager:
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
         self._prev_handlers: Optional[dict] = None
+        # optional repro.telemetry Tracer (the train loop wires its own
+        # in): ckpt_gather spans the synchronous device->host snapshot,
+        # ckpt_write the async file IO, ckpt_restore the load
+        self.tracer = None
 
     def _with_retries(self, fn, what: str):
         """Run ``fn`` retrying OSErrors with exponential backoff.
@@ -79,22 +84,29 @@ class CheckpointManager:
 
     def save(self, tree: Any, step: int, blocking: bool = False,
              extra_meta: Optional[dict] = None) -> None:
-        self.wait()                     # one in-flight save at a time
-        # Capture per-leaf sharding specs BEFORE the host gather strips
-        # placement — the manifest records how the state was sharded.
-        leaf_specs, mesh_axes = SER.leaf_spec_meta(tree)
-        # Device->host is synchronous (consistent snapshot); file IO is not.
-        host_tree = jax.tree.map(lambda x: jax.device_get(x), tree)
+        tr = self.tracer if self.tracer is not None else NULL_TRACER
+        with tr.span("ckpt_gather", step=step):
+            self.wait()                 # one in-flight save at a time
+            # Capture per-leaf sharding specs BEFORE the host gather
+            # strips placement — the manifest records how the state was
+            # sharded.
+            leaf_specs, mesh_axes = SER.leaf_spec_meta(tree)
+            # Device->host is synchronous (consistent snapshot); file IO
+            # is not.
+            host_tree = jax.tree.map(lambda x: jax.device_get(x), tree)
 
         def work():
             try:
-                self._with_retries(
-                    lambda: SER.save_pytree(
-                        host_tree, self.directory, step,
-                        extra_meta=extra_meta,
-                        leaf_specs=leaf_specs, mesh_axes=mesh_axes),
-                    what=f"checkpoint save step {step}")
-                self._retain()
+                # worker thread: its own span stack, so this span starts
+                # a fresh trace rather than nesting under the caller's
+                with tr.span("ckpt_write", step=step):
+                    self._with_retries(
+                        lambda: SER.save_pytree(
+                            host_tree, self.directory, step,
+                            extra_meta=extra_meta,
+                            leaf_specs=leaf_specs, mesh_axes=mesh_axes),
+                        what=f"checkpoint save step {step}")
+                    self._retain()
             except BaseException as e:  # noqa: BLE001 — surfaced on wait()
                 self._error = e
 
@@ -155,6 +167,12 @@ class CheckpointManager:
         checkpoint logs a warning and falls back to the previous GOOD one
         instead of crashing the restart loop.  An explicit ``step`` is a
         user decision: corruption there raises CheckpointCorruptError."""
+        tr = self.tracer if self.tracer is not None else NULL_TRACER
+        with tr.span("ckpt_restore"):
+            return self._restore(like, shardings, step)
+
+    def _restore(self, like: Any, shardings: Any,
+                 step: Optional[int]) -> tuple[Any, int]:
         if step is not None:
             p = self.directory / f"step_{step:09d}"
             tree = self._with_retries(

@@ -27,6 +27,9 @@ JSONL event per compiled cell (plus a ``run_meta`` header) through the
 shared ``repro.telemetry`` sink — the same stream/schema the training
 telemetry uses, so CI can validate the event pipeline without running a
 training step (``python -m repro.telemetry.validate DIR``).
+``--trace-dir DIR`` adds per-cell ``compile_cell``/``lower``/``compile``
+spans and (with ``--metrics-every``) registry snapshots for
+``tools/traceview.py``.
 """
 import argparse
 import collections
@@ -46,6 +49,7 @@ from repro.core import build_optimizer
 from repro.distributed import sharding as SH
 from repro.launch.mesh import make_production_mesh, make_test_mesh
 from repro.models import build_model
+from repro.telemetry.trace import NULL_TRACER
 from repro.train.steps import TrainState, build_train_step
 
 DEFAULT_OUT = Path("experiments/dryrun")
@@ -244,21 +248,26 @@ def build_cell(arch: str, cell_name: str, mesh, smoke: bool = False):
 
 def run_cell(arch: str, cell_name: str, multi_pod: bool, out_dir: Path,
              smoke: bool = False, force: bool = False,
-             mesh_override=None) -> dict:
+             mesh_override=None, tracer=None) -> dict:
     mesh_tag = "multipod" if multi_pod else "pod"
     out_path = out_dir / f"{arch}__{cell_name}__{mesh_tag}.json"
     if out_path.exists() and not force:
         return json.loads(out_path.read_text())
 
-    t0 = time.time()
-    mesh = mesh_override or make_production_mesh(multi_pod=multi_pod)
-    n_dev = len(mesh.devices.flat)
-    fn, structs, cfg, cell = build_cell(arch, cell_name, mesh, smoke=smoke)
+    tr = tracer if tracer is not None else NULL_TRACER
+    with tr.span("compile_cell", arch=arch, cell=cell_name, mesh=mesh_tag):
+        t0 = time.time()
+        mesh = mesh_override or make_production_mesh(multi_pod=multi_pod)
+        n_dev = len(mesh.devices.flat)
+        fn, structs, cfg, cell = build_cell(arch, cell_name, mesh,
+                                            smoke=smoke)
 
-    lowered = fn.lower(*structs)
-    t_lower = time.time() - t0
-    compiled = lowered.compile()
-    t_compile = time.time() - t0 - t_lower
+        with tr.span("lower"):
+            lowered = fn.lower(*structs)
+        t_lower = time.time() - t0
+        with tr.span("compile"):
+            compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
@@ -331,6 +340,15 @@ def main(argv=None):
     ap.add_argument("--telemetry-dir", default=None,
                     help="emit one dryrun_cell JSONL event per compiled "
                          "cell (repro.telemetry schema)")
+    ap.add_argument("--trace-dir", default=None,
+                    help="record per-cell compile_cell/lower/compile "
+                         "spans as kind=\"span\" JSONL for "
+                         "tools/traceview.py; may equal --telemetry-dir "
+                         "to share one stream")
+    ap.add_argument("--metrics-every", type=int, default=0,
+                    help="with --trace-dir: emit a kind=\"metric\" "
+                         "registry snapshot every N compiled cells "
+                         "(0 = only the final snapshot)")
     args = ap.parse_args(argv)
 
     out_dir = Path(args.out)
@@ -342,6 +360,21 @@ def main(argv=None):
         sink = TelemetrySink(SinkConfig(directory=args.telemetry_dir))
         sink.emit({"kind": "run_meta", "source": "launch.dryrun",
                    "argv": list(argv) if argv is not None else sys.argv[1:]})
+
+    tracer = None
+    trace_sink = None        # sink this driver owns (closed at exit)
+    reg = None
+    run_t0 = time.time()
+    if args.trace_dir:
+        from repro.telemetry import (MetricsRegistry, SinkConfig,
+                                     TelemetrySink, Tracer)
+        reg = MetricsRegistry()
+        if sink is not None and args.trace_dir == args.telemetry_dir:
+            span_sink = sink     # one dir -> one shared stream
+        else:
+            trace_sink = span_sink = TelemetrySink(
+                SinkConfig(directory=args.trace_dir))
+        tracer = Tracer(sink=span_sink, registry=reg)
 
     archs = ASSIGNED if args.arch == "all" else args.arch.split(",")
     cells = list(CELLS) if args.cell == "all" else args.cell.split(",")
@@ -355,13 +388,27 @@ def main(argv=None):
                                        ("pod", "data", "model"))
 
     failures = []
+    compiled_cells = 0
     for arch, cell in plan(archs, cells):
         for mp in meshes:
             tag = f"{arch} x {cell} x {'multipod' if mp else 'pod'}"
             try:
                 rec = run_cell(arch, cell, mp, out_dir, smoke=smoke,
                                force=args.force,
-                               mesh_override=mesh_override)
+                               mesh_override=mesh_override, tracer=tracer)
+                compiled_cells += 1
+                if reg is not None:
+                    reg.counter("dryrun_cells_total",
+                                help="compiled dry-run cells").inc(
+                                    1, cell=rec["cell"], mesh=rec["mesh"])
+                    reg.histogram("dryrun_compile_seconds",
+                                  help="per-cell compile time").observe(
+                                      float(rec.get("compile_s", 0.0)))
+                    if (sink is not None or trace_sink is not None) and \
+                            args.metrics_every > 0 and \
+                            compiled_cells % args.metrics_every == 0:
+                        (trace_sink or sink).emit(reg.snapshot(
+                            t_s=time.time() - run_t0))
                 peak = rec["memory"]["peak_bytes"] or 0
                 if sink is not None:
                     sink.emit({
@@ -382,10 +429,20 @@ def main(argv=None):
                 failures.append((tag, e))
                 traceback.print_exc()
                 print(f"FAIL {tag}: {e}", flush=True)
+    if tracer is not None:
+        final_sink = trace_sink if trace_sink is not None else sink
+        if final_sink is not None:
+            final_sink.emit(reg.snapshot(t_s=time.time() - run_t0))
+        tracer.flush()
+        (Path(args.trace_dir) / "metrics.prom").write_text(reg.render())
     if sink is not None:
         sink.close()
         print(f"telemetry: {len(sink.paths())} event file(s) under "
               f"{args.telemetry_dir}")
+    if trace_sink is not None:
+        trace_sink.close()
+        print(f"trace: {len(trace_sink.paths())} event file(s) under "
+              f"{args.trace_dir}")
     for (a, c), why in SKIPS.items():
         if a in archs and c in cells:
             print(f"SKIP {a} x {c}: {why}")

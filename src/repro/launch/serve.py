@@ -13,6 +13,7 @@ from __future__ import annotations
 import argparse
 import statistics
 import time
+from pathlib import Path
 
 import jax
 import numpy as np
@@ -54,6 +55,16 @@ def main(argv=None):
                     help="prompt RNG seed")
     ap.add_argument("--telemetry-dir", default=None,
                     help="stream kind=\"serve\" JSONL events here")
+    ap.add_argument("--trace-dir", default=None,
+                    help="record per-request span waterfalls "
+                         "(queued/admitted/prefill/decode) as "
+                         "kind=\"span\" JSONL for tools/traceview.py; "
+                         "may equal --telemetry-dir to share one stream")
+    ap.add_argument("--metrics-every", type=int, default=0,
+                    help="with --trace-dir: emit a kind=\"metric\" "
+                         "registry snapshot every N engine steps (waves "
+                         "for the wave scheduler; 0 = only the "
+                         "metrics.prom dump at exit)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -65,17 +76,34 @@ def main(argv=None):
         from repro.telemetry import SinkConfig, TelemetrySink
         sink = TelemetrySink(SinkConfig(directory=args.telemetry_dir))
 
+    tracer = None
+    trace_sink = None        # sink this launcher owns (closed at exit)
+    reg = None
+    if args.trace_dir is not None:
+        from repro.telemetry import (MetricsRegistry, SinkConfig,
+                                     TelemetrySink, Tracer)
+        reg = MetricsRegistry()
+        if sink is not None and args.trace_dir == args.telemetry_dir:
+            span_sink = sink     # one dir -> one shared stream
+        else:
+            trace_sink = span_sink = TelemetrySink(
+                SinkConfig(directory=args.trace_dir))
+        tracer = Tracer(sink=span_sink, registry=reg)
+        if sink is None:
+            sink = span_sink     # serve events join the span stream
+
     continuous = args.continuous or args.paged
     if continuous:
         engine = ContinuousEngine(model, params, ContinuousConfig(
             slots=args.slots, cache_len=args.cache_len,
             block_size=args.block_size, num_blocks=args.num_blocks,
             prefill_chunk=args.prefill_chunk, eos_id=args.eos_id,
-            max_queue=args.max_queue), sink=sink)
+            max_queue=args.max_queue), sink=sink, tracer=tracer)
     else:
         engine = Engine(model, params, ServeConfig(
             slots=args.slots, cache_len=args.cache_len,
-            eos_id=args.eos_id), sink=sink)
+            eos_id=args.eos_id), sink=sink, tracer=tracer)
+    engine.metrics_every = args.metrics_every
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(uid=i,
@@ -87,9 +115,15 @@ def main(argv=None):
     t0 = time.perf_counter()
     engine.run(reqs)
     dt = time.perf_counter() - t0
+    if tracer is not None:
+        tracer.flush()
     if sink is not None:
         sink.flush()
         sink.close()
+    if trace_sink is not None and trace_sink is not sink:
+        trace_sink.close()
+    if reg is not None:
+        (Path(args.trace_dir) / "metrics.prom").write_text(reg.render())
     total_tokens = sum(len(r.out_tokens) for r in reqs)
     ttfts = [r.first_token_s - r.arrival_s for r in reqs
              if r.first_token_s is not None]

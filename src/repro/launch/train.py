@@ -31,6 +31,12 @@ schema-validated JSONL (``repro.telemetry``); ``--auto-refresh`` adds the
 closed-loop controller, which adapts each group's S-RSI refresh cadence
 from observed xi drift at runtime — the cadence is a traced state scalar,
 so retunes never recompile the step.
+
+Tracing: ``--trace-dir DIR`` records host-side span events (data-wait /
+dispatch / device-sync / checkpoint phases of every train step, with
+refresh-vs-fold attribution) for ``tools/traceview.py``;
+``--metrics-every N`` adds periodic counter/histogram snapshots and a
+Prometheus text dump at exit.
 """
 from __future__ import annotations
 
@@ -44,6 +50,7 @@ if os.environ.get("REPRO_TRAIN_DEVICES"):
 
 import argparse
 import logging
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -195,6 +202,15 @@ def main(argv=None):
                     help="consecutive xi trips before a leaf is demoted to "
                          "the exact dense second moment (0 = never demote, "
                          "forced refreshes only)")
+    ap.add_argument("--trace-dir", default=None,
+                    help="record host-side kind=\"span\" timing events "
+                         "(train-step phases, checkpoint IO) here as "
+                         "JSONL — analyse with tools/traceview.py; may "
+                         "equal --telemetry-dir to share one stream")
+    ap.add_argument("--metrics-every", type=int, default=0,
+                    help="emit a kind=\"metric\" registry snapshot every "
+                         "N steps (0 = off); a Prometheus text dump is "
+                         "written to <trace-dir>/metrics.prom at exit")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--log-every", type=int, default=20)
@@ -229,6 +245,21 @@ def main(argv=None):
             auto_refresh=args.auto_refresh))
         log.info("telemetry on (dir=%s, auto_refresh=%s)",
                  args.telemetry_dir, args.auto_refresh)
+    tracer = None
+    trace_sink = None        # sink this launcher owns (closed at exit)
+    reg = None
+    if args.trace_dir is not None:
+        from repro.telemetry import MetricsRegistry, SinkConfig, \
+            TelemetrySink, Tracer
+        reg = MetricsRegistry()
+        if runtime is not None and args.trace_dir == args.telemetry_dir:
+            span_sink = runtime.sink   # one dir -> one shared stream
+        else:
+            trace_sink = span_sink = TelemetrySink(
+                SinkConfig(directory=args.trace_dir))
+        tracer = Tracer(sink=span_sink, registry=reg)
+        log.info("tracing on (dir=%s, metrics_every=%d)",
+                 args.trace_dir, args.metrics_every)
     data_cfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
                           global_batch=args.batch)
 
@@ -253,10 +284,20 @@ def main(argv=None):
             state_shardings=state_shardings,
             batch_shardings=batch_shardings,
             telemetry=runtime,
+            tracer=tracer,
+            metrics_every=args.metrics_every,
             install_signal_handler=ckpt is not None)
     finally:
         if runtime is not None:
             runtime.close()
+        if tracer is not None:
+            tracer.flush()
+            if trace_sink is not None:
+                trace_sink.close()
+            prom = Path(args.trace_dir) / "metrics.prom"
+            prom.write_text(reg.render())
+            log.info("trace events + %s written under %s",
+                     prom.name, args.trace_dir)
     if history:
         print(f"final loss: {history[-1]['loss']:.4f} "
               f"({history[-1]['step_time_s'] * 1e3:.0f} ms/step)")

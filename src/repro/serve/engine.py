@@ -51,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serve.kv_cache import NULL_BLOCK, BlockAllocator, SlotTable
+from repro.telemetry.trace import NULL_TRACER, ROOT_SPAN
 
 log = logging.getLogger(__name__)
 
@@ -67,6 +68,15 @@ class Request:
     arrival_s: float = 0.0
     first_token_s: Optional[float] = None
     done_s: Optional[float] = None
+    # span-waterfall identity (set by an engine running under a tracer;
+    # stamped into this request's kind="serve" events as the join key)
+    trace: Optional[str] = None
+    admit_s: Optional[float] = None
+
+
+def _tr(req: Request) -> dict:
+    """``trace`` field for a per-request serve event (empty if untraced)."""
+    return {"trace": req.trace} if req.trace else {}
 
 
 @dataclasses.dataclass
@@ -84,7 +94,8 @@ def _now(t0: float) -> float:
 class Engine:
     """Wave scheduler (see module docstring)."""
 
-    def __init__(self, model, params, cfg: ServeConfig, sink=None):
+    def __init__(self, model, params, cfg: ServeConfig, sink=None,
+                 tracer=None):
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -93,6 +104,26 @@ class Engine:
         self._decode = jax.jit(model.decode_step)
         self.waves = 0
         self.tokens_emitted = 0
+        self.set_tracer(tracer)
+
+    def set_tracer(self, tracer) -> None:
+        """Attach (or with ``None`` detach) a repro.telemetry Tracer:
+        each request gets a span waterfall (queued / prefill / decode
+        under a per-request root) joined to its serve events by trace
+        id, and waves become spans on a per-engine trace."""
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._tracing = tracer is not None
+        self._engine_trace = (self.tracer.new_trace("wave")
+                              if self._tracing else "")
+        self._toff = 0.0     # engine-relative -> tracer-clock offset
+        self.metrics_every = 0   # waves between registry snapshots
+
+    def _maybe_snapshot(self, now: float, step: int) -> None:
+        reg = self.tracer.registry
+        if (self.metrics_every > 0 and reg is not None
+                and self.sink is not None
+                and step % self.metrics_every == 0):
+            self.sink.emit(reg.snapshot(t_s=now, step=step))
 
     def _emit(self, event: str, t_s: float, **fields) -> None:
         if self.sink is not None:
@@ -109,10 +140,39 @@ class Engine:
     def run_wave(self, reqs: list[Request], t0: Optional[float] = None):
         assert len(reqs) <= self.cfg.slots
         t0 = time.monotonic() if t0 is None else t0
+        if self._tracing:
+            # map engine-relative seconds onto the tracer's clock and
+            # stamp a trace id on requests admitted outside run()
+            self._toff = self.tracer.now() - _now(t0)
+            for r in reqs:
+                if r.trace is None:
+                    r.trace = self.tracer.new_trace("req")
+        with self.tracer.span("wave", trace=self._engine_trace) as wsp:
+            wsp.set(wave=self.waves, n=len(reqs))
+            self._run_wave(reqs, t0)
+        self.waves += 1
+
+    def _run_wave(self, reqs: list[Request], t0: float) -> None:
+        wave_s = _now(t0)
+        if self._tracing:
+            for r in reqs:
+                r.admit_s = wave_s
+                self.tracer.record(
+                    "queued", r.arrival_s + self._toff,
+                    max(wave_s - r.arrival_s, 0.0), r.trace,
+                    parent=ROOT_SPAN, attrs={"uid": r.uid})
         tokens = self._pad_prompts(reqs)
         cache = self.model.init_cache(self.cfg.slots, self.cfg.cache_len)
+        pf0 = _now(t0)
         logits, cache = self._prefill(self.params, tokens, cache)
         toks = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+        if self._tracing:
+            pf1 = _now(t0)
+            for r in reqs:
+                self.tracer.record(
+                    "prefill", pf0 + self._toff, pf1 - pf0, r.trace,
+                    parent=ROOT_SPAN,
+                    attrs={"uid": r.uid, "tokens": len(r.prompt)})
         budget = np.zeros((self.cfg.slots,), np.int64)
         for i, r in enumerate(reqs):
             if r.max_new_tokens <= 0:
@@ -125,7 +185,7 @@ class Engine:
             r.first_token_s = _now(t0)
             self.tokens_emitted += 1
             self._emit("first_token", r.first_token_s, uid=r.uid,
-                       ttft_s=r.first_token_s - r.arrival_s)
+                       ttft_s=r.first_token_s - r.arrival_s, **_tr(r))
             if ((self.cfg.eos_id is not None and tok == self.cfg.eos_id)
                     or r.max_new_tokens == 1):
                 # EOS straight out of prefill ends the sequence here —
@@ -159,13 +219,22 @@ class Engine:
         for r in reqs:
             if not r.done:
                 self._finish(r, _now(t0))
-        self.waves += 1
 
     def _finish(self, r: Request, t_s: float) -> None:
         r.done = True
         r.done_s = t_s
         self._emit("finish", t_s, uid=r.uid, tokens=len(r.out_tokens),
-                   latency_s=t_s - r.arrival_s)
+                   latency_s=t_s - r.arrival_s, **_tr(r))
+        if self._tracing and r.trace:
+            if len(r.out_tokens) > 1 and r.first_token_s is not None:
+                self.tracer.record(
+                    "decode", r.first_token_s + self._toff,
+                    max(t_s - r.first_token_s, 0.0), r.trace,
+                    parent=ROOT_SPAN, attrs={"uid": r.uid})
+            self.tracer.record(
+                "request", r.arrival_s + self._toff,
+                max(t_s - r.arrival_s, 0.0), r.trace, span=ROOT_SPAN,
+                attrs={"uid": r.uid, "tokens": len(r.out_tokens)})
 
     def run(self, requests: list[Request],
             arrivals: Optional[list[float]] = None) -> list[Request]:
@@ -191,6 +260,7 @@ class Engine:
             self.run_wave(wave, t0=t0)
             self._emit("stats", _now(t0), queue_depth=len(pending),
                        tokens=self.tokens_emitted, slots_active=0)
+            self._maybe_snapshot(_now(t0), self.waves)
         return requests
 
 
@@ -238,7 +308,8 @@ class _Slot:
 class ContinuousEngine:
     """Continuous-batching scheduler over the paged KV cache."""
 
-    def __init__(self, model, params, cfg: ContinuousConfig, sink=None):
+    def __init__(self, model, params, cfg: ContinuousConfig, sink=None,
+                 tracer=None):
         if not hasattr(model, "decode_paged"):
             raise TypeError(f"{type(model).__name__} has no paged decode "
                             f"path; ContinuousEngine needs a KV-cache "
@@ -264,6 +335,7 @@ class ContinuousEngine:
         self._ready: "deque[Request]" = deque()
         self._rr = 0                                # prefill round-robin
         self._above_watermark = False
+        self.set_tracer(tracer)
 
         def _decode_fn(params, pool, tokens, tables, positions):
             logits, pool = model.decode_paged(params, pool, tokens,
@@ -282,6 +354,27 @@ class ContinuousEngine:
         self._prefill_jit = jax.jit(_prefill_fn, donate_argnums=(1,))
 
     # -- telemetry ---------------------------------------------------------
+    def set_tracer(self, tracer) -> None:
+        """Attach (or with ``None`` detach) a repro.telemetry Tracer:
+        every request gets a span waterfall (queued / admitted /
+        prefill_chunk / decode under a per-request root span) joined to
+        its serve events by trace id, engine steps become spans on a
+        per-engine trace, and — when the tracer carries a registry —
+        request/token counters and a latency histogram are kept."""
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._tracing = tracer is not None
+        self._engine_trace = (self.tracer.new_trace("engine")
+                              if self._tracing else "")
+        self._toff = 0.0     # engine-relative -> tracer-clock offset
+        self.metrics_every = 0   # engine steps between registry snapshots
+
+    def _maybe_snapshot(self, now: float, step: int) -> None:
+        reg = self.tracer.registry
+        if (self.metrics_every > 0 and reg is not None
+                and self.sink is not None
+                and step % self.metrics_every == 0):
+            self.sink.emit(reg.snapshot(t_s=now, step=step))
+
     def _emit(self, event: str, t_s: float, **fields) -> None:
         if self.sink is not None:
             self.sink.emit({"kind": "serve", "event": event, "t_s": t_s,
@@ -349,8 +442,15 @@ class ContinuousEngine:
             slot.prompt_done = 0
             slot.budget = req.max_new_tokens
             slot.reserved_left = need
+            if self._tracing and req.trace:
+                req.admit_s = now
+                self.tracer.record(
+                    "queued", req.arrival_s + self._toff,
+                    max(now - req.arrival_s, 0.0), req.trace,
+                    parent=ROOT_SPAN, attrs={"uid": req.uid})
             self._emit("admit", now, uid=req.uid,
-                       queue_depth=len(self._ready), occupancy=occ)
+                       queue_depth=len(self._ready), occupancy=occ,
+                       **_tr(req))
 
     def _grow(self, slot: _Slot, upto_tokens: int) -> None:
         need = self.alloc.blocks_for(upto_tokens) - len(slot.table.blocks)
@@ -377,14 +477,28 @@ class ContinuousEngine:
             return False
         req = slot.req
         p0 = slot.prompt_done
+        traced = self._tracing and req.trace
+        if traced and p0 == 0 and req.admit_s is not None:
+            # admission-to-first-prefill gap (slot wait + scheduling)
+            self.tracer.record(
+                "admitted", req.admit_s + self._toff,
+                max(now - req.admit_s, 0.0), req.trace,
+                parent=ROOT_SPAN, attrs={"uid": req.uid})
         real = min(self.cfg.prefill_chunk, len(req.prompt) - p0)
         padded = _bucket(real, self.cfg.prefill_chunk)
         self._grow(slot, p0 + padded)
         chunk = np.full((1, padded), self.cfg.pad_id, np.int32)
         chunk[0, :real] = req.prompt[p0:p0 + real]
+        tw0 = time.monotonic()
         tok, self.pool = self._prefill_jit(
             self.params, self.pool, chunk, slot.table.padded(self.nbt),
             jnp.asarray(p0, jnp.int32), jnp.asarray(real - 1, jnp.int32))
+        if traced:
+            dur = time.monotonic() - tw0   # host dispatch wall time
+            self.tracer.record(
+                "prefill_chunk", self.tracer.now() - dur, dur, req.trace,
+                parent=ROOT_SPAN,
+                attrs={"uid": req.uid, "p0": p0, "tokens": real})
         slot.prompt_done += real
         if slot.prompt_done < len(req.prompt):
             return True
@@ -399,7 +513,7 @@ class ContinuousEngine:
         req.first_token_s = now
         self.tokens_emitted += 1
         self._emit("first_token", now, uid=req.uid,
-                   ttft_s=now - req.arrival_s)
+                   ttft_s=now - req.arrival_s, **_tr(req))
         if ((self.cfg.eos_id is not None and tok == self.cfg.eos_id)
                 or req.max_new_tokens == 1):
             self._finish(slot, now)
@@ -443,6 +557,35 @@ class ContinuousEngine:
         return True
 
     # -- lifecycle ---------------------------------------------------------
+    def _record_waterfall(self, req: Request, now: float) -> None:
+        """The per-request root span (+ decode phase) at end of life —
+        earlier phases (queued/admitted/prefill_chunk) were recorded as
+        they happened under the same trace id."""
+        if len(req.out_tokens) > 1 and req.first_token_s is not None:
+            self.tracer.record(
+                "decode", req.first_token_s + self._toff,
+                max(now - req.first_token_s, 0.0), req.trace,
+                parent=ROOT_SPAN, attrs={"uid": req.uid})
+        attrs = {"uid": req.uid, "tokens": len(req.out_tokens)}
+        if req.rejected:
+            attrs["rejected"] = True
+        self.tracer.record(
+            "request", req.arrival_s + self._toff,
+            max(now - req.arrival_s, 0.0), req.trace, span=ROOT_SPAN,
+            attrs=attrs)
+        reg = self.tracer.registry
+        if reg is not None:
+            labels = {"scheduler": "continuous"}
+            reg.counter("serve_requests_total",
+                        help="finished requests (incl. rejected)").inc(
+                            1, **labels)
+            reg.counter("serve_tokens_total",
+                        help="generated tokens").inc(
+                            len(req.out_tokens), **labels)
+            reg.histogram("serve_request_latency_seconds",
+                          help="arrival-to-finish latency").observe(
+                              max(now - req.arrival_s, 0.0), **labels)
+
     def _finish(self, slot: _Slot, now: float) -> None:
         req = slot.req
         req.done = True
@@ -450,7 +593,9 @@ class ContinuousEngine:
         self.completed += 1
         self._emit("finish", now, uid=req.uid, tokens=len(req.out_tokens),
                    latency_s=now - req.arrival_s,
-                   occupancy=self.alloc.occupancy())
+                   occupancy=self.alloc.occupancy(), **_tr(req))
+        if self._tracing and req.trace:
+            self._record_waterfall(req, now)
         if slot.table.blocks:
             self.alloc.free(slot.table.blocks)
         if slot.reserved_left:
@@ -464,9 +609,12 @@ class ContinuousEngine:
     def step(self, now: float) -> bool:
         """One scheduler step: admit, one prefill chunk, one decode step
         for every live row.  Returns whether any work ran."""
-        self._admit(now)
-        did = self._prefill_one(now)
-        did = self._decode_all(now) or did
+        with self.tracer.span("engine_step",
+                              trace=self._engine_trace) as sp:
+            self._admit(now)
+            did = self._prefill_one(now)
+            did = self._decode_all(now) or did
+            sp.set(step=self.steps + 1)
         self.steps += 1
         if self.sink is not None and self.steps % self.cfg.stats_every == 0:
             self._emit("stats", now, step=self.steps,
@@ -476,6 +624,7 @@ class ContinuousEngine:
                                         for s in self.slots),
                        tokens=self.tokens_emitted,
                        tok_per_s=self.tokens_emitted / max(now, 1e-9))
+        self._maybe_snapshot(now, self.steps)
         return did
 
     def run(self, requests: list[Request],
@@ -486,6 +635,8 @@ class ContinuousEngine:
         for r in requests:
             self._validate(r)
         t0 = time.monotonic()
+        if self._tracing:
+            self._toff = self.tracer.now() - _now(t0)
         if arrivals is None:
             arrivals = [0.0] * len(requests)
         order = sorted(range(len(requests)), key=lambda i: arrivals[i])
@@ -497,12 +648,20 @@ class ContinuousEngine:
             now = _now(t0)
             while pending and pending[0][0] <= now:
                 _, req = pending.popleft()
+                if self._tracing and req.trace is None:
+                    req.trace = self.tracer.new_trace("req")
                 if 0 < self.cfg.max_queue <= len(self._ready):
                     req.rejected = True
                     req.done = True
                     req.done_s = now
                     self._emit("reject", now, uid=req.uid,
-                               queue_depth=len(self._ready))
+                               queue_depth=len(self._ready), **_tr(req))
+                    if self._tracing and req.trace:
+                        self.tracer.record(
+                            "queued", req.arrival_s + self._toff,
+                            max(now - req.arrival_s, 0.0), req.trace,
+                            parent=ROOT_SPAN, attrs={"uid": req.uid})
+                        self._record_waterfall(req, now)
                     continue
                 self._ready.append(req)
             if not self.step(now) and not self._ready:

@@ -82,7 +82,29 @@ JSONL event schema (version 1; authoritative machine form in
       slots_active / tok_per_s on stats lines, and reason on admission
       backoff ("occupancy_watermark" | "reservation").  The continuous
       engine's admission gate is driven by the same occupancy signal it
-      emits here.
+      emits here.  With a tracer attached, per-request events also
+      carry ``trace`` — the span-waterfall join key (below).
+  kind="span"       — one host-side timing span (trace.py; train-loop
+      phases, engine steps, request lifecycles, checkpoint IO):
+      name, trace (waterfall id), span (unique within the trace),
+      t0_s / dur_s (seconds on the emitting tracer's monotonic clock);
+      plus parent (nesting), step, uid, attrs (free-form dict, e.g. the
+      refresh-vs-fold ``phase`` on train_step spans), and truncated
+      (true when the preemption drain closed the span early).
+  kind="metric"     — periodic MetricsRegistry snapshot (metrics.py):
+      t_s, counters / gauges / histograms keyed by PROMETHEUS sample
+      name (``name{label="v"}``, identical to the text exposition);
+      histogram values are {buckets, counts, sum, count}; plus step.
+
+Trace-id join contract (kind="span" x kind="serve"): each request the
+serving engines process under a tracer gets a trace id, stamped into BOTH
+its span waterfall (request/queued/admitted/prefill_chunk/decode spans
+sharing ``trace``, phases parented under the fixed span id "root") and
+its per-request serve events (optional ``trace`` field on admit /
+first_token / finish / reject).  A consumer joins the two streams on the
+trace id alone; ``trace.check_events`` (CI: ``tools/traceview.py
+--check``) enforces that every finished request reconstructs a complete
+queued→finish waterfall.
 """
 from repro.telemetry.collect import (chain_guard_state, get_refresh_every,
                                      named_guard_states,
@@ -92,7 +114,14 @@ from repro.telemetry.collect import (chain_guard_state, get_refresh_every,
                                      telemetry_metrics)
 from repro.telemetry.controller import (CadenceChange, ControllerConfig,
                                         RefreshController)
+from repro.telemetry.metrics import (DEFAULT_BUCKETS, Counter, Gauge,
+                                     Histogram, MetricsRegistry,
+                                     default_registry, parse_prometheus)
 from repro.telemetry.runtime import TelemetryRuntime
+from repro.telemetry.trace import (NULL_TRACER, NullTracer, Tracer,
+                                   check_events, chrome_trace,
+                                   format_breakdown, format_span_stats,
+                                   load_events, span_stats, step_breakdown)
 from repro.telemetry.sink import (EVENT_SCHEMA, SCHEMA_VERSION, SinkConfig,
                                   TelemetrySink, validate_dir,
                                   validate_event, validate_file)

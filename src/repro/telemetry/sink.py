@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import threading
 import time
 from collections import deque
@@ -95,12 +96,33 @@ EVENT_SCHEMA = {
     # periodic "stats" lines.  ``t_s`` is seconds since the engine run
     # started; ``tokens`` counters are CUMULATIVE on "stats" lines and
     # per-request on "finish" lines.
+    # ``trace`` joins a request's serve events to its span waterfall
+    # (kind="span" events sharing the trace id) — see telemetry/trace.py.
     "serve": {
         "required": {"event": str, "t_s": _NUM, "scheduler": str},
         "optional": {"uid": int, "step": int, "queue_depth": int,
                      "ttft_s": _NUM, "latency_s": _NUM, "tokens": int,
                      "tok_per_s": _NUM, "occupancy": _NUM,
-                     "slots_active": int, "reason": str},
+                     "slots_active": int, "reason": str, "trace": str},
+    },
+    # host-side timing spans (telemetry/trace.py): ``trace`` groups a
+    # waterfall (one train run / serve request / engine), ``span`` is
+    # unique within it, ``parent`` nests.  ``t0_s``/``dur_s`` are seconds
+    # on the emitting tracer's monotonic clock.  ``truncated`` marks a
+    # span the preemption drain closed early.
+    "span": {
+        "required": {"name": str, "trace": str, "span": str,
+                     "t0_s": _NUM, "dur_s": _NUM},
+        "optional": {"parent": str, "step": int, "uid": int,
+                     "truncated": bool, "attrs": dict},
+    },
+    # periodic registry snapshot (telemetry/metrics.py): sample keys are
+    # the Prometheus sample names, so the JSONL and text expositions
+    # agree; histogram values carry buckets/counts/sum/count.
+    "metric": {
+        "required": {"t_s": _NUM, "counters": dict, "gauges": dict,
+                     "histograms": dict},
+        "optional": {"step": int},
     },
 }
 
@@ -164,11 +186,21 @@ def validate_file(path: "str | Path") -> int:
     return n
 
 
+def _file_index(p: Path) -> int:
+    """Rotation sequence number parsed from ``<prefix>-NNNNN.jsonl``
+    (-1 for files that don't carry one)."""
+    try:
+        return int(p.stem.rsplit("-", 1)[-1])
+    except ValueError:
+        return -1
+
+
 def validate_dir(directory: "str | Path", prefix: str = "events") -> int:
     """Validate every ``<prefix>-*.jsonl`` under ``directory``; returns
     the total event count (0 when no files exist)."""
     total = 0
-    for p in sorted(Path(directory).glob(f"{prefix}-*.jsonl")):
+    for p in sorted(Path(directory).glob(f"{prefix}-*.jsonl"),
+                    key=_file_index):
         total += validate_file(p)
     return total
 
@@ -202,7 +234,14 @@ class TelemetrySink:
         self._error: Optional[BaseException] = None
         self._file = None
         self._bytes = 0
-        self._index = len(list(self.directory.glob(f"{cfg.prefix}-*.jsonl")))
+        # Monotonic rotation sequence: resume PAST the highest existing
+        # index, not at the file count — with a gap in the sequence
+        # (pruned early files) count-based numbering would collide with a
+        # live later file and interleave two streams, and ordering in
+        # validate_dir / paths() would be ambiguous.
+        self._index = max((_file_index(p) for p in
+                           self.directory.glob(f"{cfg.prefix}-*.jsonl")),
+                          default=-1) + 1
         self._closed = False
         self._stop = False
         self._thread = threading.Thread(target=self._worker, daemon=True)
@@ -247,11 +286,17 @@ class TelemetrySink:
         self._raise_if_failed()
 
     def paths(self) -> "list[Path]":
-        return sorted(self.directory.glob(f"{self.cfg.prefix}-*.jsonl"))
+        return sorted(self.directory.glob(f"{self.cfg.prefix}-*.jsonl"),
+                      key=_file_index)
 
     # -- writer thread -----------------------------------------------------
     def _open_next(self):
         if self._file is not None:
+            # rotation is the file's last write: flush + fsync before
+            # letting go, so a crash right after rotation can't lose the
+            # tail of a file readers already consider complete
+            self._file.flush()
+            os.fsync(self._file.fileno())
             self._file.close()
         path = self.directory / f"{self.cfg.prefix}-{self._index:05d}.jsonl"
         self._index += 1

@@ -40,6 +40,7 @@ from repro.checkpoint import CheckpointConfig, CheckpointManager
 from repro.core import GradientTransformation
 from repro.data import DataConfig, DataIterator
 from repro.distributed.straggler import StragglerMonitor
+from repro.telemetry.trace import NULL_TRACER
 from repro.train.steps import TrainState, build_train_step
 
 log = logging.getLogger(__name__)
@@ -67,6 +68,9 @@ def train(model, opt: GradientTransformation, data_cfg: DataConfig,
           batch_shardings=None,
           metric_hook: Optional[Callable[[int, dict], None]] = None,
           telemetry=None,
+          tracer=None,
+          metrics_every: int = 0,
+          registry=None,
           install_signal_handler: bool = False) -> tuple[TrainState, list]:
     """Returns (final_state, history of metric dicts).
 
@@ -79,8 +83,38 @@ def train(model, opt: GradientTransformation, data_cfg: DataConfig,
     checkpoint manifests (saved with every checkpoint, restored on
     resume), and its sink is flushed by the preemption handler chain and
     at loop exit.  The caller owns the runtime and closes it.
+
+    ``tracer``: optional :class:`repro.telemetry.Tracer`.  Each step
+    emits a host-side ``train_step`` span with ``data_wait`` /
+    ``step_dispatch`` / ``device_sync`` children, attributed
+    refresh-vs-fold from the in-jit snapshot counters when the optimizer
+    collects them; checkpoint saves/restores get their own spans.  Spans
+    never enter jit — the step function is untouched, so the
+    bitwise-default-chain contract holds with tracing on.  The
+    preemption handler chain drains open spans (``"truncated": true``)
+    before the final checkpoint.  The caller owns the tracer's sink.
+
+    ``metrics_every``: > 0 emits a ``kind="metric"`` registry snapshot
+    (train_steps_total, train_step_seconds, train_loss) every N steps to
+    the tracer's sink (or the telemetry runtime's).  ``registry``
+    defaults to the tracer's, else the process-wide default.
     """
     ckpt = CheckpointManager(loop_cfg.ckpt) if loop_cfg.ckpt else None
+    tr = tracer if tracer is not None else NULL_TRACER
+    if ckpt is not None and tracer is not None:
+        ckpt.tracer = tracer
+    reg = None
+    metric_sink = None
+    if metrics_every > 0:
+        from repro.telemetry import metrics as metrics_mod
+        reg = registry if registry is not None else (
+            tracer.registry if tracer is not None
+            and tracer.registry is not None
+            else metrics_mod.default_registry())
+        metric_sink = (tracer.sink if tracer is not None
+                       and tracer.sink is not None
+                       else telemetry.sink if telemetry is not None
+                       else None)
 
     if state is None:
         params = model.init(jax.random.PRNGKey(0))
@@ -146,11 +180,20 @@ def train(model, opt: GradientTransformation, data_cfg: DataConfig,
         latest = {"snap": (state, start_step, _meta())}
 
         def _flush_state():
-            # rides the preemption handler chain: drain the telemetry
-            # sink to disk, then hand the state + controller meta to the
-            # blocking checkpoint flush.  Best-effort: a sick sink (disk
-            # full on the telemetry volume) must never cost the
-            # preemption CHECKPOINT.
+            # rides the preemption handler chain: drain open spans as
+            # truncated events and the telemetry sink to disk, then hand
+            # the state + controller meta to the blocking checkpoint
+            # flush.  Best-effort: a sick sink (disk full on the
+            # telemetry volume) must never cost the preemption
+            # CHECKPOINT.  Both drains are lock-free (dict ops + counter
+            # spins), so a SIGTERM that interrupted emit can't deadlock.
+            if tracer is not None:
+                try:
+                    tracer.drain_open()
+                    tracer.flush()
+                except Exception:  # noqa: BLE001 — checkpoint comes first
+                    log.exception("span drain failed during preemption; "
+                                  "saving checkpoint anyway")
             if telemetry is not None:
                 try:
                     telemetry.flush()
@@ -161,16 +204,27 @@ def train(model, opt: GradientTransformation, data_cfg: DataConfig,
 
         ckpt.install_preemption_handler(_flush_state)
 
+    run_trace = tr.new_trace("train") if tracer is not None else None
+    loop_t0 = time.monotonic()
     try:
         for step in range(start_step, loop_cfg.total_steps):
-            batch = next(data)
-            batch.pop("step", None)
-            if batch_shardings is not None:
-                batch = jax.device_put(batch, batch_shardings)
-            monitor.start()
-            state, metrics = step_fn(state, batch)
-            jax.block_until_ready(metrics["loss"])
-            dt = monitor.stop()
+            with tr.span("train_step", trace=run_trace,
+                         step=step + 1) as step_span:
+                with tr.span("data_wait"):
+                    batch = next(data)
+                    batch.pop("step", None)
+                    if batch_shardings is not None:
+                        batch = jax.device_put(batch, batch_shardings)
+                monitor.start()
+                with tr.span("step_dispatch"):
+                    state, metrics = step_fn(state, batch)
+                with tr.span("device_sync"):
+                    jax.block_until_ready(metrics["loss"])
+                dt = monitor.stop()
+                if tracer is not None:
+                    phase = _refresh_phase(metrics)
+                    if phase is not None:
+                        step_span.set(phase=phase)
 
             if telemetry is not None:
                 # fetch snapshots / emit events / retune cadences; the
@@ -180,6 +234,19 @@ def train(model, opt: GradientTransformation, data_cfg: DataConfig,
 
             if ckpt is not None and install_signal_handler:
                 latest["snap"] = (state, step + 1, _meta())
+
+            if reg is not None:
+                reg.counter("train_steps_total",
+                            help="train steps completed").inc()
+                reg.histogram("train_step_seconds",
+                              help="wall time per train step").observe(dt)
+                if (step + 1) % metrics_every == 0:
+                    reg.gauge("train_loss",
+                              help="loss at the last snapshot").set(
+                                  float(np.asarray(metrics["loss"])))
+                    if metric_sink is not None:
+                        metric_sink.emit(reg.snapshot(
+                            t_s=time.monotonic() - loop_t0, step=step + 1))
 
             if (step + 1) % loop_cfg.log_every == 0 or step == start_step:
                 m = {k: float(np.asarray(v)) for k, v in metrics.items()}
@@ -192,7 +259,9 @@ def train(model, opt: GradientTransformation, data_cfg: DataConfig,
                          m.get("loss", float("nan")), dt)
 
             if ckpt is not None and ckpt.should_save(step + 1):
-                ckpt.save(state, step + 1, extra_meta=_meta())
+                with tr.span("checkpoint_save", trace=run_trace,
+                             step=step + 1):
+                    ckpt.save(state, step + 1, extra_meta=_meta())
     finally:
         data.close()
         if ckpt is not None:
@@ -208,8 +277,33 @@ def train(model, opt: GradientTransformation, data_cfg: DataConfig,
                 # preemption path: a sick sink must neither mask an
                 # in-flight exception nor cost the final checkpoint
                 log.exception("telemetry flush failed at loop exit")
+        if tracer is not None:
+            try:
+                tracer.flush()
+            except Exception:  # noqa: BLE001 — same rule
+                log.exception("tracer flush failed at loop exit")
 
     if ckpt is not None:
-        ckpt.save(state, loop_cfg.total_steps, blocking=True,
-                  extra_meta=_meta())
+        with tr.span("checkpoint_save", trace=run_trace,
+                     step=loop_cfg.total_steps):
+            ckpt.save(state, loop_cfg.total_steps, blocking=True,
+                      extra_meta=_meta())
+        if tracer is not None:
+            try:
+                tracer.flush()
+            except Exception:  # noqa: BLE001
+                log.exception("tracer flush failed after final save")
     return state, list(history)
+
+
+def _refresh_phase(metrics: dict) -> Optional[str]:
+    """Refresh-vs-fold attribution for the step span, read from the
+    in-jit snapshot counters the optimizer already computes
+    (``telemetry/<group>/did_refresh`` in the step metrics; absent when
+    the optimizer collects no telemetry).  Host-side read of an
+    already-synced scalar — nothing is added inside jit."""
+    flags = [v for k, v in metrics.items() if k.endswith("/did_refresh")]
+    if not flags:
+        return None
+    return ("refresh" if any(bool(np.asarray(f)) for f in flags)
+            else "fold")

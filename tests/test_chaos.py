@@ -226,3 +226,59 @@ def test_device_loss_remesh_restores_under_new_mesh(tmp_path):
     assert dict(mesh.shape) == {"data": 3, "model": 2}
     np.testing.assert_array_equal(np.asarray(state["w"]), tree["w"])
     assert state["w"].sharding.mesh.devices.size == 6
+
+
+# ---------------------------------------------------------------------------
+# SIGTERM with tracing live -> open spans drained truncated, sink flushed
+# ---------------------------------------------------------------------------
+
+def test_sigterm_drains_open_spans_truncated(tmp_path):
+    """The preemption handler chain drains spans still open at SIGTERM
+    as ``"truncated": true`` events and flushes the sink BEFORE the
+    checkpoint + re-raise, so the trace survives the kill.  The hook
+    opens a span and dies inside it — deterministic, unlike killing
+    mid-step."""
+    total, kill_at = 10, 4
+    trace_dir = str(tmp_path / "trace")
+    ck_dir = str(tmp_path / "ck")
+
+    script = SETUP + f"""
+import os, signal
+from repro.checkpoint import CheckpointConfig
+from repro.telemetry import SinkConfig, TelemetrySink, Tracer
+
+sink = TelemetrySink(SinkConfig(directory={trace_dir!r}))
+tracer = Tracer(sink=sink)
+
+_cm = tracer.span("hook")   # module-held: must stay OPEN at kill time
+def hook(step, m):
+    if step == {kill_at}:
+        _cm.__enter__()
+        os.kill(os.getpid(), signal.SIGTERM)
+
+train(make_model(), make_opt(), DATA,
+      LoopConfig(total_steps={total}, log_every=1,
+                 ckpt=CheckpointConfig(directory={ck_dir!r},
+                                       save_every=10**9,
+                                       async_save=False)),
+      tracer=tracer, metric_hook=hook, install_signal_handler=True)
+raise SystemExit("unreachable: SIGTERM should have killed the loop")
+"""
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == -signal.SIGTERM, proc.stderr[-2000:]
+
+    from repro.telemetry import check_events, load_events, validate_dir
+
+    assert validate_dir(trace_dir) > 0      # flushed AND schema-valid
+    events = load_events(trace_dir)
+    assert check_events(events) == []
+    spans = [e for e in events if e["kind"] == "span"]
+    # every step up to the kill closed its full span set on disk
+    steps = [e for e in spans if e["name"] == "train_step"]
+    assert {e["step"] for e in steps} == set(range(1, kill_at + 1))
+    # the span open at SIGTERM was drained, marked truncated, exactly once
+    hook_spans = [e for e in spans if e["name"] == "hook"]
+    assert len(hook_spans) == 1
+    assert hook_spans[0]["truncated"] is True

@@ -1,0 +1,208 @@
+"""Metrics registry suite (repro.telemetry.metrics).
+
+Pins the exposition contract from both surfaces:
+  * counter / gauge / histogram accounting, including the ``le``
+    boundary semantics (a value EQUAL to a bucket bound lands in that
+    bucket) and label canonicalisation;
+  * ``MetricsRegistry.snapshot`` produces a schema-valid
+    ``kind="metric"`` event whose sample keys are EXACTLY the
+    Prometheus sample names;
+  * ``render()`` round-trips through ``parse_prometheus`` — types,
+    help text, cumulative buckets, ``_sum`` / ``_count``;
+  * the train loop emits one snapshot every ``metrics_every`` steps
+    into the shared sink.
+"""
+import jax.numpy as jnp
+import pytest
+
+from repro.config import OptimizerConfig
+from repro.core import build_optimizer
+from repro.data import DataConfig
+from repro.telemetry import (MetricsRegistry, SinkConfig, TelemetrySink,
+                             Tracer, load_events, parse_prometheus,
+                             validate_dir)
+from repro.telemetry.metrics import DEFAULT_BUCKETS, default_registry
+from repro.telemetry.sink import validate_event
+from repro.train import LoopConfig, train
+
+
+class TestAccounting:
+    def test_counter(self):
+        reg = MetricsRegistry()
+        c = reg.counter("requests_total", "served requests")
+        c.inc()
+        c.inc(2.5)
+        assert c.value() == 3.5
+        with pytest.raises(ValueError):
+            c.inc(-1)
+
+    def test_counter_labels_are_independent_and_canonical(self):
+        c = MetricsRegistry().counter("toks_total")
+        c.inc(3, scheduler="wave")
+        c.inc(5, scheduler="continuous")
+        # kwarg order must not matter (labels are sorted)
+        c.inc(1, b="2", a="1")
+        c.inc(1, a="1", b="2")
+        assert c.value(scheduler="wave") == 3
+        assert c.value(scheduler="continuous") == 5
+        assert c.value(a="1", b="2") == 2
+        assert 'toks_total{a="1",b="2"}' in c.samples()
+
+    def test_gauge_sets(self):
+        g = MetricsRegistry().gauge("queue_depth")
+        g.set(4)
+        g.set(2)
+        assert g.value() == 2
+
+    def test_histogram_le_boundary(self):
+        """A value equal to a bucket bound counts in THAT bucket
+        (Prometheus le= is inclusive)."""
+        h = MetricsRegistry().histogram("lat", buckets=(0.1, 1.0))
+        h.observe(0.1)      # == first bound -> first bucket
+        h.observe(0.5)
+        h.observe(5.0)      # overflow
+        assert h._counts[""] == [1, 1, 1]
+        assert h.count() == 3
+        assert h.sum() == pytest.approx(5.6)
+        s = h.samples()["lat"]
+        assert s["buckets"] == [0.1, 1.0]
+        assert s["counts"] == [1, 1, 1]
+
+    def test_histogram_bad_buckets(self):
+        reg = MetricsRegistry()
+        with pytest.raises(ValueError):
+            reg.histogram("h", buckets=(1.0, 1.0))
+        with pytest.raises(ValueError):
+            reg.histogram("h2", buckets=(2.0, 1.0))
+
+
+class TestRegistry:
+    def test_get_or_create_returns_same_object(self):
+        reg = MetricsRegistry()
+        assert reg.counter("c") is reg.counter("c")
+
+    def test_type_conflict_raises(self):
+        reg = MetricsRegistry()
+        reg.counter("x")
+        with pytest.raises(ValueError, match="already registered"):
+            reg.gauge("x")
+
+    def test_bucket_conflict_raises(self):
+        reg = MetricsRegistry()
+        reg.histogram("h", buckets=(0.1, 1.0))
+        with pytest.raises(ValueError, match="different buckets"):
+            reg.histogram("h", buckets=(0.2, 1.0))
+        # same buckets is fine
+        reg.histogram("h", buckets=(0.1, 1.0))
+
+    def test_bad_names_rejected(self):
+        reg = MetricsRegistry()
+        with pytest.raises(ValueError):
+            reg.counter("bad name")
+        with pytest.raises(ValueError):
+            reg.counter("c").inc(1, **{"bad-label": "v"})
+
+    def test_default_registry_is_shared(self):
+        assert default_registry() is default_registry()
+
+
+class TestExposition:
+    def _populated(self):
+        reg = MetricsRegistry()
+        reg.counter("steps_total", "steps run").inc(7)
+        reg.gauge("loss").set(0.125, split="train")
+        h = reg.histogram("step_seconds", "step wall",
+                          buckets=(0.1, 1.0))
+        for v in (0.05, 0.5, 2.0):
+            h.observe(v)
+        return reg
+
+    def test_snapshot_is_schema_valid_metric_event(self):
+        ev = self._populated().snapshot(t_s=1.25, step=7)
+        validate_event(ev | {"schema": 1})
+        assert ev["kind"] == "metric"
+        assert ev["step"] == 7
+        assert ev["counters"]["steps_total"] == 7
+        assert ev["gauges"]['loss{split="train"}'] == 0.125
+        assert ev["histograms"]["step_seconds"]["count"] == 3
+
+    def test_render_parse_round_trip(self):
+        reg = self._populated()
+        parsed = parse_prometheus(reg.render())
+        assert parsed["types"] == {"steps_total": "counter",
+                                   "loss": "gauge",
+                                   "step_seconds": "histogram"}
+        assert parsed["help"]["steps_total"] == "steps run"
+        s = parsed["samples"]
+        assert s["steps_total"] == 7
+        assert s['loss{split="train"}'] == 0.125
+        # cumulative buckets + sum/count
+        assert s['step_seconds_bucket{le="0.1"}'] == 1
+        assert s['step_seconds_bucket{le="1"}'] == 2
+        assert s['step_seconds_bucket{le="+Inf"}'] == 3
+        assert s["step_seconds_sum"] == pytest.approx(2.55)
+        assert s["step_seconds_count"] == 3
+
+    def test_snapshot_keys_match_prometheus_sample_names(self):
+        """The JSONL snapshot and the text exposition must agree on
+        sample naming — the cross-surface contract."""
+        reg = self._populated()
+        ev = reg.snapshot(t_s=0.0)
+        parsed = parse_prometheus(reg.render())
+        for k in list(ev["counters"]) + list(ev["gauges"]):
+            assert k in parsed["samples"], k
+        for k in ev["histograms"]:
+            assert f'{k}_count' in parsed["samples"] or \
+                any(sk.startswith(k + "_count{")
+                    for sk in parsed["samples"])
+
+    def test_label_escaping_round_trips(self):
+        reg = MetricsRegistry()
+        reg.counter("c").inc(1, path='a"b\\c')
+        parsed = parse_prometheus(reg.render())
+        assert parsed["samples"]['c{path="a\\"b\\\\c"}'] == 1
+
+    def test_default_buckets_cover_latency_range(self):
+        assert DEFAULT_BUCKETS[0] <= 0.001
+        assert DEFAULT_BUCKETS[-1] >= 10.0
+        assert list(DEFAULT_BUCKETS) == sorted(set(DEFAULT_BUCKETS))
+
+
+# ---------------------------------------------------------------------------
+# train-loop cadence
+# ---------------------------------------------------------------------------
+
+class _QuadraticModel:
+    def init(self, key):
+        del key
+        return {"w": jnp.ones((8, 8))}
+
+    def loss(self, params, batch):
+        del batch
+        l = jnp.sum(jnp.square(params["w"])) * 1e-3
+        return l, {"loss": l}
+
+
+def test_train_loop_metric_cadence(tmp_path):
+    """6 steps with metrics_every=2 -> 3 kind="metric" snapshots in the
+    sink, carrying the train counters/histograms."""
+    sink = TelemetrySink(SinkConfig(directory=str(tmp_path)))
+    reg = MetricsRegistry()
+    tracer = Tracer(sink=sink, registry=reg)
+    opt = build_optimizer(OptimizerConfig(name="adamw",
+                                          schedule="constant", lr=1e-3))
+    train(_QuadraticModel(), opt,
+          DataConfig(vocab=8, seq_len=4, global_batch=2),
+          LoopConfig(total_steps=6, log_every=3),
+          tracer=tracer, metrics_every=2)
+    sink.close()
+    assert validate_dir(tmp_path) > 0
+    snaps = [e for e in load_events(tmp_path) if e["kind"] == "metric"]
+    assert len(snaps) == 3
+    assert [s["step"] for s in snaps] == [2, 4, 6]
+    last = snaps[-1]
+    assert last["counters"]["train_steps_total"] == 6
+    assert last["histograms"]["train_step_seconds"]["count"] == 6
+    assert reg.counter("train_steps_total").value() == 6
+    # the gauge tracks the latest loss
+    assert "train_loss" in last["gauges"]

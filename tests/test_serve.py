@@ -317,3 +317,91 @@ def test_request_churn_never_recompiles_decode(model_and_params):
     assert eng._prefill_jit._cache_size() <= 3   # buckets 8/16/32
     eng.run(_reqs([6, 14, 27], [4, 3, 5], seed=8))
     assert eng._decode_jit._cache_size() == 1
+
+
+# ---------------------------------------------------------------------------
+# span waterfalls (trace-id join contract)
+# ---------------------------------------------------------------------------
+
+class TestWaterfalls:
+    def _run_traced(self, tmp_path, engine, reqs, **run_kw):
+        from repro.telemetry import MetricsRegistry, Tracer
+        sink = TelemetrySink(SinkConfig(directory=str(tmp_path)))
+        tracer = Tracer(sink=sink, registry=MetricsRegistry())
+        engine.sink = sink
+        engine.set_tracer(tracer)
+        engine.run(reqs, **run_kw)
+        tracer.flush()
+        sink.flush()
+        sink.close()
+        from repro.telemetry import load_events
+        assert validate_dir(tmp_path) > 0
+        return load_events(tmp_path), tracer
+
+    def test_continuous_requests_reconstruct_complete_waterfalls(
+            self, model_and_params, tmp_path):
+        from repro.telemetry import check_events
+        from repro.telemetry.trace import ROOT_SPAN
+        model, params = model_and_params
+        reqs = _reqs([5, 17, 33, 9, 40], [6, 3, 5, 1, 4])
+        events, tracer = self._run_traced(tmp_path,
+                                          _cont(model, params), reqs)
+        assert check_events(events) == []
+        spans = [e for e in events if e["kind"] == "span"]
+        finishes = [e for e in events
+                    if e["kind"] == "serve" and e["event"] == "finish"]
+        assert len(finishes) == len(reqs)
+        for f in finishes:
+            # every finish joins its waterfall by trace id alone
+            mine = [s for s in spans if s["trace"] == f["trace"]]
+            names = {s["name"] for s in mine}
+            assert {"request", "queued"} <= names
+            assert "prefill_chunk" in names
+            root = next(s for s in mine if s["name"] == "request")
+            assert root["span"] == ROOT_SPAN
+            assert root["uid"] == f["uid"]
+            assert root["attrs"]["tokens"] == f["tokens"]
+            # phases nest under the root and inside its window
+            for s in mine:
+                if s is root:
+                    continue
+                assert s["parent"] == ROOT_SPAN
+                assert s["t0_s"] >= root["t0_s"] - 1e-6
+        # chunked prefill: the 33/40-token prompts crossed prefill_chunk=32
+        chunky = [f["trace"] for f in finishes if f["uid"] in (2, 4)]
+        for t in chunky:
+            n = sum(1 for s in spans
+                    if s["trace"] == t and s["name"] == "prefill_chunk")
+            assert n == 2
+        # registry rolled up the served requests
+        reg = tracer.registry
+        assert reg.counter("serve_requests_total").value(
+            scheduler="continuous") == len(reqs)
+
+    def test_wave_requests_reconstruct_complete_waterfalls(
+            self, model_and_params, tmp_path):
+        from repro.telemetry import check_events
+        model, params = model_and_params
+        reqs = _reqs([8, 8, 8], [4, 2, 6])
+        eng = Engine(model, params,
+                     ServeConfig(slots=4, cache_len=CACHE_LEN))
+        events, _ = self._run_traced(tmp_path, eng, reqs)
+        assert check_events(events) == []
+        spans = [e for e in events if e["kind"] == "span"]
+        for name in ("request", "queued", "prefill"):
+            assert sum(1 for s in spans if s["name"] == name) == len(reqs)
+
+    def test_untraced_run_emits_no_spans(self, model_and_params, tmp_path):
+        """tracer=None (the default) keeps the serve stream span-free —
+        tracing is strictly opt-in."""
+        model, params = model_and_params
+        sink = TelemetrySink(SinkConfig(directory=str(tmp_path)))
+        eng = _cont(model, params)
+        eng.sink = sink
+        eng.run(_reqs([5, 9], [3, 2]))
+        sink.flush()
+        sink.close()
+        from repro.telemetry import load_events
+        events = load_events(tmp_path)
+        assert events and all(e["kind"] == "serve" for e in events)
+        assert all("trace" not in e for e in events)

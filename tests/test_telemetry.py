@@ -297,6 +297,24 @@ def test_sink_writes_rotates_and_validates(tmp_path):
     assert [e["step"] for e in events] == list(range(1, 21))  # ordered
 
 
+def test_sink_rotation_sequence_is_monotone(tmp_path):
+    """A restarted sink resumes PAST the highest existing rotation
+    index — not at the file count — so a gap in the sequence (an index
+    deleted by log shipping) can never make it overwrite a survivor."""
+    (tmp_path / "events-00000.jsonl").write_text(
+        '{"kind": "run_meta", "schema": 1, "source": "old-run"}\n')
+    (tmp_path / "events-00002.jsonl").write_text(
+        '{"kind": "run_meta", "schema": 1, "source": "old-run"}\n')
+    sink = TelemetrySink(SinkConfig(directory=str(tmp_path)))
+    sink.emit({"kind": "run_meta", "source": "new-run"})
+    sink.flush()
+    sink.close()
+    assert (tmp_path / "events-00003.jsonl").exists()
+    # survivors untouched, whole directory still validates in order
+    assert "old-run" in (tmp_path / "events-00002.jsonl").read_text()
+    assert T.validate_dir(tmp_path) == 3
+
+
 def test_sink_rejects_malformed_events(tmp_path):
     sink = TelemetrySink(SinkConfig(directory=str(tmp_path)))
     try:
